@@ -1,0 +1,34 @@
+"""Shared benchmark helpers.  Every benchmark prints CSV rows:
+
+    name,us_per_call,derived
+
+where ``derived`` is the paper-claim-relevant figure (speedup, scaling
+efficiency, ...).  The CPU container's wall-clock speedups are *analogs* of
+the paper's cluster numbers (see DESIGN.md §8); each module's docstring names
+the paper table/figure it corresponds to."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def timeit(fn: Callable, iters: int = 5, warmup: int = 2) -> float:
+    """Median-ish wall time per call in seconds (block_until_ready-aware)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def row(name: str, seconds: float, derived: str = "") -> str:
+    line = f"{name},{seconds * 1e6:.1f},{derived}"
+    print(line, flush=True)
+    return line

@@ -1,0 +1,71 @@
+"""Paper §4.2: "an I/O performance gain factor of more than 5X by utilizing
+Alluxio as parameter servers" (vs HDFS-backed parameters).
+
+One synchronization round = workers pull params + push updates + reducer
+publishes.  Memory-tier PS vs the same PS forced through the
+latency-modelled persistent store.
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.core.param_server import TieredParamServer
+from repro.core.tiered_store import TieredStore
+
+PERSIST_LATENCY_S = 0.002
+
+
+def _sync_round(ps: TieredParamServer, params, workers: int) -> object:
+    got, v = ps.pull()
+    for w in range(workers):
+        grads = {k: np.ones_like(x) * 0.01 for k, x in got.items()}
+        ps.push_update(grads, f"w{w}", v)
+    ups = ps.gather_updates([f"w{w}" for w in range(workers)], v)
+    new = ps.apply_mean_update(got, ups, lr=0.1)
+    ps.publish(new)
+    return new
+
+
+def run() -> None:
+    params = {
+        "emb": np.random.randn(512, 64).astype(np.float32),
+        "w1": np.random.randn(64, 256).astype(np.float32),
+        "w2": np.random.randn(256, 64).astype(np.float32),
+    }
+    workers, rounds = 4, 5
+
+    def bench(mem_first: bool) -> float:
+        """mem_first: the co-located Alluxio deployment (everything hits the
+        MEM tier; durability is async).  Otherwise every block lands on and
+        is read from the latency-modelled HDD tier (the HDFS-backed PS) —
+        same data, same rounds, only the tier changes."""
+        with tempfile.TemporaryDirectory() as tmp:
+            ts = TieredStore(
+                tmp,
+                mem_capacity=(1 << 30) if mem_first else 1,
+                ssd_capacity=(8 << 30) if mem_first else 1,
+                hdd_capacity=8 << 30,  # big enough either way: no data loss
+                hdd_latency_s=0.0 if mem_first else PERSIST_LATENCY_S,
+                persist_latency_s=PERSIST_LATENCY_S,
+                async_persist=True,
+                promote_on_read=mem_first,
+            )
+            ps = TieredParamServer(ts, "bench")
+            ps.publish(params)
+            t0 = time.perf_counter()
+            for _ in range(rounds):
+                _sync_round(ps, params, workers)
+            dt = (time.perf_counter() - t0) / rounds
+            ts.flush()
+            ts.close()
+            return dt
+
+    mem_s = bench(mem_first=True)
+    remote_s = bench(mem_first=False)
+    row("ps_mem_round", mem_s, f"{workers}workers")
+    row("ps_remote_round", remote_s, f"ps_speedup={remote_s / mem_s:.1f}x(paper:5x)")

@@ -1,0 +1,52 @@
+"""Benchmark harness (deliverable d): one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV; the derived column carries the
+paper-claim analog (speedups / efficiencies) next to the paper's number.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    ("pipeline_fusion", "§2.1 Spark-vs-MapReduce 5x (in-memory pipeline)"),
+    ("tiered_store_bench", "§2.2 Alluxio-vs-HDFS 30x (tiered cache)"),
+    ("param_server_bench", "§4.2 Alluxio parameter server 5x I/O"),
+    ("scheduler_overhead", "§2.3 LXC container overhead <5%"),
+    ("sim_scaling", "Fig.6 simulation scalability 2k->10k cores"),
+    ("heterogeneous", "§2.3/§4.3 GPU offload 10-20x conv, 15x train"),
+    ("train_pipeline", "Fig.7 unified training pipeline ~2x"),
+    ("train_scaling", "Fig.9 near-linear distributed training scaling"),
+    ("mapgen_bench", "§5.2 fused map job 5x; ICP offload 30x"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name, claim in MODULES:
+        if args.only and args.only != name:
+            continue
+        print(f"# {name}: {claim}", flush=True)
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            mod.run()
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"# FAILED: {failed}")
+        sys.exit(1)
+    print("# all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Paper Fig. 9 + §4.2: distributed training — "training latency per pass
+dropped almost linearly" with GPU count, "linear performance scaling" with
+the Alluxio PS.
+
+Two measurements:
+  1. measured: the real pjit train step on this box at batch B and B/2 —
+     per-sample time ratio shows the data-parallel work split.
+  2. derived: per-device step time on the production mesh from the dry-run
+     roofline terms (compute+memory+collective), per worker count — the
+     scaling curve the 16x16 pod realizes (reads experiments/dryrun JSONs
+     when present).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+from repro.config import ParallelConfig, ShapeConfig, TrainConfig, get_arch, scale_down
+from repro.distributed.mesh import single_device_mesh
+from repro.models import model_zoo as mz
+from repro.training.train_loop import make_train_step
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def run() -> None:
+    cfg = scale_down(get_arch("qwen2-0.5b"), num_layers=4, vocab_size=256)
+    tcfg = TrainConfig(total_steps=100)
+    mesh = single_device_mesh()
+    bundle = make_train_step(cfg, tcfg, ParallelConfig(), mesh)
+    with mesh:
+        state = jax.jit(bundle.init_fn)(jax.random.PRNGKey(0))
+        step = jax.jit(bundle.train_step)
+        times = {}
+        for B in (4, 8, 16):
+            batch = mz.make_train_batch(cfg, ShapeConfig("t", 128, B, "train"), jax.random.PRNGKey(B))
+            times[B] = timeit(lambda b=batch: step(state, b), iters=3)
+            row(f"train_step_b{B}", times[B], f"us_per_seq={times[B] / B * 1e6:.0f}")
+        # near-linear work scaling: per-sample cost roughly flat
+        eff = (times[4] / 4) / (times[16] / 16)
+        row("train_scaling_measured", times[16], f"per_sample_eff={eff:.2f}(paper:linear)")
+
+    # derived curve from dry-run roofline terms (production mesh)
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*train_4k__pod1.json"))):
+        d = json.load(open(path))
+        ex = d.get("extrapolated")
+        if not ex:
+            continue
+        arch = d["arch"]
+        t_full = max(ex["t_compute"], ex["t_memory"], ex["t_collective"])
+        # data-parallel worker sweep: compute/memory shrink with workers,
+        # collective term (ring) roughly constant
+        base_w = 256
+        for w in (64, 128, 256, 512):
+            t_w = max(
+                ex["t_compute"] * base_w / w,
+                ex["t_memory"] * base_w / w,
+                ex["t_collective"],
+            )
+            eff = (t_full * base_w) / (t_w * w)
+            row(f"train_derived_{arch}_w{w}", t_w, f"efficiency={eff:.2f}")

@@ -1,0 +1,46 @@
+"""HD map generation example (paper §5 service).
+
+Synthetic drive logs -> EKF pose propagation (odometry+IMU) with GPS
+correction -> ICP scan refinement (Pallas kernel) -> 5cm-class grid map with
+semantic labels, the whole job fused into one program (the paper's one-Spark-
+job 5x path).
+
+    PYTHONPATH=src python examples/build_hd_map.py
+"""
+
+import numpy as np
+
+from repro.data.synthetic import drive_log_dataset
+from repro.mapgen.gridmap import LABEL_LANE_MARK, LABEL_OBSTACLE, LABEL_ROAD
+from repro.mapgen.pipeline import MapGenConfig, MapGenPipeline
+
+
+def main():
+    logs = drive_log_dataset(num_partitions=6, frames_per_partition=12, lidar_points=384)
+    pipe = MapGenPipeline(MapGenConfig())
+
+    grid_map, out = pipe.run(logs, fused=True)
+    labels = np.asarray(grid_map.labels)
+    counts = np.asarray(grid_map.counts)
+
+    print(f"SLAM mean position error: {pipe.pose_error(out):.3f} m")
+    print(f"ICP refinement residual:  {float(np.mean(np.asarray(out['icp_err']))):.4f}")
+    print(f"grid: {counts.shape[0]}x{counts.shape[1]} cells, "
+          f"{int((counts > 0).sum())} occupied")
+    print(f"labels: road={int((labels == LABEL_ROAD).sum())} "
+          f"lane_marks={int((labels == LABEL_LANE_MARK).sum())} "
+          f"obstacles={int((labels == LABEL_OBSTACLE).sum())}")
+
+    # coarse ASCII rendering of the reflectance map
+    refl = np.asarray(grid_map.reflectance)
+    step = max(1, refl.shape[0] // 40)
+    chars = " .:-=+*#"
+    for row in refl[::step * 2]:
+        line = "".join(
+            chars[min(int(v * (len(chars) - 1)), len(chars) - 1)] for v in row[::step]
+        )
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Distributed replay simulation example (paper §3 service).
+
+Replays synthetic drive logs (BinPipe-coded sensor records) through the
+perception model across data-parallel partitions, then A/B-tests a candidate
+model against the deployed one — the paper's new-algorithm qualification
+flow, including a lost-partition lineage recovery.
+
+    PYTHONPATH=src python examples/replay_simulation.py
+"""
+
+import tempfile
+
+import jax
+
+from repro.core.tiered_store import TieredStore
+from repro.data.synthetic import drive_log_dataset
+from repro.sim.replay import PerceptionModel, ReplaySimulator
+
+
+def main():
+    with tempfile.TemporaryDirectory() as tmp:
+        store = TieredStore(tmp, mem_capacity=256 << 20)
+        logs = drive_log_dataset(num_partitions=8, frames_per_partition=16,
+                                 lidar_points=256).cache(store)
+
+        model = PerceptionModel(channels=(16, 32))
+        deployed = model.init(jax.random.PRNGKey(0))
+        sim = ReplaySimulator(model, deployed)
+
+        report = sim.simulate(logs)
+        print(f"replayed {report.frames} frames over {report.partitions} partitions "
+              f"in {report.wall_time_s:.2f}s  mean_score={report.mean_score:.3f}")
+
+        # a node dies: the partition recomputes from lineage, job continues
+        logs.lose_partition(3)
+        report2 = sim.simulate(logs)
+        assert report2.frames == report.frames
+        print(f"after partition loss: {report2.frames} frames, "
+              f"lineage recoveries={logs.recompute_count}")
+
+        # qualify a new algorithm build before road testing
+        candidate = model.init(jax.random.PRNGKey(7))
+        ab = sim.ab_test(logs, candidate)
+        print(f"A/B: {ab.decision_flips}/{ab.frames} decision flips "
+              f"(flip_rate={ab.flip_rate:.2%}, mean_abs_diff={ab.mean_abs_diff:.4f})")
+        verdict = "REJECT (too divergent)" if ab.flip_rate > 0.1 else "qualify for road test"
+        print("verdict:", verdict)
+        store.close()
+
+
+if __name__ == "__main__":
+    main()

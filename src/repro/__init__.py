@@ -1,0 +1,22 @@
+"""repro: a TPU-native 'autonomous driving cloud' in JAX.
+
+Reimplementation of Liu et al., 'Implementing a Cloud Platform for
+Autonomous Driving' (2017): a unified substrate (in-memory pipeline runtime,
+tiered storage, heterogeneous kernel offload) plus the three services the
+paper runs on it (distributed replay simulation, offline model training,
+HD map generation) — re-derived for TPU pods with jit/pjit/shard_map and
+Pallas kernels.
+"""
+
+__version__ = "0.1.0"
+
+from repro.config import (  # noqa: F401
+    MeshConfig,
+    ModelConfig,
+    MoEConfig,
+    ShapeConfig,
+    SSMConfig,
+    TrainConfig,
+    SHAPES,
+    shape_applicable,
+)

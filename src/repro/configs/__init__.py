@@ -1,0 +1,29 @@
+"""Assigned architecture configs. Importing this package populates ARCH_REGISTRY."""
+
+from repro.configs import (  # noqa: F401
+    mamba2_130m,
+    olmoe_1b_7b,
+    phi3_medium_14b,
+    qwen2_0_5b,
+    qwen2_moe_a2_7b,
+    qwen2_vl_72b,
+    qwen3_4b,
+    seamless_m4t_medium,
+    stablelm_1_6b,
+    zamba2_2_7b,
+)
+
+from repro.config import ARCH_REGISTRY, get_arch, list_archs  # noqa: F401
+
+ASSIGNED_ARCHS = [
+    "phi3-medium-14b",
+    "qwen3-4b",
+    "stablelm-1.6b",
+    "qwen2-0.5b",
+    "qwen2-vl-72b",
+    "qwen2-moe-a2.7b",
+    "olmoe-1b-7b",
+    "seamless-m4t-medium",
+    "zamba2-2.7b",
+    "mamba2-130m",
+]

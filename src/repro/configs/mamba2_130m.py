@@ -1,0 +1,31 @@
+"""mamba2-130m [ssm] — 24L d_model=768 (attention-free) vocab=50280,
+ssm_state=128 — SSD (state-space duality).  [arXiv:2405.21060]
+"""
+
+from repro.config import ModelConfig, SSMConfig, register_arch
+
+CONFIG = register_arch(
+    ModelConfig(
+        name="mamba2-130m",
+        family="ssm",
+        num_layers=24,
+        d_model=768,
+        num_heads=24,  # d_inner(1536) / head_dim(64)
+        num_kv_heads=24,
+        head_dim=64,
+        d_ff=0,
+        vocab_size=50_280,
+        norm="rmsnorm",
+        rope_mode="none",
+        tie_embeddings=True,
+        ssm=SSMConfig(
+            state_dim=128,
+            conv_width=4,
+            expand=2,
+            head_dim=64,
+            n_groups=1,
+            chunk_size=256,
+        ),
+        max_seq_len=1_048_576,
+    )
+)

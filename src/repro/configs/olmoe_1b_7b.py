@@ -1,0 +1,34 @@
+"""olmoe-1b-7b [moe] — 16L d_model=2048 16H (kv=16) expert d_ff=1024
+vocab=50304, MoE 64 routed top-8, qk-norm.  [arXiv:2409.02060]
+
+64 % 16 == 0 -> expert-parallel over the 'model' mesh axis.
+"""
+
+from repro.config import ModelConfig, MoEConfig, register_arch
+
+CONFIG = register_arch(
+    ModelConfig(
+        name="olmoe-1b-7b",
+        family="moe",
+        num_layers=16,
+        d_model=2048,
+        num_heads=16,
+        num_kv_heads=16,
+        head_dim=128,
+        d_ff=1024,
+        vocab_size=50_304,
+        norm="rmsnorm",
+        act="silu",
+        glu=True,
+        qk_norm=True,
+        rope_theta=10_000.0,
+        moe=MoEConfig(
+            num_experts=64,
+            top_k=8,
+            expert_d_ff=1024,
+            capacity_factor=1.25,
+            shard_mode="expert",
+        ),
+        max_seq_len=4_096,
+    )
+)

@@ -1,0 +1,24 @@
+"""phi3-medium-14b [dense] — 40L d_model=5120 40H (GQA kv=10) d_ff=17920
+vocab=100352 — RoPE SwiGLU GQA.  [arXiv:2404.14219]
+"""
+
+from repro.config import ModelConfig, register_arch
+
+CONFIG = register_arch(
+    ModelConfig(
+        name="phi3-medium-14b",
+        family="dense",
+        num_layers=40,
+        d_model=5120,
+        num_heads=40,
+        num_kv_heads=10,
+        head_dim=128,
+        d_ff=17920,
+        vocab_size=100352,
+        norm="rmsnorm",
+        act="silu",
+        glu=True,
+        rope_theta=10_000.0,
+        max_seq_len=131_072,
+    )
+)

@@ -1,0 +1,26 @@
+"""qwen2-0.5b [dense] — 24L d_model=896 14H (GQA kv=2) d_ff=4864 vocab=151936
+— GQA, QKV bias, tied embeddings.  [arXiv:2407.10671]
+"""
+
+from repro.config import ModelConfig, register_arch
+
+CONFIG = register_arch(
+    ModelConfig(
+        name="qwen2-0.5b",
+        family="dense",
+        num_layers=24,
+        d_model=896,
+        num_heads=14,
+        num_kv_heads=2,
+        head_dim=64,
+        d_ff=4864,
+        vocab_size=151_936,
+        norm="rmsnorm",
+        act="silu",
+        glu=True,
+        qkv_bias=True,
+        tie_embeddings=True,
+        rope_theta=1_000_000.0,
+        max_seq_len=131_072,
+    )
+)

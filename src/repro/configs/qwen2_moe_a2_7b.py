@@ -1,0 +1,38 @@
+"""qwen2-moe-a2.7b [moe] — 24L d_model=2048 16H (kv=16) expert d_ff=1408
+vocab=151936, MoE 60 routed top-4 + 4 shared.  [hf:Qwen/Qwen1.5-MoE-A2.7B]
+
+60 % 16 != 0, so the expert axis cannot shard evenly over the 16-way model
+axis: expert weights are FFN-sharded instead (shard_mode='ffn'); see
+DESIGN.md §5.
+"""
+
+from repro.config import ModelConfig, MoEConfig, register_arch
+
+CONFIG = register_arch(
+    ModelConfig(
+        name="qwen2-moe-a2.7b",
+        family="moe",
+        num_layers=24,
+        d_model=2048,
+        num_heads=16,
+        num_kv_heads=16,
+        head_dim=128,
+        d_ff=1408,
+        vocab_size=151_936,
+        norm="rmsnorm",
+        act="silu",
+        glu=True,
+        qkv_bias=True,
+        rope_theta=1_000_000.0,
+        moe=MoEConfig(
+            num_experts=60,
+            top_k=4,
+            expert_d_ff=1408,
+            num_shared_experts=4,
+            shared_d_ff=1408,
+            capacity_factor=1.25,
+            shard_mode="ffn",
+        ),
+        max_seq_len=32_768,
+    )
+)

@@ -1,0 +1,34 @@
+"""qwen2-vl-72b [vlm] — 80L d_model=8192 64H (GQA kv=8) d_ff=29568
+vocab=152064 — M-RoPE, dynamic resolution.  [arXiv:2409.12191]
+
+The vision tower is a STUB per the brief: ``input_specs()`` supplies
+pre-computed patch embeddings (B, frontend_tokens, frontend_dim) which the
+backbone projects and prepends to the text sequence; M-RoPE position ids
+(3, B, S) arrive as inputs.
+"""
+
+from repro.config import ModelConfig, register_arch
+
+CONFIG = register_arch(
+    ModelConfig(
+        name="qwen2-vl-72b",
+        family="vlm",
+        num_layers=80,
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=29568,
+        vocab_size=152_064,
+        norm="rmsnorm",
+        act="silu",
+        glu=True,
+        qkv_bias=True,
+        rope_mode="mrope",
+        rope_theta=1_000_000.0,
+        frontend="vision_patches",
+        frontend_tokens=256,
+        frontend_dim=1280,
+        max_seq_len=131_072,
+    )
+)

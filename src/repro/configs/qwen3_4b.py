@@ -1,0 +1,26 @@
+"""qwen3-4b [dense] — 36L d_model=2560 32H (GQA kv=8) d_ff=9728 vocab=151936
+— qk_norm, GQA, explicit head_dim=128, tied embeddings.  [hf:Qwen/Qwen3-4B]
+"""
+
+from repro.config import ModelConfig, register_arch
+
+CONFIG = register_arch(
+    ModelConfig(
+        name="qwen3-4b",
+        family="dense",
+        num_layers=36,
+        d_model=2560,
+        num_heads=32,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=9728,
+        vocab_size=151_936,
+        norm="rmsnorm",
+        act="silu",
+        glu=True,
+        qk_norm=True,
+        rope_theta=1_000_000.0,
+        tie_embeddings=True,
+        max_seq_len=131_072,
+    )
+)

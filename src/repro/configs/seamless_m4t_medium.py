@@ -1,0 +1,36 @@
+"""seamless-m4t-medium [audio] — enc-dec, 12L encoder + 12L decoder,
+d_model=1024 16H (kv=16) d_ff=4096 vocab=256206.  [arXiv:2308.11596]
+
+The speech frontend (fbank conv stem / conformer feature extractor) is a STUB
+per the brief: ``input_specs()`` supplies pre-computed frame embeddings for
+the encoder.  Shapes interpretation for enc-dec (documented in DESIGN.md):
+train/prefill split seq_len 50/50 between encoder source frames and decoder
+target tokens; decode shapes put the full seq_len KV cache on the decoder
+with a fixed 4096-frame encoded source.
+"""
+
+from repro.config import ModelConfig, register_arch
+
+CONFIG = register_arch(
+    ModelConfig(
+        name="seamless-m4t-medium",
+        family="encdec",
+        num_layers=24,
+        encoder_layers=12,
+        decoder_layers=12,
+        d_model=1024,
+        num_heads=16,
+        num_kv_heads=16,
+        head_dim=64,
+        d_ff=4096,
+        vocab_size=256_206,
+        norm="layernorm",
+        act="gelu",
+        glu=False,
+        mlp_bias=True,
+        rope_mode="none",  # learned absolute positions (enc-dec family)
+        frontend="audio_frames",
+        frontend_dim=1024,
+        max_seq_len=32_768,
+    )
+)

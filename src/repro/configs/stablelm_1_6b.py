@@ -1,0 +1,26 @@
+"""stablelm-1.6b [dense] — 24L d_model=2048 32H (kv=32) d_ff=5632 vocab=100352
+— LayerNorm, partial rotary (25%), qkv bias.  [hf:stabilityai/stablelm-2-1_6b]
+"""
+
+from repro.config import ModelConfig, register_arch
+
+CONFIG = register_arch(
+    ModelConfig(
+        name="stablelm-1.6b",
+        family="dense",
+        num_layers=24,
+        d_model=2048,
+        num_heads=32,
+        num_kv_heads=32,
+        head_dim=64,
+        d_ff=5632,
+        vocab_size=100_352,
+        norm="layernorm",
+        act="silu",
+        glu=True,
+        rotary_pct=0.25,
+        qkv_bias=True,
+        rope_theta=10_000.0,
+        max_seq_len=4_096,
+    )
+)

@@ -1,0 +1,34 @@
+"""zamba2-2.7b [hybrid] — 54L Mamba2 backbone, d_model=2560, shared attention
+block (32H kv=32, d_ff=10240) every 6 layers with per-site LoRA,
+vocab=32000, ssm_state=64.  [arXiv:2411.15242]
+"""
+
+from repro.config import ModelConfig, SSMConfig, register_arch
+
+CONFIG = register_arch(
+    ModelConfig(
+        name="zamba2-2.7b",
+        family="hybrid",
+        num_layers=54,
+        d_model=2560,
+        num_heads=32,
+        num_kv_heads=32,
+        head_dim=80,
+        d_ff=10240,
+        vocab_size=32_000,
+        norm="rmsnorm",
+        act="gelu",
+        glu=True,
+        ssm=SSMConfig(
+            state_dim=64,
+            conv_width=4,
+            expand=2,
+            head_dim=64,
+            n_groups=1,
+            chunk_size=256,
+        ),
+        hybrid_attn_every=6,
+        hybrid_lora_rank=128,
+        max_seq_len=4_096,
+    )
+)

@@ -1,0 +1,95 @@
+"""Parameter server on the tiered store (paper §4.2) + its TPU-native
+replacement.
+
+The paper stored model parameters in Alluxio so every Paddle trainer could
+pull/push at memory speed (5x over HDFS-backed parameters).  Two embodiments
+here:
+
+* :class:`TieredParamServer` — a literal PS: versioned parameter pytrees
+  stored in the :class:`TieredStore` MEM tier with async persistence.  Used
+  by the host-side elastic/async training mode and the PS benchmark; pulls
+  hit memory, durability is asynchronous, exactly the paper's deployment.
+
+* ZeRO-1 sharded optimizer state (see ``training/optimizer.py``) — on a TPU
+  torus, the performant "parameter server" is the collective permute ring:
+  optimizer state lives sharded in the workers' HBM (memory tier!) and the
+  per-step reduce-scatter/all-gather is the pull/push.  DESIGN.md §2 records
+  this assumption change.
+"""
+
+from __future__ import annotations
+
+import io
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.core.tiered_store import TieredStore
+
+
+def _tree_to_bytes(tree: Any) -> bytes:
+    leaves, treedef = jax.tree.flatten(tree)
+    buf = io.BytesIO()
+    np.savez(buf, **{f"a{i}": np.asarray(x) for i, x in enumerate(leaves)})
+    return buf.getvalue()
+
+
+def _tree_from_bytes(data: bytes, like: Any) -> Any:
+    _, treedef = jax.tree.flatten(like)
+    loaded = np.load(io.BytesIO(data))
+    return jax.tree.unflatten(treedef, [loaded[f"a{i}"] for i in range(len(loaded.files))])
+
+
+class TieredParamServer:
+    """Versioned pytree store with optimistic concurrency for async workers."""
+
+    def __init__(self, store: TieredStore, name: str = "ps"):
+        self.store = store
+        self.name = name
+        self._lock = threading.Lock()
+        self.version = 0
+        self._template: Any = None
+
+    # ------------------------------------------------------------------
+    def publish(self, params: Any) -> int:
+        """Push a new parameter version (driver or reducer role)."""
+        with self._lock:
+            self.version += 1
+            self._template = jax.tree.map(lambda x: np.asarray(x), params)
+            self.store.put(f"{self.name}_v{self.version}", _tree_to_bytes(params))
+            self.store.put(f"{self.name}_latest", str(self.version).encode())
+            return self.version
+
+    def pull(self) -> tuple[Any, int]:
+        """Fetch the latest parameters (worker role)."""
+        with self._lock:
+            raw = self.store.get(f"{self.name}_latest")
+            if raw is None:
+                raise KeyError("no published parameters")
+            v = int(raw.decode())
+            data = self.store.get(f"{self.name}_v{v}")
+            return _tree_from_bytes(data, self._template), v
+
+    # ------------------------------------------------------------------
+    def push_update(self, grads: Any, worker: str, version: int) -> None:
+        """Workers push gradient contributions tagged with the version they
+        computed against (staleness is visible to the reducer)."""
+        key = f"{self.name}_grad_{worker}_v{version}"
+        self.store.put(key, _tree_to_bytes(grads), persist=False)
+
+    def gather_updates(self, workers: list[str], version: int) -> list[Any]:
+        out = []
+        for w in workers:
+            data = self.store.get(f"{self.name}_grad_{w}_v{version}")
+            if data is not None:
+                out.append(_tree_from_bytes(data, self._template))
+        return out
+
+    def apply_mean_update(self, params: Any, updates: list[Any], lr: float) -> Any:
+        """SGD-style reducer: params -= lr * mean(updates)."""
+        if not updates:
+            return params
+        mean = jax.tree.map(lambda *gs: np.mean(np.stack(gs), axis=0), *updates)
+        return jax.tree.map(lambda p, g: np.asarray(p) - lr * g, params, mean)

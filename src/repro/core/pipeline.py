@@ -1,0 +1,106 @@
+"""Stage/Pipeline runtime — the Spark-vs-MapReduce story (paper §2.1, §4.1).
+
+A *job* is a sequence of named stages, each a JAX-traceable function from an
+array pytree to an array pytree.  Two execution modes:
+
+* ``FUSED``  — the whole pipeline is one jitted program; intermediates stay
+  on device (HBM) exactly like Spark keeps RDDs in memory between stages.
+* ``STAGED`` — each stage is jitted separately and every boundary round-trips
+  through host memory and (optionally) a store write+read, which is the
+  MapReduce/HDFS dataflow the paper measured 5x *against*.
+
+The mapgen and training services build their pipelines on this runtime; the
+fused/staged benchmark reproduces the paper's Figure-7/§5.2 comparisons.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import io
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.core.tiered_store import TieredStore
+
+
+@dataclasses.dataclass
+class Stage:
+    name: str
+    fn: Callable[[Any], Any]  # pytree -> pytree, jax-traceable
+
+
+def _to_host(tree: Any) -> Any:
+    return jax.tree.map(np.asarray, tree)
+
+
+def _store_roundtrip(store: TieredStore, key: str, tree: Any) -> Any:
+    """Serialize a pytree through the store (the 'write to HDFS' boundary)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    buf = io.BytesIO()
+    np.savez(buf, **{f"a{i}": np.asarray(x) for i, x in enumerate(leaves)})
+    store.put(key, buf.getvalue())
+    data = store.get(key)
+    loaded = np.load(io.BytesIO(data))
+    return jax.tree.unflatten(treedef, [loaded[f"a{i}"] for i in range(len(leaves))])
+
+
+class Pipeline:
+    def __init__(self, stages: list[Stage], name: str = "pipeline"):
+        if not stages:
+            raise ValueError("empty pipeline")
+        self.stages = stages
+        self.name = name
+        self._fused = None
+        self._staged: Optional[list] = None
+
+    # ------------------------------------------------------------------
+    def _compose(self):
+        def run(x):
+            for s in self.stages:
+                x = s.fn(x)
+            return x
+
+        return run
+
+    def run_fused(self, inputs: Any) -> Any:
+        """One jit for the whole job; intermediates never leave the device."""
+        if self._fused is None:
+            self._fused = jax.jit(self._compose())
+        return self._fused(inputs)
+
+    def run_staged(self, inputs: Any, store: Optional[TieredStore] = None) -> Any:
+        """Per-stage jit with host (and optional store) round-trips between
+        stages — the tailored-per-application baseline."""
+        if self._staged is None:
+            self._staged = [jax.jit(s.fn) for s in self.stages]
+        x = inputs
+        for i, (stage, jitted) in enumerate(zip(self.stages, self._staged)):
+            x = jitted(x)
+            x = _to_host(jax.block_until_ready(x))
+            if store is not None and i < len(self.stages) - 1:
+                x = _store_roundtrip(store, f"{self.name}_stage{i}", x)
+        return x
+
+    # ------------------------------------------------------------------
+    def time_modes(
+        self, inputs: Any, store: Optional[TieredStore] = None, iters: int = 3
+    ) -> dict[str, float]:
+        """Benchmark helper: seconds per run for fused vs staged execution."""
+        out = {}
+        # warm up compiles outside the timed region
+        jax.block_until_ready(self.run_fused(inputs))
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            jax.block_until_ready(self.run_fused(inputs))
+        out["fused_s"] = (time.perf_counter() - t0) / iters
+
+        self.run_staged(inputs, store)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            self.run_staged(inputs, store)
+        out["staged_s"] = (time.perf_counter() - t0) / iters
+        out["speedup"] = out["staged_s"] / max(out["fused_s"], 1e-12)
+        return out

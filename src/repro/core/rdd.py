@@ -1,0 +1,172 @@
+"""ShardedDataset — the RDD abstraction (paper §2.1).
+
+A read-only, partitioned dataset whose partitions are produced by a
+deterministic *lineage*: either a seeded generator (source datasets) or a
+transformation of a parent dataset.  Exactly Spark's fault-tolerance story:
+when a cached partition is lost (node failure), it is **recomputed from
+lineage** rather than restarting the job, and only the lost partition pays
+the recomputation cost.
+
+Partitions hold lists of BinPipe-codable records (dicts of
+str/int/float/bytes/ndarray).  ``cache()`` pins encoded partitions into a
+:class:`~repro.core.tiered_store.TieredStore`, which is the Alluxio
+co-location from §2.2.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterable, Optional
+
+import numpy as np
+
+from repro.core import binpipe
+from repro.core.tiered_store import TieredStore
+
+Record = dict[str, Any]
+
+
+@dataclasses.dataclass
+class _Lineage:
+    kind: str  # source | map | map_partitions | filter | zip
+    parents: tuple["ShardedDataset", ...]
+    fn: Optional[Callable] = None
+    desc: str = ""
+
+
+class ShardedDataset:
+    _ids = iter(range(1, 1 << 62))
+
+    def __init__(self, num_partitions: int, lineage: _Lineage, name: str = ""):
+        self.num_partitions = num_partitions
+        self.lineage = lineage
+        self.id = next(self._ids)
+        self.name = name or f"rdd{self.id}"
+        self._cache: Optional[TieredStore] = None
+        self._materialized: dict[int, list[Record]] = {}
+        self._lost: set[int] = set()
+        self.recompute_count = 0  # lineage recoveries performed (observability)
+
+    # ------------------------------------------------------------------
+    # constructors
+    @staticmethod
+    def from_generator(
+        gen: Callable[[int], Iterable[Record]], num_partitions: int, name: str = ""
+    ) -> "ShardedDataset":
+        """`gen(partition_index)` must be deterministic — it IS the lineage root."""
+        return ShardedDataset(
+            num_partitions, _Lineage("source", (), gen, "source"), name=name
+        )
+
+    @staticmethod
+    def from_records(records: list[Record], num_partitions: int, name: str = "") -> "ShardedDataset":
+        chunks = np.array_split(np.arange(len(records)), num_partitions)
+
+        def gen(i: int):
+            return [records[j] for j in chunks[i]]
+
+        return ShardedDataset.from_generator(gen, num_partitions, name=name)
+
+    # ------------------------------------------------------------------
+    # transformations (lazy — record lineage only)
+    def map(self, fn: Callable[[Record], Record], desc: str = "map") -> "ShardedDataset":
+        return ShardedDataset(self.num_partitions, _Lineage("map", (self,), fn, desc))
+
+    def map_partitions(
+        self, fn: Callable[[list[Record]], list[Record]], desc: str = "map_partitions"
+    ) -> "ShardedDataset":
+        return ShardedDataset(self.num_partitions, _Lineage("map_partitions", (self,), fn, desc))
+
+    def filter(self, pred: Callable[[Record], bool], desc: str = "filter") -> "ShardedDataset":
+        return ShardedDataset(self.num_partitions, _Lineage("filter", (self,), pred, desc))
+
+    def zip_partitions(
+        self, other: "ShardedDataset", fn: Callable[[list[Record], list[Record]], list[Record]]
+    ) -> "ShardedDataset":
+        if other.num_partitions != self.num_partitions:
+            raise ValueError("zip requires equal partitioning")
+        return ShardedDataset(self.num_partitions, _Lineage("zip", (self, other), fn, "zip"))
+
+    # ------------------------------------------------------------------
+    # execution
+    def _cache_key(self, idx: int) -> str:
+        return f"rdd{self.id}_part{idx}"
+
+    def compute_partition(self, idx: int) -> list[Record]:
+        """Materialize partition `idx`, via cache when available, else lineage."""
+        if idx >= self.num_partitions:
+            raise IndexError(idx)
+        if idx in self._lost:
+            # simulate a failed node: local copy is gone; fall through to
+            # cache/lineage below, counting the recovery
+            self._materialized.pop(idx, None)
+            self._lost.discard(idx)
+            self.recompute_count += 1
+        if idx in self._materialized:
+            return self._materialized[idx]
+        if self._cache is not None:
+            blob = self._cache.get(self._cache_key(idx))
+            if blob is not None:
+                recs = binpipe.decode_partition(blob)
+                self._materialized[idx] = recs
+                return recs
+        lg = self.lineage
+        if lg.kind == "source":
+            recs = list(lg.fn(idx))
+        elif lg.kind == "map":
+            recs = [lg.fn(r) for r in lg.parents[0].compute_partition(idx)]
+        elif lg.kind == "map_partitions":
+            recs = list(lg.fn(lg.parents[0].compute_partition(idx)))
+        elif lg.kind == "filter":
+            recs = [r for r in lg.parents[0].compute_partition(idx) if lg.fn(r)]
+        elif lg.kind == "zip":
+            recs = list(
+                lg.fn(
+                    lg.parents[0].compute_partition(idx),
+                    lg.parents[1].compute_partition(idx),
+                )
+            )
+        else:  # pragma: no cover
+            raise ValueError(lg.kind)
+        self._materialized[idx] = recs
+        if self._cache is not None:
+            self._cache.put(self._cache_key(idx), binpipe.encode_partition(recs))
+        return recs
+
+    def cache(self, store: TieredStore) -> "ShardedDataset":
+        self._cache = store
+        return self
+
+    def collect(self) -> list[Record]:
+        out: list[Record] = []
+        for i in range(self.num_partitions):
+            out.extend(self.compute_partition(i))
+        return out
+
+    def count(self) -> int:
+        return sum(len(self.compute_partition(i)) for i in range(self.num_partitions))
+
+    def aggregate(self, zero, seq_op, comb_op):
+        """Spark-style treeAggregate over partitions (driver-side combine)."""
+        acc = zero
+        for i in range(self.num_partitions):
+            part_acc = zero
+            for r in self.compute_partition(i):
+                part_acc = seq_op(part_acc, r)
+            acc = comb_op(acc, part_acc)
+        return acc
+
+    # ------------------------------------------------------------------
+    # failure injection / recovery (tests + scheduler integration)
+    def lose_partition(self, idx: int) -> None:
+        """Simulate the node holding partition `idx` dying."""
+        self._lost.add(idx)
+        if self._cache is not None:
+            self._cache.delete(self._cache_key(idx))
+
+    def lineage_depth(self) -> int:
+        lg, d = self.lineage, 1
+        while lg.parents:
+            d += 1
+            lg = lg.parents[0].lineage
+        return d

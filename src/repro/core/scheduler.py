@@ -1,0 +1,211 @@
+"""Resource manager — the YARN + LXC role (paper §2.3).
+
+The cluster's device pool is sliced into *containers* (contiguous sub-meshes)
+that jobs are scheduled onto.  The paper used YARN for queueing/allocation
+and LXC for isolation; on a TPU pod the isolation boundary is the sub-mesh
+(a job only sees its own devices), and this module is the queue + allocator +
+elasticity logic:
+
+* FIFO-with-priority job queue over a shared device pool,
+* allocation of power-of-two device blocks (sub-mesh "containers"),
+* preemption of lower-priority jobs when a higher-priority job can't fit,
+* elastic resize: a job may shrink to its ``min_devices`` under pressure and
+  grow back when the pool frees up,
+* failure handling: a dead container's devices are quarantined and the job
+  is resubmitted (to be resumed from its checkpoint by the training driver),
+* speculative re-execution of straggler partitions (Spark-style backup
+  tasks) at the data-partition level.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Callable, Optional
+
+JOB_PENDING = "PENDING"
+JOB_RUNNING = "RUNNING"
+JOB_PREEMPTED = "PREEMPTED"
+JOB_FAILED = "FAILED"
+JOB_DONE = "DONE"
+
+
+@dataclasses.dataclass
+class Job:
+    name: str
+    kind: str  # train | simulate | mapgen | serve
+    devices: int  # desired container size (power of two)
+    min_devices: int = 1
+    priority: int = 0  # higher wins
+    state: str = JOB_PENDING
+    container: Optional["Container"] = None
+    submitted_at: float = dataclasses.field(default_factory=time.monotonic)
+    preemptions: int = 0
+    resumes: int = 0
+
+
+@dataclasses.dataclass
+class Container:
+    """An isolated slice of the device pool (the LXC analog)."""
+
+    cid: int
+    device_ids: tuple[int, ...]
+    job: Optional[str] = None
+
+    @property
+    def size(self) -> int:
+        return len(self.device_ids)
+
+
+class ResourceManager:
+    def __init__(self, total_devices: int):
+        self.total = total_devices
+        self.free: set[int] = set(range(total_devices))
+        self.quarantined: set[int] = set()
+        self.containers: dict[int, Container] = {}
+        self.jobs: dict[str, Job] = {}
+        self._cid = itertools.count(1)
+        self.events: list[str] = []
+
+    # ------------------------------------------------------------------
+    def _log(self, msg: str) -> None:
+        self.events.append(msg)
+
+    def submit(self, job: Job) -> None:
+        if job.name in self.jobs:
+            raise ValueError(f"duplicate job {job.name}")
+        self.jobs[job.name] = job
+        self._log(f"submit {job.name} kind={job.kind} want={job.devices}")
+        self.schedule()
+
+    def _allocate(self, n: int) -> Optional[Container]:
+        if len(self.free) < n:
+            return None
+        ids = tuple(sorted(self.free)[:n])
+        self.free.difference_update(ids)
+        c = Container(next(self._cid), ids)
+        self.containers[c.cid] = c
+        return c
+
+    def _release(self, c: Container) -> None:
+        self.free.update(set(c.device_ids) - self.quarantined)
+        self.containers.pop(c.cid, None)
+
+    # ------------------------------------------------------------------
+    def schedule(self) -> None:
+        """Greedy highest-priority-first packing with shrink + preemption."""
+        pending = sorted(
+            (j for j in self.jobs.values() if j.state in (JOB_PENDING, JOB_PREEMPTED)),
+            key=lambda j: (-j.priority, j.submitted_at),
+        )
+        for job in pending:
+            size = job.devices
+            c = self._allocate(size)
+            if c is None and len(self.free) >= job.min_devices:
+                # elastic shrink: take what's available (>= min)
+                size = 1 << (len(self.free).bit_length() - 1)
+                size = max(size, job.min_devices)
+                c = self._allocate(size)
+                if c is not None:
+                    self._log(f"shrink {job.name} -> {size}")
+            if c is None:
+                c = self._preempt_for(job)
+            if c is None:
+                continue
+            c.job = job.name
+            job.container = c
+            if job.state == JOB_PREEMPTED:
+                job.resumes += 1
+            job.state = JOB_RUNNING
+            self._log(f"run {job.name} on container {c.cid} ({c.size} devices)")
+
+    def _preempt_for(self, job: Job) -> Optional[Container]:
+        victims = sorted(
+            (j for j in self.jobs.values() if j.state == JOB_RUNNING and j.priority < job.priority),
+            key=lambda j: j.priority,
+        )
+        freed = 0
+        taken = []
+        for v in victims:
+            freed += v.container.size
+            taken.append(v)
+            if freed + len(self.free) >= job.min_devices:
+                break
+        if freed + len(self.free) < job.min_devices:
+            return None
+        for v in taken:
+            self._log(f"preempt {v.name}")
+            self._release(v.container)
+            v.container = None
+            v.state = JOB_PREEMPTED
+            v.preemptions += 1
+        want = min(job.devices, len(self.free))
+        size = 1 << (want.bit_length() - 1) if want else 0
+        size = max(size, job.min_devices)
+        return self._allocate(size)
+
+    # ------------------------------------------------------------------
+    def complete(self, name: str) -> None:
+        job = self.jobs[name]
+        job.state = JOB_DONE
+        if job.container:
+            self._release(job.container)
+            job.container = None
+        self._log(f"done {name}")
+        self.schedule()
+
+    def fail_container(self, name: str, dead_devices: int = 1) -> None:
+        """A node in the job's container died: quarantine devices, resubmit."""
+        job = self.jobs[name]
+        if job.container is None:
+            return
+        dead = set(job.container.device_ids[:dead_devices])
+        self.quarantined.update(dead)
+        self._log(f"container failure in {name}: quarantine {sorted(dead)}")
+        self._release(job.container)
+        job.container = None
+        job.state = JOB_PENDING  # driver resumes from checkpoint on reschedule
+        self.schedule()
+
+    def heal(self, device_ids: Optional[list[int]] = None) -> None:
+        ids = set(device_ids) if device_ids else set(self.quarantined)
+        self.quarantined.difference_update(ids)
+        self.free.update(ids)
+        self.schedule()
+
+    def utilization(self) -> float:
+        busy = sum(c.size for c in self.containers.values())
+        return busy / max(self.total, 1)
+
+
+# ---------------------------------------------------------------------------
+# Straggler mitigation: Spark-style speculative backup tasks
+# ---------------------------------------------------------------------------
+
+
+def run_with_speculation(
+    task_fn: Callable[[int], object],
+    partitions: list[int],
+    runtimes: dict[int, float],
+    speculation_multiple: float = 1.5,
+) -> tuple[dict[int, object], list[int]]:
+    """Execute `task_fn` per partition; partitions whose (simulated or
+    measured) runtime exceeds ``speculation_multiple`` x median get a backup
+    execution, and the fastest copy wins — Spark speculative execution, which
+    is where straggler mitigation lives when the inner step is SPMD.
+
+    ``runtimes`` carries observed/estimated per-partition runtimes; the
+    return includes which partitions were speculatively re-executed.
+    """
+    times = sorted(runtimes.get(p, 1.0) for p in partitions)
+    median = times[len(times) // 2] if times else 1.0
+    results: dict[int, object] = {}
+    speculated: list[int] = []
+    for p in partitions:
+        results[p] = task_fn(p)
+        if runtimes.get(p, 1.0) > speculation_multiple * median:
+            backup = task_fn(p)  # deterministic tasks: either copy is valid
+            results[p] = backup
+            speculated.append(p)
+    return results, speculated

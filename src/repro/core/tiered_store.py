@@ -1,0 +1,289 @@
+"""Tiered in-memory-first storage (the Alluxio role, paper §2.2).
+
+Tiers mirror Alluxio's MEM / SSD / HDD hierarchy with a persistent
+"remote" backing store underneath:
+
+    MEM     — python dict (memory-speed)
+    SSD     — local directory (fast disk)
+    HDD     — local directory (slow disk; optional artificial latency)
+    PERSIST — directory standing in for the remote persistent store
+              (HDFS in the paper); written *asynchronously* by a
+              write-back thread, exactly the paper's co-located-cache
+              deployment: "compute nodes read from and write to Alluxio;
+              Alluxio then asynchronously persists data into the remote
+              storage nodes."
+
+Writes land in the highest tier with space; LRU blocks demote downward when
+a tier fills.  Reads search top-down and (optionally) promote hits back to
+MEM.  Per-tier hit/byte counters feed the benchmark for the paper's 30x
+cached-read claim.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import queue
+import threading
+import time
+from collections import OrderedDict
+from typing import Any, Optional
+
+from repro.core import binpipe
+
+
+@dataclasses.dataclass
+class TierStats:
+    hits: int = 0
+    misses: int = 0
+    bytes_read: int = 0
+    bytes_written: int = 0
+
+
+class _DirTier:
+    """A directory-backed tier with optional artificial read latency."""
+
+    def __init__(self, root: str, capacity: int, latency_s: float = 0.0,
+                 bandwidth_bps: float = 0.0):
+        self.root = root
+        self.capacity = capacity
+        self.latency_s = latency_s
+        self.bandwidth_bps = bandwidth_bps  # 0 = unmodelled (local disk speed)
+        self.lru: OrderedDict[str, int] = OrderedDict()  # key -> size
+        self.used = 0
+        os.makedirs(root, exist_ok=True)
+        # recover pre-existing blocks (restart path: persisted data must be
+        # visible to a fresh process)
+        for fname in sorted(os.listdir(root)):
+            try:
+                key = bytes.fromhex(fname).decode("utf-8")
+            except ValueError:
+                continue
+            size = os.path.getsize(os.path.join(root, fname))
+            self.lru[key] = size
+            self.used += size
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.root, key.encode("utf-8").hex())
+
+    def _transfer_delay(self, nbytes: int) -> None:
+        d = self.latency_s + (nbytes / self.bandwidth_bps if self.bandwidth_bps else 0.0)
+        if d:
+            time.sleep(d)
+
+    def put(self, key: str, data: bytes) -> None:
+        self._transfer_delay(len(data))
+        path = self._path(key)
+        with open(path, "wb") as f:
+            f.write(data)
+        if key in self.lru:
+            self.used -= self.lru.pop(key)
+        self.lru[key] = len(data)
+        self.used += len(data)
+
+    def get(self, key: str) -> Optional[bytes]:
+        if key not in self.lru:
+            return None
+        self._transfer_delay(self.lru[key])
+        with open(self._path(key), "rb") as f:
+            data = f.read()
+        self.lru.move_to_end(key)
+        return data
+
+    def delete(self, key: str) -> None:
+        if key in self.lru:
+            self.used -= self.lru.pop(key)
+            try:
+                os.remove(self._path(key))
+            except FileNotFoundError:
+                pass
+
+    def evict_lru(self) -> Optional[tuple[str, bytes]]:
+        if not self.lru:
+            return None
+        key, _ = next(iter(self.lru.items()))
+        data = self.get(key)
+        self.delete(key)
+        return (key, data) if data is not None else None
+
+    def keys(self):
+        return list(self.lru)
+
+
+class _MemTier:
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self.data: OrderedDict[str, bytes] = OrderedDict()
+        self.used = 0
+
+    def put(self, key: str, data: bytes) -> None:
+        if key in self.data:
+            self.used -= len(self.data.pop(key))
+        self.data[key] = data
+        self.used += len(data)
+
+    def get(self, key: str) -> Optional[bytes]:
+        if key not in self.data:
+            return None
+        self.data.move_to_end(key)
+        return self.data[key]
+
+    def delete(self, key: str) -> None:
+        if key in self.data:
+            self.used -= len(self.data.pop(key))
+
+    def evict_lru(self) -> Optional[tuple[str, bytes]]:
+        if not self.data:
+            return None
+        key, data = self.data.popitem(last=False)
+        self.used -= len(data)
+        return key, data
+
+    def keys(self):
+        return list(self.data)
+
+
+class TieredStore:
+    """Alluxio-style tiered store with async persistence."""
+
+    TIERS = ("MEM", "SSD", "HDD")
+
+    def __init__(
+        self,
+        root: str,
+        mem_capacity: int = 1 << 30,
+        ssd_capacity: int = 8 << 30,
+        hdd_capacity: int = 64 << 30,
+        hdd_latency_s: float = 0.0,
+        persist_latency_s: float = 0.0,
+        persist_bandwidth_bps: float = 0.0,
+        async_persist: bool = True,
+        promote_on_read: bool = True,
+    ):
+        self.root = root
+        self.tiers: dict[str, Any] = {
+            "MEM": _MemTier(mem_capacity),
+            "SSD": _DirTier(os.path.join(root, "ssd"), ssd_capacity),
+            "HDD": _DirTier(os.path.join(root, "hdd"), hdd_capacity, hdd_latency_s),
+        }
+        self.persist = _DirTier(
+            os.path.join(root, "persist"), 1 << 62, persist_latency_s,
+            persist_bandwidth_bps,
+        )
+        self.stats = {t: TierStats() for t in (*self.TIERS, "PERSIST")}
+        self.promote_on_read = promote_on_read
+        self._lock = threading.RLock()
+        self._persist_queue: "queue.Queue[Optional[tuple[str, bytes]]]" = queue.Queue()
+        self._async = async_persist
+        self._persist_errors: list[str] = []
+        if async_persist:
+            self._writer = threading.Thread(target=self._persist_loop, daemon=True)
+            self._writer.start()
+
+    # ------------------------------------------------------------------
+    def _persist_loop(self):
+        while True:
+            item = self._persist_queue.get()
+            if item is None:
+                self._persist_queue.task_done()
+                return
+            key, data = item
+            try:
+                self.persist.put(key, data)
+                self.stats["PERSIST"].bytes_written += len(data)
+            except Exception as e:  # pragma: no cover
+                self._persist_errors.append(f"{key}: {e}")
+            finally:
+                self._persist_queue.task_done()
+
+    def _demote(self, tier_idx: int, key: str, data: bytes) -> None:
+        """Place data in tier `tier_idx`, demoting LRU blocks as needed."""
+        if tier_idx >= len(self.TIERS):
+            return  # fell off the bottom; persist copy (already queued) remains
+        tier = self.tiers[self.TIERS[tier_idx]]
+        while tier.used + len(data) > tier.capacity and tier.keys():
+            evicted = tier.evict_lru()
+            if evicted is None:
+                break
+            self._demote(tier_idx + 1, *evicted)
+        if len(data) <= tier.capacity:
+            tier.put(key, data)
+            self.stats[self.TIERS[tier_idx]].bytes_written += len(data)
+        else:
+            self._demote(tier_idx + 1, key, data)
+
+    # ------------------------------------------------------------------
+    def put(self, key: str, data: bytes, persist: bool = True) -> None:
+        with self._lock:
+            for t in self.TIERS:  # drop stale copies in lower tiers
+                self.tiers[t].delete(key)
+            self._demote(0, key, data)
+            if persist:
+                if self._async:
+                    self._persist_queue.put((key, data))
+                else:
+                    self.persist.put(key, data)
+                    self.stats["PERSIST"].bytes_written += len(data)
+
+    def get(self, key: str) -> Optional[bytes]:
+        with self._lock:
+            for i, t in enumerate(self.TIERS):
+                data = self.tiers[t].get(key)
+                if data is not None:
+                    self.stats[t].hits += 1
+                    self.stats[t].bytes_read += len(data)
+                    if self.promote_on_read and i > 0:
+                        self.tiers[t].delete(key)
+                        self._demote(0, key, data)
+                    return data
+                self.stats[t].misses += 1
+            data = self.persist.get(key)
+            if data is not None:
+                self.stats["PERSIST"].hits += 1
+                self.stats["PERSIST"].bytes_read += len(data)
+                if self.promote_on_read:
+                    self._demote(0, key, data)
+                return data
+            self.stats["PERSIST"].misses += 1
+            return None
+
+    def delete(self, key: str) -> None:
+        with self._lock:
+            for t in self.TIERS:
+                self.tiers[t].delete(key)
+            self.persist.delete(key)
+
+    def exists(self, key: str) -> bool:
+        with self._lock:
+            return any(key in self.tiers[t].keys() for t in self.TIERS) or key in self.persist.keys()
+
+    def flush(self) -> None:
+        """Block until all queued persist writes are durable."""
+        if self._async:
+            self._persist_queue.join()
+        if self._persist_errors:
+            errs = "; ".join(self._persist_errors)
+            self._persist_errors.clear()
+            raise IOError(f"async persist failures: {errs}")
+
+    def close(self) -> None:
+        if self._async:
+            self._persist_queue.put(None)
+            self._writer.join(timeout=10)
+            self._async = False
+
+    def drop_caches(self) -> None:
+        """Simulate losing every cache tier (node restart); persist survives."""
+        with self._lock:
+            for t in self.TIERS:
+                for k in self.tiers[t].keys():
+                    self.tiers[t].delete(k)
+
+    # ------------------------------------------------------------------
+    # typed helpers (records / numpy trees via the BinPipe codec)
+    def put_record(self, key: str, record: dict, persist: bool = True) -> None:
+        self.put(key, binpipe.encode_record(record), persist=persist)
+
+    def get_record(self, key: str) -> Optional[dict]:
+        data = self.get(key)
+        return None if data is None else binpipe.decode_record(data)

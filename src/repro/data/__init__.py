@@ -1,0 +1,1 @@
+"""Data pipeline: synthetic generators, BinPipe-coded shards, host loader."""

@@ -1,0 +1,9 @@
+"""Distribution substrate: mesh construction, sharding rules, collectives."""
+
+from repro.distributed.mesh import make_mesh, local_mesh  # noqa: F401
+from repro.distributed.sharding import (  # noqa: F401
+    LOGICAL_RULES,
+    logical_to_spec,
+    make_shardings,
+    tree_shardings,
+)

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the platform's compute hot spots (paper §2.3).
+
+The paper offloads hot kernels to accelerators via OpenCL (conv 10-20x,
+ICP 30x).  Here each hot spot is a `pl.pallas_call` kernel with explicit
+BlockSpec VMEM tiling, a jitted wrapper (ops.py) and a pure-jnp oracle
+(ref.py).  Kernels run `interpret=True` on CPU (validation) and compiled on
+TPU (the target).
+
+  flash_attention/ -- online-softmax tiled attention (LM training hot spot)
+  ssd/             -- Mamba-2 SSD chunk scan (SSM archs)
+  icp/             -- ICP nearest-neighbor correspondence (HD map generation)
+  conv2d/          -- im2col-MXU convolution (perception CNN / simulation)
+"""

@@ -1,0 +1,21 @@
+"""Shared kernel utilities."""
+
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Pallas kernels compile only on TPU; everywhere else run the kernel
+    body in interpret mode (the brief's CPU-validation path)."""
+    return jax.default_backend() != "tpu"
+
+
+def tpu_compiler_params(dimension_semantics: tuple[str, ...]):
+    """Best-effort TPU compiler params (ignored in interpret mode)."""
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        return pltpu.CompilerParams(dimension_semantics=dimension_semantics)
+    except Exception:
+        return None

@@ -1,0 +1,18 @@
+"""XLA-conv oracle for the conv2d kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """SAME conv, stride 1, NHWC x HWIO -> NHWC."""
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return (out + b.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.icp.ops import icp_correspondences, icp_step, icp_align  # noqa: F401

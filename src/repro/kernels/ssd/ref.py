@@ -1,0 +1,36 @@
+"""Sequential-recurrence oracle for the SSD kernel (the literal SSM)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_sequential_ref(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)
+    A: jax.Array,  # (H,) negative
+    Bm: jax.Array,  # (B, S, G, N)
+    Cm: jax.Array,  # (B, S, G, N)
+) -> tuple[jax.Array, jax.Array]:
+    """h_t = exp(dt A) h_{t-1} + dt x_t B_t^T;  y_t = h_t C_t.
+
+    Returns (y (B,S,H,P), final state (B,H,P,N)).  fp32 throughout.
+    """
+    B_, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2).astype(jnp.float32)  # (B,S,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=2).astype(jnp.float32)
+    x32, dt32 = x.astype(jnp.float32), dt.astype(jnp.float32)
+
+    def step(h, t):
+        xt, dtt, bt, ct = x32[:, t], dt32[:, t], Bh[:, t], Ch[:, t]
+        dA = jnp.exp(dtt * A)  # (B,H)
+        h = h * dA[..., None, None] + jnp.einsum("bhp,bhn->bhpn", xt * dtt[..., None], bt)
+        y = jnp.einsum("bhpn,bhn->bhp", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((B_, H, P, N), jnp.float32)
+    hT, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), hT

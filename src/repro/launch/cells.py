@@ -1,0 +1,98 @@
+"""Cell enumeration + per-arch runtime policy for the dry-run matrix.
+
+A *cell* is (architecture x input shape).  The policy picks remat /
+microbatching / weight-sharding settings by model size so every cell fits the
+16 GB/chip budget on the production mesh (verified by the dry-run's memory
+analysis; see EXPERIMENTS.md §Dry-run)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.config import (
+    ARCH_REGISTRY,
+    ModelConfig,
+    ParallelConfig,
+    SHAPES,
+    ShapeConfig,
+    get_arch,
+    shape_applicable,
+)
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: str
+
+    @property
+    def key(self) -> str:
+        return f"{self.arch}__{self.shape}"
+
+
+def all_cells(include_skipped: bool = False) -> list[tuple[Cell, bool, str]]:
+    """Every (arch x shape) pair with its applicability verdict."""
+    from repro.configs import ASSIGNED_ARCHS
+
+    out = []
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_arch(arch)
+        for sname in SHAPE_ORDER:
+            ok, why = shape_applicable(cfg, SHAPES[sname])
+            if ok or include_skipped:
+                out.append((Cell(arch, sname), ok, why))
+    return out
+
+
+def runtime_policy(cfg: ModelConfig, shape: ShapeConfig) -> tuple[ModelConfig, ParallelConfig]:
+    """Per-cell remat / microbatch / attention / sharding choices
+    (16 GB/chip budget; justified in EXPERIMENTS.md §Dry-run)."""
+    import dataclasses as dc
+
+    params_b = cfg.param_count() / 1e9
+    if shape.mode != "train":
+        # inference: no remat; long-sequence prefill uses q-block-chunked
+        # attention so the S x S score matrix never materializes
+        attn = "blocked" if (shape.mode == "prefill" and shape.seq_len >= 8192) else cfg.attention_impl
+        model = dc.replace(cfg, remat="none", attention_impl=attn)
+        return model, ParallelConfig(num_microbatches=1)
+
+    if params_b > 30:  # qwen2-vl-72b
+        model = dc.replace(cfg, remat="full")
+        pcfg = ParallelConfig(weights_2d=True, num_microbatches=16, zero1=True)
+    elif params_b > 8:  # phi3-14b, qwen2-moe (total 13.7B)
+        model = dc.replace(cfg, remat="full")
+        pcfg = ParallelConfig(weights_2d=True, num_microbatches=8, zero1=True)
+    elif params_b > 2:
+        model = dc.replace(cfg, remat="dots")
+        pcfg = ParallelConfig(num_microbatches=4, zero1=True)
+    else:
+        model = dc.replace(cfg, remat="dots")
+        pcfg = ParallelConfig(num_microbatches=4, zero1=True)
+    return model, pcfg
+
+
+def shrink_depth(cfg: ModelConfig, d: int) -> ModelConfig:
+    """A d-deep unrolled variant of `cfg` for the roofline lowers (exact
+    per-layer costs; see dryrun)."""
+    import dataclasses as dc
+
+    kw = dict(scan_layers=False)
+    if cfg.family == "encdec":
+        kw.update(encoder_layers=d, decoder_layers=d, num_layers=2 * d)
+    elif cfg.family == "hybrid":
+        kw.update(num_layers=d * cfg.hybrid_attn_every)
+    else:
+        kw.update(num_layers=d)
+    return dc.replace(cfg, **kw)
+
+
+def depth_units(cfg: ModelConfig) -> int:
+    """Full depth in the units shrink_depth scales (layers / sites / per-side)."""
+    if cfg.family == "encdec":
+        return cfg.encoder_layers
+    if cfg.family == "hybrid":
+        return cfg.num_layers // cfg.hybrid_attn_every
+    return cfg.num_layers

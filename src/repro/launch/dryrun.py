@@ -1,0 +1,359 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape) cell, lower + compile the appropriate
+step function (train_step / prefill / decode_step) against the production
+mesh — 16x16 single-pod and 2x16x16 multi-pod — with ShapeDtypeStruct inputs
+(no allocation), print ``memory_analysis()`` / ``cost_analysis()``, extract
+the roofline terms (repro.roofline) and write one JSON per cell under
+``experiments/dryrun/``.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+
+``--all`` runs each cell in a fresh subprocess (compile caches for 70B-class
+models would otherwise accumulate in RAM).
+"""
+
+import argparse
+import dataclasses
+import functools
+import gzip
+import json
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import SHAPES, TrainConfig, get_arch, shape_applicable
+from repro.distributed.sharding import (
+    logical_to_spec,
+    rules_for_model,
+    sanitize_specs,
+)
+from repro.launch.cells import Cell, all_cells, depth_units, runtime_policy, shrink_depth
+from repro.launch.mesh import make_production_mesh, mesh_desc
+from repro.models import model_zoo
+from repro.roofline import analysis as roofline
+from repro.training.train_loop import make_train_step, state_shardings
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+_IS_LG = lambda x: x is None or (
+    isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+)
+
+
+def _shardings_from_logical(tree_logical, mesh, rules, struct_tree=None):
+    spec_tree = jax.tree.map(
+        lambda lg: logical_to_spec(lg, mesh, rules), tree_logical, is_leaf=_IS_LG
+    )
+    if struct_tree is not None:
+        spec_tree = sanitize_specs(spec_tree, struct_tree, mesh)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+    )
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    extra_rules=None,
+    depth: int | None = None,
+    policy_override=None,
+):
+    """Returns (lowered, info dict).  ``depth`` switches to the unrolled
+    d-deep roofline variant (exact cost_analysis; scan bodies are counted
+    once by XLA)."""
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise SystemExit(f"SKIP {arch} x {shape_name}: {why}")
+    model_cfg, pcfg = runtime_policy(cfg, shape)
+    if policy_override is not None:
+        model_cfg, pcfg = policy_override(model_cfg, pcfg)
+    if depth is not None:
+        model_cfg = shrink_depth(model_cfg, depth)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    extra = dict(extra_rules or {})
+    if shape.name == "long_500k":
+        # batch=1: the data axis carries the cache *sequence* instead; every
+        # attention-internal tensor must agree or GSPMD all-gathers the
+        # 500k-token cache per layer (observed before this override).
+        extra.setdefault("batch", None)
+        extra.setdefault("kv_seq", "data")
+        extra.setdefault("moe_cap", None)
+    rules = rules_for_model(cfg, mesh, weights_2d=pcfg.weights_2d, extra=extra)
+
+    batch_structs = model_zoo.input_specs(model_cfg, shape)
+    batch_sh = _shardings_from_logical(
+        model_zoo.input_logical(model_cfg, shape), mesh, rules, batch_structs
+    )
+
+    if shape.mode == "train":
+        bundle = make_train_step(model_cfg, TrainConfig(), pcfg, mesh)
+        state_structs = jax.eval_shape(
+            bundle.init_fn, jax.ShapeDtypeStruct((2,), jnp.uint32)
+        )
+        with mesh:
+            st_sh = state_shardings(bundle, mesh)
+            step = jax.jit(
+                bundle.train_step,
+                in_shardings=(st_sh, batch_sh),
+                out_shardings=(st_sh, None),
+                donate_argnums=(0,),
+            )
+            lowered = step.lower(state_structs, batch_structs)
+        return lowered, dict(mesh=mesh, cfg=model_cfg, shape=shape, mode="train")
+
+    model = model_zoo.build_model(model_cfg)
+    param_structs = model_zoo.param_specs(model)
+    param_sh = _shardings_from_logical(
+        model_zoo.param_logical(model), mesh, rules, param_structs
+    )
+
+    if shape.mode == "prefill":
+        max_len = shape.seq_len if cfg.family != "encdec" else shape.seq_len // 2
+
+        def prefill_fn(params, batch):
+            return model.prefill(params, batch, max_len)
+
+        with mesh:
+            step = jax.jit(prefill_fn, in_shardings=(param_sh, batch_sh))
+            lowered = step.lower(param_structs, batch_structs)
+        return lowered, dict(mesh=mesh, cfg=model_cfg, shape=shape, mode="prefill")
+
+    # decode
+    state_structs = model_zoo.decode_state_specs(model_cfg, shape)
+    state_lg = model_zoo.decode_state_logical(model_cfg, shape)
+    state_sh = _shardings_from_logical(state_lg, mesh, rules, state_structs)
+    # pos scalar: replicated
+    state_sh = jax.tree.map(
+        lambda s: s if isinstance(s, NamedSharding) else NamedSharding(mesh, P()),
+        state_sh,
+    )
+
+    with mesh:
+        step = jax.jit(
+            model.decode_step,
+            in_shardings=(param_sh, state_sh, batch_sh),
+            out_shardings=(None, state_sh),
+            donate_argnums=(1,),
+        )
+        lowered = step.lower(param_structs, state_structs, batch_structs)
+    return lowered, dict(mesh=mesh, cfg=model_cfg, shape=shape, mode="decode")
+
+
+ROOFLINE_DEPTHS = (1, 2)
+
+
+def roofline_extrapolated(
+    arch: str, shape_name: str, multi_pod: bool, policy_override=None
+) -> dict:
+    """Per-device flops/bytes/collective-bytes for the FULL model, linearly
+    extrapolated from two unrolled small-depth compiles (exact per XLA's
+    cost model; scan bodies are otherwise counted once)."""
+    cfg = get_arch(arch)
+
+    def _roofline_policy(model_cfg, pcfg):
+        if policy_override is not None:
+            model_cfg, pcfg = policy_override(model_cfg, pcfg)
+        if not pcfg.weights_2d and pcfg.num_microbatches > 1:
+            # without weights_2d, microbatching changes activation peaks but
+            # no per-step totals (flops/bytes/collectives) — lower the
+            # roofline variant unmicrobatched; the unrolled compile is
+            # num_microbatches x cheaper
+            pcfg = dataclasses.replace(pcfg, num_microbatches=1)
+        return model_cfg, pcfg
+
+    measures = []
+    for d in ROOFLINE_DEPTHS:
+        lowered, info = lower_cell(
+            arch, shape_name, multi_pod, depth=d, policy_override=_roofline_policy
+        )
+        compiled = lowered.compile()
+        ca = compiled.cost_analysis() or {}
+        stats = roofline.collective_bytes_from_hlo(compiled.as_text())
+        measures.append(
+            dict(
+                flops=float(ca.get("flops", 0.0)),
+                hbm=float(ca.get("bytes accessed", 0.0)),
+                coll_operand=stats.operand_bytes,
+                coll_wire=stats.wire_bytes,
+                ops={k: float(v) for k, v in stats.op_counts.items()},
+            )
+        )
+    d1, d2 = ROOFLINE_DEPTHS
+    L = depth_units(cfg)
+
+    def extrap(key):
+        m1, m2 = measures[0][key], measures[1][key]
+        return m1 + (m2 - m1) / (d2 - d1) * (L - d1)
+
+    ops = {}
+    for k in set(measures[0]["ops"]) | set(measures[1]["ops"]):
+        o1 = measures[0]["ops"].get(k, 0.0)
+        o2 = measures[1]["ops"].get(k, 0.0)
+        ops[k] = round(o1 + (o2 - o1) / (d2 - d1) * (L - d1), 1)
+    return dict(
+        flops=extrap("flops"),
+        hbm=extrap("hbm"),
+        coll_operand=extrap("coll_operand"),
+        coll_wire=extrap("coll_wire"),
+        ops=ops,
+        depths=list(ROOFLINE_DEPTHS),
+        measures=measures,
+    )
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    save_hlo: bool = False,
+    with_roofline: bool = True,
+    tag_suffix: str = "",
+    policy_override=None,
+) -> dict:
+    t0 = time.time()
+    lowered, info = lower_cell(arch, shape_name, multi_pod, policy_override=policy_override)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mesh = info["mesh"]
+    print(f"=== {arch} x {shape_name} on {mesh_desc(mesh)} ===")
+    print("memory_analysis:", compiled.memory_analysis())
+    ca = compiled.cost_analysis() or {}
+    print("cost_analysis: flops=%.3e bytes=%.3e" % (ca.get("flops", 0), ca.get("bytes accessed", 0)))
+
+    res = roofline.analyze_compiled(
+        compiled,
+        arch=arch,
+        shape=shape_name,
+        mesh_desc=mesh_desc(mesh),
+        num_devices=mesh.size,
+        model_flops_global=roofline.model_flops(get_arch(arch), SHAPES[shape_name]),
+    )
+    out = res.as_dict()
+    out.update(
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        mode=info["mode"],
+        multi_pod=multi_pod,
+        remat=info["cfg"].remat,
+        attention_impl=info["cfg"].attention_impl,
+    )
+
+    if with_roofline and not multi_pod:
+        ex = roofline_extrapolated(arch, shape_name, multi_pod, policy_override)
+        hw = roofline.HW_V5E
+        out["extrapolated"] = {
+            "flops": ex["flops"],
+            "hbm_bytes": ex["hbm"],
+            "collective_operand_bytes": ex["coll_operand"],
+            "collective_wire_bytes": ex["coll_wire"],
+            "collective_ops": ex["ops"],
+            "t_compute": ex["flops"] / hw.peak_flops,
+            "t_memory": ex["hbm"] / hw.hbm_bw,
+            "t_collective": ex["coll_operand"] / hw.ici_bw,
+            "depths": ex["depths"],
+        }
+        terms = {
+            "compute": out["extrapolated"]["t_compute"],
+            "memory": out["extrapolated"]["t_memory"],
+            "collective": out["extrapolated"]["t_collective"],
+        }
+        out["extrapolated"]["bottleneck"] = max(terms, key=terms.get)
+        total = ex["flops"] * mesh.size
+        out["extrapolated"]["useful_ratio"] = (
+            res.model_flops_global / total if total else 0.0
+        )
+        print(
+            "roofline(extrapolated): t_comp=%.3fms t_mem=%.3fms t_coll=%.3fms bottleneck=%s useful=%.3f"
+            % (
+                terms["compute"] * 1e3,
+                terms["memory"] * 1e3,
+                terms["collective"] * 1e3,
+                out["extrapolated"]["bottleneck"],
+                out["extrapolated"]["useful_ratio"],
+            )
+        )
+    print(
+        "roofline: t_comp=%.3fms t_mem=%.3fms t_coll=%.3fms bottleneck=%s useful=%.2f"
+        % (
+            res.t_compute * 1e3,
+            res.t_memory * 1e3,
+            res.t_collective * 1e3,
+            res.bottleneck,
+            res.useful_ratio,
+        )
+    )
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    tag = ("pod2" if multi_pod else "pod1") + tag_suffix
+    path = os.path.join(OUT_DIR, f"{arch}__{shape_name}__{tag}.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, default=str)
+    if save_hlo:
+        with gzip.open(path.replace(".json", ".hlo.gz"), "wt") as f:
+            f.write(compiled.as_text())
+    print("saved", path)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true", help="run every applicable cell in subprocesses")
+    ap.add_argument("--both-meshes", action="store_true", help="with --all: single- and multi-pod")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        cells = all_cells()
+        meshes = [False, True] if args.both_meshes else [args.multi_pod]
+        failures = []
+        for cell, ok, why in cells:
+            for mp in meshes:
+                tag = "pod2" if mp else "pod1"
+                path = os.path.join(OUT_DIR, f"{cell.arch}__{cell.shape}__{tag}.json")
+                if args.skip_existing and os.path.exists(path):
+                    print("skip (exists):", cell.key, tag)
+                    continue
+                cmd = [
+                    sys.executable, "-m", "repro.launch.dryrun",
+                    "--arch", cell.arch, "--shape", cell.shape,
+                ] + (["--multi-pod"] if mp else []) + (
+                    ["--save-hlo"] if args.save_hlo else []
+                )
+                print(">>>", " ".join(cmd), flush=True)
+                r = subprocess.run(cmd, env={**os.environ, "PYTHONPATH": "src"})
+                if r.returncode != 0:
+                    failures.append((cell.key, tag))
+        skipped = [c for c, ok, _ in all_cells(include_skipped=True) if not ok]
+        print(f"\nDONE. failures={failures} skipped_by_rule={[c.key for c in skipped]}")
+        sys.exit(1 if failures else 0)
+
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape required (or --all)")
+    run_cell(args.arch, args.shape, args.multi_pod, save_hlo=args.save_hlo)
+
+
+if __name__ == "__main__":
+    main()

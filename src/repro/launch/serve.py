@@ -1,0 +1,59 @@
+"""Serving driver: batched prefill + decode with the ServeEngine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
+        --batch 4 --prompt-len 64 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import get_arch, scale_down
+from repro.models import model_zoo
+from repro.serving.engine import ServeEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--scale", choices=["smoke", "full"], default="smoke")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.scale == "smoke":
+        cfg = scale_down(cfg)
+    model = model_zoo.build_model(cfg)
+    params = model_zoo.init_params(model, jax.random.PRNGKey(args.seed))
+
+    key = jax.random.PRNGKey(args.seed + 1)
+    B, S = args.batch, args.prompt_len
+    prompt = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size, jnp.int32)}
+    if cfg.family == "vlm":
+        F = cfg.frontend_tokens
+        prompt["patches"] = jax.random.normal(key, (B, F, cfg.frontend_dim), jnp.float32)
+        prompt["positions3"] = jnp.broadcast_to(
+            jnp.arange(S + F, dtype=jnp.int32), (3, B, S + F)
+        )
+    if cfg.family == "encdec":
+        prompt["src_emb"] = jax.random.normal(key, (B, S, cfg.frontend_dim), jnp.float32)
+
+    engine = ServeEngine(cfg, params, max_len=S + args.gen + (cfg.frontend_tokens or 0))
+    t0 = time.perf_counter()
+    out = engine.generate(prompt, args.gen, temperature=args.temperature, seed=args.seed)
+    dt = time.perf_counter() - t0
+    toks = B * args.gen
+    print(f"[serve] generated {out.shape} tokens in {dt:.2f}s ({toks/dt:,.1f} tok/s)")
+    print("[serve] first sequence:", jax.device_get(out[0])[:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""HD map generation service (paper §5)."""
+
+from repro.mapgen.pipeline import MapGenPipeline  # noqa: F401

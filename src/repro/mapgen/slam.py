@@ -1,0 +1,91 @@
+"""Pose estimation for map generation (paper §5.2).
+
+"First, the wheel odometry data and the IMU data can be used to perform
+propagation ... then the GPS data and the LiDAR data can be used to correct
+the propagation results."
+
+Implemented as a 2.5D (x, y, yaw) extended Kalman filter over the whole log,
+fully in JAX (``lax.scan`` over time):
+
+  propagate:  x' = x + v cos(yaw) dt,  y' = y + v sin(yaw) dt,
+              yaw' = yaw + yaw_rate dt        (odometry v, IMU yaw_rate)
+  correct:    GPS position update with per-fix gain.
+
+LiDAR-based refinement (scan-to-scan ICP on the Pallas kernel) happens in
+``pipeline.py`` on top of these poses.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EKFParams(NamedTuple):
+    q_pos: float = 0.02  # process noise (position)
+    q_yaw: float = 0.005
+    r_gps: float = 0.5  # GPS measurement noise
+
+
+def propagate_and_correct(
+    odom_v: jax.Array,  # (T,) wheel-odometry speed
+    imu_yaw_rate: jax.Array,  # (T,)
+    gps: jax.Array,  # (T, 2) noisy position fixes
+    dt: float = 0.1,
+    init_pose: jax.Array | None = None,
+    params: EKFParams = EKFParams(),
+) -> jax.Array:
+    """Returns poses (T, 3): x, y, yaw."""
+    T = odom_v.shape[0]
+    if init_pose is None:
+        init_pose = jnp.concatenate([gps[0], jnp.array([jnp.pi / 2], gps.dtype)])
+
+    P0 = jnp.diag(jnp.array([1.0, 1.0, 0.1], jnp.float32))
+    Q = jnp.diag(jnp.array([params.q_pos, params.q_pos, params.q_yaw], jnp.float32))
+    R = jnp.eye(2, dtype=jnp.float32) * params.r_gps
+    H = jnp.array([[1.0, 0, 0], [0, 1.0, 0]], jnp.float32)
+
+    def step(carry, inp):
+        pose, P = carry
+        v, w, z = inp
+        x, y, yaw = pose
+        # propagate
+        pose_p = jnp.array([x + v * jnp.cos(yaw) * dt, y + v * jnp.sin(yaw) * dt, yaw + w * dt])
+        F = jnp.array(
+            [
+                [1.0, 0.0, -v * jnp.sin(yaw) * dt],
+                [0.0, 1.0, v * jnp.cos(yaw) * dt],
+                [0.0, 0.0, 1.0],
+            ],
+            jnp.float32,
+        )
+        P_p = F @ P @ F.T + Q
+        # GPS correction
+        S = H @ P_p @ H.T + R
+        K = P_p @ H.T @ jnp.linalg.inv(S)
+        innov = z - pose_p[:2]
+        pose_c = pose_p + K @ innov
+        P_c = (jnp.eye(3) - K @ H) @ P_p
+        return (pose_c, P_c), pose_c
+
+    (_, _), poses = jax.lax.scan(
+        step, (init_pose.astype(jnp.float32), P0), (odom_v, imu_yaw_rate, gps)
+    )
+    return poses
+
+
+def pose_to_matrix(pose: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(x, y, yaw) -> (R (3,3), t (3,)) vehicle->world."""
+    x, y, yaw = pose[0], pose[1], pose[2]
+    c, s = jnp.cos(yaw), jnp.sin(yaw)
+    R = jnp.array([[c, -s, 0.0], [s, c, 0.0], [0.0, 0.0, 1.0]])
+    t = jnp.array([x, y, 0.0])
+    return R, t
+
+
+def transform_cloud(pose: jax.Array, cloud: jax.Array) -> jax.Array:
+    """Vehicle-frame LiDAR points (N,3) -> world frame under (x,y,yaw)."""
+    R, t = pose_to_matrix(pose)
+    return cloud @ R.T + t

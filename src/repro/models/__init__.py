@@ -1,0 +1,3 @@
+"""Model zoo: every assigned architecture, built from shared JAX layers."""
+
+from repro.models.model_zoo import build_model  # noqa: F401

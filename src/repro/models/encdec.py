@@ -1,0 +1,265 @@
+"""Encoder-decoder backbone (seamless-m4t family).
+
+The speech frontend is a stub per the brief: the encoder consumes
+pre-computed frame embeddings (B, S_src, frontend_dim).  Learned absolute
+positions on both sides; decoder has causal self-attention + cross-attention.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import attention, layers, mlp
+from repro.models.attention import KVCache
+from repro.models.params import ParamDef, stack_plan
+from repro.models.transformer import _maybe_remat, _zero_metrics
+from repro.models.scan_utils import scan_or_unroll
+
+
+class EncDecState(NamedTuple):
+    self_cache: KVCache  # (L_dec, B, S_max, kv, hd)
+    cross_k: jax.Array  # (L_dec, B, S_src, kv, hd)
+    cross_v: jax.Array
+    pos: jax.Array
+
+
+def enc_block_plan(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": layers.norm_plan(cfg),
+        "attn": attention.attention_plan(cfg),
+        "ln2": layers.norm_plan(cfg),
+        "mlp": mlp.mlp_plan(cfg),
+    }
+
+
+def dec_block_plan(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": layers.norm_plan(cfg),
+        "self_attn": attention.attention_plan(cfg),
+        "ln2": layers.norm_plan(cfg),
+        "cross_attn": attention.attention_plan(cfg),
+        "ln3": layers.norm_plan(cfg),
+        "mlp": mlp.mlp_plan(cfg),
+    }
+
+
+def _enc_block(cfg, p, x, pos):
+    h = layers.apply_norm(cfg, p["ln1"], x)
+    q, k, v = attention.qkv(cfg, p["attn"], h, None)
+    o = attention.attend(cfg, q, k, v, q_pos=pos, kv_pos=pos, causal=False)
+    x = x + attention.out_proj(cfg, p["attn"], o)
+    h2 = layers.apply_norm(cfg, p["ln2"], x)
+    x = x + mlp.apply_mlp(cfg, p["mlp"], h2)
+    return constrain(x, ("batch", "seq", "act_embed"))
+
+
+def _cross_kv(cfg, p, enc_out):
+    """Project encoder output into this decoder layer's cross K/V."""
+    B, S = enc_out.shape[:2]
+    hd = cfg.resolved_head_dim
+    k = layers.apply_linear(p["k"], enc_out).reshape(B, S, cfg.num_kv_heads, hd)
+    v = layers.apply_linear(p["v"], enc_out).reshape(B, S, cfg.num_kv_heads, hd)
+    return k, v
+
+
+def _dec_block(
+    cfg,
+    p,
+    x,
+    q_pos,
+    kv_pos,
+    src_pos,
+    cross_k,
+    cross_v,
+    cache: Optional[tuple] = None,
+    cache_pos=None,
+):
+    # causal self attention; decode keeps the cache read-only (§Perf B3)
+    h = layers.apply_norm(cfg, p["ln1"], x)
+    q, k, v = attention.qkv(cfg, p["self_attn"], h, None)
+    if cache is not None:
+        ck, cv = cache
+        o = attention.sdpa_decode_readonly(
+            q, ck, cv, k, v, q_pos=q_pos, kv_pos=kv_pos)
+        kv_out = (k, v)
+    else:
+        o = attention.attend(cfg, q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=True)
+        kv_out = (k, v)
+    x = x + attention.out_proj(cfg, p["self_attn"], o)
+
+    # cross attention
+    h2 = layers.apply_norm(cfg, p["ln2"], x)
+    B, S = h2.shape[:2]
+    hd = cfg.resolved_head_dim
+    qc = layers.apply_linear(p["cross_attn"]["q"], h2).reshape(B, S, cfg.num_heads, hd)
+    qpos_c = jnp.full((B, S), jnp.iinfo(jnp.int32).max, jnp.int32)  # no causal limit
+    o2 = attention.attend(cfg, qc, cross_k, cross_v, q_pos=qpos_c, kv_pos=src_pos, causal=False)
+    x = x + attention.out_proj(cfg, p["cross_attn"], o2)
+
+    h3 = layers.apply_norm(cfg, p["ln3"], x)
+    x = x + mlp.apply_mlp(cfg, p["mlp"], h3)
+    return constrain(x, ("batch", "seq", "act_embed")), kv_out
+
+
+class EncDecModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def plan(self) -> dict:
+        cfg = self.cfg
+        return {
+            "embed": layers.embed_plan(cfg),
+            "src_proj": layers.linear_plan(
+                cfg.frontend_dim, cfg.d_model, ("frontend", "embed"), bias=True
+            ),
+            "enc_pos": ParamDef((cfg.max_seq_len, cfg.d_model), (None, "embed"), scale=0.02),
+            "dec_pos": ParamDef((cfg.max_seq_len, cfg.d_model), (None, "embed"), scale=0.02),
+            "enc_layers": stack_plan(enc_block_plan(cfg), cfg.encoder_layers),
+            "dec_layers": stack_plan(dec_block_plan(cfg), cfg.decoder_layers),
+            "enc_norm": layers.norm_plan(cfg),
+            "dec_norm": layers.norm_plan(cfg),
+        }
+
+    # ------------------------------------------------------------------
+    def encode(self, params, src_emb: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        x = layers.apply_linear(params["src_proj"], src_emb.astype(dtype))
+        B, S = x.shape[:2]
+        x = x + jax.lax.dynamic_slice_in_dim(params["enc_pos"], 0, S, 0).astype(dtype)
+        x = constrain(x, ("batch", "seq", "act_embed"))
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+        def body(h, lp):
+            return _enc_block(cfg, lp, h, pos), None
+
+        body = _maybe_remat(body, cfg)
+        x, _ = scan_or_unroll(body, x, params["enc_layers"], cfg.scan_layers)
+        return layers.apply_norm(cfg, params["enc_norm"], x)
+
+    def _embed_dec(self, params, tokens, start_pos):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        x = layers.embed_tokens(params["embed"], tokens, dtype)
+        S = tokens.shape[1]
+        pe = jax.lax.dynamic_slice_in_dim(params["dec_pos"], start_pos, S, 0)
+        return constrain(x + pe.astype(dtype), ("batch", "seq", "act_embed"))
+
+    # ------------------------------------------------------------------
+    def forward(self, params, batch):
+        """Training forward: returns decoder logits (B, S_dec, Vpad)."""
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["src_emb"])
+        B, S_src = enc_out.shape[:2]
+        x = self._embed_dec(params, batch["tokens"], 0)
+        S = x.shape[1]
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        src_pos = jnp.broadcast_to(jnp.arange(S_src, dtype=jnp.int32), (B, S_src))
+
+        def body(h, lp):
+            ck, cv = _cross_kv(cfg, lp["cross_attn"], enc_out)
+            h, _ = _dec_block(cfg, lp, h, pos, pos, src_pos, ck, cv)
+            return h, None
+
+        body = _maybe_remat(body, cfg)
+        x, _ = scan_or_unroll(body, x, params["dec_layers"], cfg.scan_layers)
+        x = layers.apply_norm(cfg, params["dec_norm"], x)
+        logits = layers.lm_logits(params["embed"], x, cfg.tie_embeddings)
+        return constrain(logits, ("batch", "seq", "vocab_act")), _zero_metrics()
+
+    # ------------------------------------------------------------------
+    def prefill(self, params, batch, max_len: int):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["src_emb"])
+        B, S_src = enc_out.shape[:2]
+        x = self._embed_dec(params, batch["tokens"], 0)
+        S = x.shape[1]
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        src_pos = jnp.broadcast_to(jnp.arange(S_src, dtype=jnp.int32), (B, S_src))
+
+        def body(h, lp):
+            ck, cv = _cross_kv(cfg, lp["cross_attn"], enc_out)
+            h, (k, v) = _dec_block(cfg, lp, h, pos, pos, src_pos, ck, cv)
+            return h, (k, v, ck, cv)
+
+        x, (ks, vs, cks, cvs) = scan_or_unroll(body, x, params["dec_layers"], cfg.scan_layers)
+        pad = max_len - S
+        if pad > 0:
+            padding = [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)]
+            ks, vs = jnp.pad(ks, padding), jnp.pad(vs, padding)
+        x = layers.apply_norm(cfg, params["dec_norm"], x[:, -1:])
+        logits = layers.lm_logits(params["embed"], x, cfg.tie_embeddings)
+        state = EncDecState(
+            self_cache=KVCache(k=ks, v=vs),
+            cross_k=cks,
+            cross_v=cvs,
+            pos=jnp.asarray(S, jnp.int32),
+        )
+        return logits, state
+
+    def decode_step(self, params, state: EncDecState, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]  # (B, 1)
+        B = tokens.shape[0]
+        x = self._embed_dec(params, tokens, state.pos)
+        pos = jnp.broadcast_to(state.pos.astype(jnp.int32), (B, 1))
+        S_max = state.self_cache.k.shape[2]
+        kv_pos = jnp.broadcast_to(jnp.arange(S_max, dtype=jnp.int32), (B, S_max))
+        S_src = state.cross_k.shape[2]
+        src_pos = jnp.broadcast_to(jnp.arange(S_src, dtype=jnp.int32), (B, S_src))
+
+        def body(h, xs):
+            lp, ck_self, cv_self, ck, cv = xs
+            h, (nk, nv) = _dec_block(
+                cfg, lp, h, pos, kv_pos, src_pos, ck, cv,
+                cache=(ck_self, cv_self), cache_pos=state.pos,
+            )
+            return h, (nk, nv)
+
+        x, (nk, nv) = scan_or_unroll(
+            body,
+            x,
+            (params["dec_layers"], state.self_cache.k, state.self_cache.v,
+             state.cross_k, state.cross_v),
+            cfg.scan_layers,
+        )
+        x = layers.apply_norm(cfg, params["dec_norm"], x)
+        logits = layers.lm_logits(params["embed"], x, cfg.tie_embeddings)
+        nk = jax.lax.dynamic_update_slice(
+            state.self_cache.k, nk.astype(state.self_cache.k.dtype), (0, 0, state.pos, 0, 0))
+        nv = jax.lax.dynamic_update_slice(
+            state.self_cache.v, nv.astype(state.self_cache.v.dtype), (0, 0, state.pos, 0, 0))
+        new_state = EncDecState(
+            self_cache=KVCache(k=nk, v=nv),
+            cross_k=state.cross_k,
+            cross_v=state.cross_v,
+            pos=state.pos + 1,
+        )
+        return logits, new_state
+
+    # ------------------------------------------------------------------
+    def init_decode_state(self, batch_size: int, max_len: int, src_len: int) -> EncDecState:
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        L = cfg.decoder_layers
+        dtype = jnp.dtype(cfg.dtype)
+        return EncDecState(
+            self_cache=KVCache(
+                k=jnp.zeros((L, batch_size, max_len, cfg.num_kv_heads, hd), dtype),
+                v=jnp.zeros((L, batch_size, max_len, cfg.num_kv_heads, hd), dtype),
+            ),
+            cross_k=jnp.zeros((L, batch_size, src_len, cfg.num_kv_heads, hd), dtype),
+            cross_v=jnp.zeros((L, batch_size, src_len, cfg.num_kv_heads, hd), dtype),
+            pos=jnp.zeros((), jnp.int32),
+        )
+
+    def decode_state_logical(self, long_context: bool = False) -> EncDecState:
+        lg = ("layers", "batch", "kv_seq", "cache_heads", "cache_hd")
+        return EncDecState(
+            self_cache=KVCache(k=lg, v=lg), cross_k=lg, cross_v=lg, pos=None
+        )

@@ -1,0 +1,262 @@
+"""Zamba2-style hybrid: Mamba-2 backbone + one *shared* attention block.
+
+Structure (arXiv:2411.15242, adapted): ``num_layers`` mamba blocks are grouped
+into ``num_layers // hybrid_attn_every`` sites.  After each site's mamba
+group, a single shared transformer block runs on ``concat(h, embedding)``
+(width 2*d_model) with a per-site LoRA delta on its QKV projections, and its
+output is projected back to d_model and added to the residual stream.
+
+Execution is a two-level scan: outer over sites (site-stacked LoRA + mamba
+params), inner over the mamba layers of the site — HLO stays depth-independent.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import attention, layers, mlp, ssm
+from repro.models.attention import KVCache
+from repro.models.params import ParamDef, stack_plan
+from repro.models.ssm import SSMState
+from repro.models.transformer import DecodeState, _maybe_remat, _zero_metrics
+from repro.models.scan_utils import scan_or_unroll
+
+
+class HybridState(NamedTuple):
+    ssm: SSMState  # leaves stacked (sites, every, B, ...)
+    cache: KVCache  # (sites, B, S_max, kv, hd)
+    pos: jax.Array
+
+
+def mamba_layer_plan(cfg: ModelConfig) -> dict:
+    return {"ln": layers.norm_plan(cfg), "ssm": ssm.ssm_plan(cfg)}
+
+
+def _shared_block_plan(cfg: ModelConfig) -> dict:
+    d2 = 2 * cfg.d_model
+    return {
+        "ln1": layers.norm_plan(cfg, d2),
+        "attn": attention.attention_plan(cfg, d_in=d2),
+        "ln2": layers.norm_plan(cfg, d2),
+        "mlp": mlp.mlp_plan(cfg, d_in=d2),
+        "out_proj": layers.linear_plan(d2, cfg.d_model, ("ffn", "embed")),
+    }
+
+
+def _lora_site_plan(cfg: ModelConfig) -> dict:
+    """Per-site LoRA deltas, key names match attention._project's lookup."""
+    d2 = 2 * cfg.d_model
+    hd = cfg.resolved_head_dim
+    r = cfg.hybrid_lora_rank
+    plan = {}
+    for name, heads in (("q", cfg.num_heads), ("k", cfg.num_kv_heads), ("v", cfg.num_kv_heads)):
+        plan[f"{name}_lora_a"] = ParamDef((d2, r), ("embed", "lora"), scale=0.02)
+        plan[f"{name}_lora_b"] = ParamDef((r, heads * hd), ("lora", "heads"), init="zeros")
+    return plan
+
+
+def _shared_block(cfg, shared, lora, xin, q_pos, kv_pos, cache=None, cache_pos=None):
+    """xin (B,S,2D). Returns (delta (B,S,D), (k,v)).
+
+    Decode keeps the cache READ-ONLY inside the site scan (the new token's
+    k/v merge analytically into the softmax; the stacked cache is written
+    once outside the scan — see transformer.block_apply / §Perf B3)."""
+    p_attn = {**shared["attn"], **lora}
+    h = layers.apply_norm(cfg, shared["ln1"], xin)
+    q, k, v = attention.qkv(cfg, p_attn, h, None)
+    if cache is not None:
+        ck, cv = cache
+        o = attention.sdpa_decode_readonly(
+            q, ck, cv, k, v, q_pos=q_pos, kv_pos=kv_pos)
+        kv_out = (k, v)
+    else:
+        o = attention.attend(cfg, q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=True)
+        kv_out = (k, v)
+    B, S = xin.shape[:2]
+    attn_flat = o.reshape(B, S, cfg.num_heads * cfg.resolved_head_dim)
+    x2 = xin + layers.apply_linear(shared["attn"]["o"], attn_flat)
+    h2 = layers.apply_norm(cfg, shared["ln2"], x2)
+    x2 = x2 + mlp.apply_mlp(cfg, shared["mlp"], h2)
+    return layers.apply_linear(shared["out_proj"], x2), kv_out
+
+
+class HybridModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        assert cfg.num_layers % cfg.hybrid_attn_every == 0
+        self.n_sites = cfg.num_layers // cfg.hybrid_attn_every
+        self.per_site = cfg.hybrid_attn_every
+
+    def plan(self) -> dict:
+        cfg = self.cfg
+        inner = stack_plan(mamba_layer_plan(cfg), self.per_site)
+        return {
+            "embed": layers.embed_plan(cfg),
+            "backbone": stack_plan(inner, self.n_sites, "sites"),
+            "shared": _shared_block_plan(cfg),
+            "lora": stack_plan(_lora_site_plan(cfg), self.n_sites, "sites"),
+            "final_norm": layers.norm_plan(cfg),
+        }
+
+    # ------------------------------------------------------------------
+    def _run(self, params, x0, mode: str, state: Optional[HybridState] = None, max_len: int = 0):
+        """Shared body for train / prefill / decode."""
+        cfg = self.cfg
+        B, S = x0.shape[:2]
+        if mode == "decode":
+            assert state is not None
+            q_pos = jnp.broadcast_to(state.pos.astype(jnp.int32), (B, 1))
+            S_cache = state.cache.k.shape[2]
+            kv_pos = jnp.broadcast_to(jnp.arange(S_cache, dtype=jnp.int32), (B, S_cache))
+        else:
+            q_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+            kv_pos = q_pos
+        want_state = mode in ("prefill", "decode")
+
+        def site_body(carry, xs):
+            h = carry
+            if mode == "decode":
+                site_p, lora_p, site_ssm, ck, cv = xs
+            else:
+                site_p, lora_p = xs
+                site_ssm, ck, cv = None, None, None
+
+            def mamba_body(hh, inner_xs):
+                if mode == "decode":
+                    lp, st = inner_xs
+                else:
+                    lp, st = inner_xs, None
+                out, new_st = ssm.apply_ssm(
+                    cfg, lp["ssm"], layers.apply_norm(cfg, lp["ln"], hh),
+                    state=st, return_state=want_state,
+                )
+                if not want_state:
+                    new_st = jnp.zeros((), jnp.float32)  # dummy ys
+                return hh + out, new_st
+
+            if mode == "train":
+                body = _maybe_remat(mamba_body, cfg)
+                h, _ = scan_or_unroll(body, h, site_p, cfg.scan_layers)
+                new_ssm = None
+            elif mode == "prefill":
+                h, new_ssm = scan_or_unroll(mamba_body, h, site_p, cfg.scan_layers)
+            else:  # decode
+                h, new_ssm = scan_or_unroll(mamba_body, h, (site_p, site_ssm), cfg.scan_layers)
+
+            xin = jnp.concatenate([h, x0], axis=-1)
+            if mode == "decode":
+                delta, (nk, nv) = _shared_block(
+                    cfg, params["shared"], lora_p, xin, q_pos, kv_pos,
+                    cache=(ck, cv), cache_pos=state.pos,
+                )
+            else:
+                delta, (nk, nv) = _shared_block(
+                    cfg, params["shared"], lora_p, xin, q_pos, kv_pos
+                )
+            h = h + delta
+            h = constrain(h, ("batch", "seq", "act_embed"))
+            ys = (new_ssm, nk, nv) if want_state else None
+            return h, ys
+
+        if mode == "train":
+            x, _ = scan_or_unroll(
+                site_body, x0, (params["backbone"], params["lora"]), cfg.scan_layers
+            )
+            return x, None
+        if mode == "prefill":
+            x, (ssm_states, ks, vs) = scan_or_unroll(
+                site_body, x0, (params["backbone"], params["lora"]), cfg.scan_layers
+            )
+            pad = max_len - S
+            if pad > 0:
+                padding = [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)]
+                ks, vs = jnp.pad(ks, padding), jnp.pad(vs, padding)
+            new_state = HybridState(
+                ssm=ssm_states, cache=KVCache(k=ks, v=vs),
+                pos=jnp.asarray(S, jnp.int32),
+            )
+            return x, new_state
+        # decode
+        assert state is not None
+        x, (ssm_states, nk, nv) = scan_or_unroll(
+            site_body,
+            x0,
+            (params["backbone"], params["lora"], state.ssm, state.cache.k, state.cache.v),
+            cfg.scan_layers,
+        )
+        # ys carry only the (sites, B, 1, kv, hd) new slices; single in-place
+        # update of the stacked cache outside the scan (§Perf B3 pattern)
+        new_k = jax.lax.dynamic_update_slice(
+            state.cache.k, nk.astype(state.cache.k.dtype), (0, 0, state.pos, 0, 0))
+        new_v = jax.lax.dynamic_update_slice(
+            state.cache.v, nv.astype(state.cache.v.dtype), (0, 0, state.pos, 0, 0))
+        new_state = HybridState(
+            ssm=ssm_states, cache=KVCache(k=new_k, v=new_v), pos=state.pos + 1
+        )
+        return x, new_state
+
+    # ------------------------------------------------------------------
+    def forward(self, params, batch):
+        cfg = self.cfg
+        x = layers.embed_tokens(params["embed"], batch["tokens"], jnp.dtype(cfg.dtype))
+        x = constrain(x, ("batch", "seq", "act_embed"))
+        x, _ = self._run(params, x, "train")
+        x = layers.apply_norm(cfg, params["final_norm"], x)
+        logits = layers.lm_logits(params["embed"], x, cfg.tie_embeddings)
+        return constrain(logits, ("batch", "seq", "vocab_act")), _zero_metrics()
+
+    def prefill(self, params, batch, max_len: int):
+        cfg = self.cfg
+        x = layers.embed_tokens(params["embed"], batch["tokens"], jnp.dtype(cfg.dtype))
+        x, state = self._run(params, x, "prefill", max_len=max_len)
+        x = layers.apply_norm(cfg, params["final_norm"], x[:, -1:])
+        logits = layers.lm_logits(params["embed"], x, cfg.tie_embeddings)
+        return logits, state
+
+    def decode_step(self, params, state: HybridState, batch):
+        cfg = self.cfg
+        x = layers.embed_tokens(params["embed"], batch["tokens"], jnp.dtype(cfg.dtype))
+        x, new_state = self._run(params, x, "decode", state=state)
+        x = layers.apply_norm(cfg, params["final_norm"], x)
+        logits = layers.lm_logits(params["embed"], x, cfg.tie_embeddings)
+        return logits, new_state
+
+    # ------------------------------------------------------------------
+    def init_decode_state(self, batch_size: int, max_len: int) -> HybridState:
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+
+        def stack2(x):
+            return jnp.broadcast_to(
+                x, (self.n_sites, self.per_site) + x.shape
+            )
+
+        base = ssm.init_ssm_state(cfg, batch_size)
+        dtype = jnp.dtype(cfg.dtype)
+        return HybridState(
+            ssm=jax.tree.map(stack2, base),
+            cache=KVCache(
+                k=jnp.zeros((self.n_sites, batch_size, max_len, cfg.num_kv_heads, hd), dtype),
+                v=jnp.zeros((self.n_sites, batch_size, max_len, cfg.num_kv_heads, hd), dtype),
+            ),
+            pos=jnp.zeros((), jnp.int32),
+        )
+
+    def decode_state_logical(self, long_context: bool = False) -> HybridState:
+        base = ssm.ssm_state_logical()
+        batch_lg = "batch_rep" if long_context else "batch"
+        stacked = jax.tree.map(
+            lambda lg: ("sites", "layers") + (batch_lg,) + tuple(lg[1:]),
+            base,
+            is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x),
+        )
+        if long_context:
+            clg = ("sites", "batch_rep", "kv_seq_data", "cache_heads", "cache_hd")
+        else:
+            clg = ("sites", "batch", "kv_seq", "cache_heads", "cache_hd")
+        return HybridState(ssm=stacked, cache=KVCache(k=clg, v=clg), pos=None)

@@ -1,0 +1,174 @@
+"""Shared building blocks: norms, embeddings, rotary variants, linear."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models.params import ParamDef
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_plan(cfg: ModelConfig, dim: int | None = None) -> dict:
+    d = dim or cfg.d_model
+    plan = {"scale": ParamDef((d,), ("act_embed",), init="ones", dtype=jnp.float32)}
+    if cfg.norm == "layernorm":
+        plan["bias"] = ParamDef((d,), ("act_embed",), init="zeros", dtype=jnp.float32)
+    return plan
+
+
+def apply_norm(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    """fp32 norm (stats and chain).  A bf16-chain variant was measured and
+    REFUTED on the dense-train roofline (+6.6% memory term: XLA was already
+    CSE-ing the fp32 chains and mixed precision added converts) — see
+    EXPERIMENTS.md §Perf C3; kept fp32 for numerics."""
+    x32 = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(ms + eps) * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear
+# ---------------------------------------------------------------------------
+
+
+def linear_plan(
+    d_in: int,
+    d_out: int,
+    logical: tuple,
+    *,
+    bias: bool = False,
+    bias_logical: tuple | None = None,
+    dtype=jnp.bfloat16,
+    scale: float | None = None,
+) -> dict:
+    plan = {"w": ParamDef((d_in, d_out), logical, dtype=dtype, scale=scale)}
+    if bias:
+        plan["b"] = ParamDef((d_out,), bias_logical or (logical[-1],), init="zeros", dtype=dtype)
+    return plan
+
+
+def apply_linear(p: dict, x: jax.Array) -> jax.Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings: standard / partial / M-RoPE
+# ---------------------------------------------------------------------------
+
+
+def rotary_dims(cfg: ModelConfig) -> int:
+    hd = cfg.resolved_head_dim
+    r = int(hd * cfg.rotary_pct)
+    return r - (r % 2)
+
+
+def _inv_freq(cfg: ModelConfig, r: int) -> jax.Array:
+    return 1.0 / (cfg.rope_theta ** (np.arange(0, r, 2, dtype=np.float32) / r))
+
+
+def rope_angles(cfg: ModelConfig, positions: jax.Array) -> jax.Array:
+    """positions (..., S) -> angles (..., S, r//2) in fp32."""
+    r = rotary_dims(cfg)
+    inv = _inv_freq(cfg, r)
+    return positions[..., None].astype(jnp.float32) * inv
+
+
+def mrope_angles(cfg: ModelConfig, positions3: jax.Array, sections: tuple[int, ...]) -> jax.Array:
+    """M-RoPE: positions3 (3, B, S) -> angles (B, S, r//2).
+
+    Frequency slots are split into `sections` (t, h, w); each slot's angle uses
+    the corresponding position stream.  [arXiv:2409.12191]
+    """
+    r = rotary_dims(cfg)
+    assert sum(sections) == r // 2, (sections, r)
+    inv = _inv_freq(cfg, r)  # (r//2,)
+    ang = positions3[..., None].astype(jnp.float32) * inv  # (3, B, S, r//2)
+    sel = np.concatenate(
+        [np.full((s,), i, dtype=np.int32) for i, s in enumerate(sections)]
+    )  # (r//2,) which stream each freq slot reads
+    return jnp.take_along_axis(
+        jnp.moveaxis(ang, 0, -1), sel[None, None, :, None], axis=-1
+    )[..., 0]
+
+
+def mrope_sections(cfg: ModelConfig) -> tuple[int, int, int]:
+    half = rotary_dims(cfg) // 2
+    t = half // 4
+    h = (half - t) // 2
+    w = half - t - h
+    return (t, h, w)
+
+
+def apply_rotary(x: jax.Array, angles: jax.Array, total_dim: int) -> jax.Array:
+    """Apply rotary to the first `2*angles.shape[-1]` dims of x (B,S,H,D)."""
+    r2 = angles.shape[-1]
+    rot, rest = x[..., : 2 * r2], x[..., 2 * r2 :]
+    x1 = rot[..., 0::2].astype(jnp.float32)
+    x2 = rot[..., 1::2].astype(jnp.float32)
+    cos = jnp.cos(angles)[..., None, :]  # (B,S,1,r2) broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(rot.shape).astype(x.dtype)
+    return jnp.concatenate([out, rest], axis=-1) if rest.shape[-1] else out
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+
+def embed_plan(cfg: ModelConfig) -> dict:
+    v = cfg.padded_vocab
+    scale = float(cfg.d_model) ** -0.5  # keeps tied-head logits O(1) at init
+    plan = {"embedding": ParamDef((v, cfg.d_model), ("vocab", "embed"), scale=scale)}
+    if not cfg.tie_embeddings:
+        plan["head"] = ParamDef((cfg.d_model, v), ("embed", "vocab"))
+    return plan
+
+
+def embed_tokens(p: dict, tokens: jax.Array, dtype) -> jax.Array:
+    return jnp.take(p["embedding"], tokens, axis=0).astype(dtype)
+
+
+def lm_logits(p: dict, x: jax.Array, tie: bool) -> jax.Array:
+    """Returns logits over the padded vocab, sharded over 'model' on vocab."""
+    if tie:
+        w = p["embedding"].astype(x.dtype).T
+    else:
+        w = p["head"].astype(x.dtype)
+    return x @ w
+
+
+def learned_pos_plan(cfg: ModelConfig, max_len: int) -> dict:
+    return {"pos": ParamDef((max_len, cfg.d_model), (None, "embed"), scale=0.02)}
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+ACTS = {"silu": jax.nn.silu, "gelu": gelu, "relu": jax.nn.relu}

@@ -1,0 +1,34 @@
+"""Dense MLPs: gated (SwiGLU/GeGLU) and plain two-layer."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers
+
+
+def mlp_plan(cfg: ModelConfig, d_ff: int | None = None, d_in: int | None = None) -> dict:
+    d = d_in or cfg.d_model
+    f = d_ff or cfg.d_ff
+    if cfg.glu:
+        return {
+            "gate": layers.linear_plan(d, f, ("embed", "ffn"), bias=cfg.mlp_bias),
+            "up": layers.linear_plan(d, f, ("embed", "ffn"), bias=cfg.mlp_bias),
+            "down": layers.linear_plan(f, d, ("ffn", "embed"), bias=cfg.mlp_bias),
+        }
+    return {
+        "up": layers.linear_plan(d, f, ("embed", "ffn"), bias=cfg.mlp_bias),
+        "down": layers.linear_plan(f, d, ("ffn", "embed"), bias=cfg.mlp_bias),
+    }
+
+
+def apply_mlp(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    act = layers.ACTS[cfg.act]
+    if cfg.glu:
+        h = act(layers.apply_linear(p["gate"], x)) * layers.apply_linear(p["up"], x)
+    else:
+        h = act(layers.apply_linear(p["up"], x))
+    h = constrain(h, ("batch", "seq", "act_ffn"))
+    return layers.apply_linear(p["down"], h)

@@ -1,0 +1,93 @@
+"""Declarative parameter plans.
+
+A *plan* is a nested dict mapping names to :class:`ParamDef` leaves.  One plan
+drives three things so init, dry-run specs and sharding can never disagree:
+
+* ``init_params(plan, key)``        -> pytree of initialized jnp arrays
+* ``param_specs(plan)``             -> pytree of jax.ShapeDtypeStruct
+* ``param_logical(plan)``           -> pytree of logical-axis tuples
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    logical: tuple[str | None, ...]
+    init: str = "normal"  # normal | zeros | ones | uniform_scaled
+    scale: float | None = None  # stddev; None -> 1/sqrt(fan_in) with fan_in=shape[-2]
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.logical):
+            raise ValueError(f"shape {self.shape} vs logical {self.logical} rank mismatch")
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _tree_map(fn, plan):
+    return jax.tree.map(fn, plan, is_leaf=is_def)
+
+
+def _resolved_scale(d: ParamDef) -> float:
+    if d.scale is not None:
+        return d.scale
+    fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+    return 1.0 / float(np.sqrt(max(fan_in, 1)))
+
+
+def init_params(plan: Any, key: jax.Array) -> Any:
+    leaves, treedef = jax.tree.flatten(plan, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+
+    def _one(d: ParamDef, k):
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, d.dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, d.dtype)
+        if d.init == "normal":
+            return (jax.random.normal(k, d.shape, jnp.float32) * _resolved_scale(d)).astype(d.dtype)
+        if d.init == "a_log":  # mamba2: A ~ Uniform(1, 16), store log A
+            a = jax.random.uniform(k, d.shape, jnp.float32, 1.0, 16.0)
+            return jnp.log(a).astype(d.dtype)
+        if d.init == "uniform_scaled":  # e.g. mamba dt bias
+            lo, hi = 1e-3, 1e-1
+            u = jax.random.uniform(k, d.shape, jnp.float32)
+            dt = jnp.exp(u * (np.log(hi) - np.log(lo)) + np.log(lo))
+            # store softplus^-1(dt)
+            return (dt + jnp.log(-jnp.expm1(-dt))).astype(d.dtype)
+        raise ValueError(f"unknown init {d.init!r}")
+
+    return jax.tree.unflatten(treedef, [_one(d, k) for d, k in zip(leaves, keys)])
+
+
+def param_specs(plan: Any) -> Any:
+    return _tree_map(lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), plan)
+
+
+def param_logical(plan: Any) -> Any:
+    return _tree_map(lambda d: d.logical, plan)
+
+
+def stack_plan(plan: Any, n: int, axis_name: str = "layers") -> Any:
+    """Prepend a stacked (scan) dimension to every leaf of a plan."""
+    return _tree_map(
+        lambda d: dataclasses.replace(
+            d, shape=(n, *d.shape), logical=(axis_name, *d.logical)
+        ),
+        plan,
+    )
+
+
+def count_params(tree: Any) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(tree)))

@@ -1,0 +1,30 @@
+"""scan-or-unroll: one body, two lowerings.
+
+Production lowers use ``lax.scan`` (depth-independent HLO, fast compiles).
+The roofline lowers unroll instead, because XLA's ``cost_analysis`` counts a
+while-loop body once regardless of trip count (verified in this environment;
+see EXPERIMENTS.md §Dry-run) — unrolled small-depth lowers give exact
+per-layer costs which are then extrapolated linearly in depth."""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def scan_or_unroll(body: Callable, carry: Any, xs: Any, use_scan: bool = True):
+    """Like ``lax.scan(body, carry, xs)`` with a python-loop fallback."""
+    if use_scan:
+        return jax.lax.scan(body, carry, xs)
+    length = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(length):
+        xsl = jax.tree.map(lambda t: t[i], xs)
+        carry, y = body(carry, xsl)
+        ys.append(y)
+    if not ys or all(y is None for y in jax.tree.leaves(ys[0], is_leaf=lambda x: x is None)):
+        return carry, None
+    stacked = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    return carry, stacked

@@ -1,0 +1,260 @@
+"""Mamba-2 (SSD, state-space duality) block.  [arXiv:2405.21060]
+
+Training/prefill uses the chunked SSD algorithm: a quadratic intra-chunk term
+plus a sequential inter-chunk state recurrence (``lax.scan`` over chunks —
+keeps the HLO size independent of sequence length).  Decode is the O(1)
+recurrent update.
+
+Projection layout note: instead of mamba's fused ``in_proj`` we keep separate
+z/x/B/C/dt projections (depthwise conv commutes with channel splits), so the
+head axis can be annotated and sharded cleanly over the 'model' mesh axis.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, SSMConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers
+from repro.models.params import ParamDef
+
+
+class SSMState(NamedTuple):
+    """Decode-time recurrent state."""
+
+    h: jax.Array  # (B, H, P, N) ssm state
+    conv_x: jax.Array  # (B, w-1, H, P) conv tail for x
+    conv_B: jax.Array  # (B, w-1, G, N)
+    conv_C: jax.Array  # (B, w-1, G, N)
+
+
+def _dims(cfg: ModelConfig) -> tuple[int, int, int, int]:
+    s = cfg.ssm
+    assert s is not None
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    return d_in, H, s.head_dim, s.state_dim
+
+
+def ssm_plan(cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    assert s is not None
+    D = cfg.d_model
+    d_in, H, P, N = _dims(cfg)
+    G, w = s.n_groups, s.conv_width
+    return {
+        "in_z": ParamDef((D, H, P), ("embed", "ssm_heads", "ssm_hd")),
+        "in_x": ParamDef((D, H, P), ("embed", "ssm_heads", "ssm_hd")),
+        "in_B": ParamDef((D, G, N), ("embed", None, None)),
+        "in_C": ParamDef((D, G, N), ("embed", None, None)),
+        "in_dt": ParamDef((D, H), ("embed", "ssm_heads")),
+        "conv_x": ParamDef((w, H, P), (None, "ssm_heads", "ssm_hd"), scale=0.5),
+        "conv_x_b": ParamDef((H, P), ("ssm_heads", "ssm_hd"), init="zeros"),
+        "conv_B": ParamDef((w, G, N), (None, None, None), scale=0.5),
+        "conv_B_b": ParamDef((G, N), (None, None), init="zeros"),
+        "conv_C": ParamDef((w, G, N), (None, None, None), scale=0.5),
+        "conv_C_b": ParamDef((G, N), (None, None), init="zeros"),
+        "A_log": ParamDef((H,), ("ssm_heads",), init="a_log", dtype=jnp.float32),
+        "dt_bias": ParamDef((H,), ("ssm_heads",), init="uniform_scaled", dtype=jnp.float32),
+        "D_skip": ParamDef((H,), ("ssm_heads",), init="ones", dtype=jnp.float32),
+        "gate_norm": ParamDef((H, P), ("ssm_heads", "ssm_hd"), init="ones", dtype=jnp.float32),
+        "out": ParamDef((H, P, D), ("ssm_heads", "ssm_hd", "embed")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv (width w, via shifted adds — w is 4)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array, tail: jax.Array | None = None):
+    """x (B,S,...chan), w (width,...chan). Optional tail (B,width-1,...chan)
+    is the sequence prefix (decode streaming). Returns same-shape output."""
+    width = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], width - 1) + x.shape[2:], x.dtype)
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)  # (B, S+w-1, ...)
+    S = x.shape[1]
+    out = sum(
+        jax.lax.dynamic_slice_in_dim(xp, i, S, axis=1) * w[i].astype(x.dtype)
+        for i in range(width)
+    )
+    out = out + b.astype(x.dtype)
+    new_tail = xp[:, -(width - 1) :] if width > 1 else tail
+    return jax.nn.silu(out), new_tail
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan
+# ---------------------------------------------------------------------------
+
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """dA (B,Q,H) -> (B,H,Q,Q) lower-tri segment sums: out[i,j]=sum_{m=j+1..i} dA_m."""
+    cs = jnp.cumsum(dA, axis=1)  # (B,Q,H)
+    cs = jnp.moveaxis(cs, -1, 1)  # (B,H,Q)
+    diff = cs[..., :, None] - cs[..., None, :]  # (B,H,Q,Q)
+    Q = dA.shape[1]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _chunk_step(carry_state, chunk, *, G: int):
+    """One SSD chunk.  carry_state (B,H,P,N); chunk = (xdt, dA, Bc, Cc)."""
+    xdt, dA, Bc, Cc = chunk  # (B,Q,H,P), (B,Q,H), (B,Q,G,N), (B,Q,G,N)
+    B_, Q, H, P = xdt.shape
+    rep = H // G
+    Bh = jnp.repeat(Bc, rep, axis=2)  # (B,Q,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=2)
+
+    cs = jnp.cumsum(dA, axis=1)  # (B,Q,H)
+    L = jnp.exp(_segsum(dA))  # (B,H,Q,Q)
+    scores = jnp.einsum("bqhn,bshn->bhqs", Ch, Bh, preferred_element_type=jnp.float32)
+    M = (scores * L).astype(xdt.dtype)
+    y_diag = jnp.einsum("bhqs,bshp->bqhp", M, xdt)
+
+    # inter-chunk: contribution of the carried state
+    decay_out = jnp.exp(cs).astype(xdt.dtype)  # (B,Q,H)
+    y_off = jnp.einsum("bqhn,bhpn,bqh->bqhp", Ch, carry_state.astype(xdt.dtype), decay_out)
+
+    # next state
+    decay_tail = jnp.exp(cs[:, -1:, :] - cs).astype(xdt.dtype)  # (B,Q,H)
+    new_state = carry_state * jnp.exp(cs[:, -1, :]).astype(carry_state.dtype)[:, :, None, None]
+    new_state = new_state + jnp.einsum(
+        "bshn,bsh,bshp->bhpn", Bh, decay_tail, xdt, preferred_element_type=jnp.float32
+    ).astype(carry_state.dtype)
+    y = constrain(y_diag + y_off, ("batch", "seq", "ssm_heads_act", "ssm_hd_act"))
+    return new_state, y
+
+
+def ssd_scan(
+    x: jax.Array,  # (B,S,H,P) input (pre-dt)
+    dt: jax.Array,  # (B,S,H) softplus'd
+    A: jax.Array,  # (H,) negative
+    Bm: jax.Array,  # (B,S,G,N)
+    Cm: jax.Array,  # (B,S,G,N)
+    chunk_size: int,
+    init_state: jax.Array | None = None,
+    use_scan: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    B_, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(chunk_size, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    xdt = (x * dt[..., None].astype(x.dtype)).astype(x.dtype)
+    dA = (dt * A).astype(jnp.float32)  # (B,S,H)
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape((B_, nc, Q) + t.shape[2:]), 1, 0)
+
+    chunks = tuple(map(to_chunks, (xdt, dA, Bm, Cm)))
+    state0 = (
+        init_state
+        if init_state is not None
+        else jnp.zeros((B_, H, P, N), jnp.float32)
+    )
+
+    def step(carry, ch):
+        return _chunk_step(carry, ch, G=G)
+
+    from repro.models.scan_utils import scan_or_unroll
+
+    final_state, ys = scan_or_unroll(step, state0, chunks, use_scan)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B_, S, H, P)
+    return y, final_state
+
+
+# ---------------------------------------------------------------------------
+# Block forward
+# ---------------------------------------------------------------------------
+
+
+def _project_all(cfg, p, x):
+    z = jnp.einsum("bsd,dhp->bshp", x, p["in_z"].astype(x.dtype))
+    xs = jnp.einsum("bsd,dhp->bshp", x, p["in_x"].astype(x.dtype))
+    Bm = jnp.einsum("bsd,dgn->bsgn", x, p["in_B"].astype(x.dtype))
+    Cm = jnp.einsum("bsd,dgn->bsgn", x, p["in_C"].astype(x.dtype))
+    dt = jnp.einsum("bsd,dh->bsh", x, p["in_dt"].astype(x.dtype))
+    return z, xs, Bm, Cm, dt
+
+
+def apply_ssm(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,
+    state: SSMState | None = None,
+    return_state: bool = False,
+):
+    """Full mamba2 block on (B,S,D). When ``state`` given, continues the
+    stream (decode/prefill-continuation). Returns (out, new_state|None)."""
+    s = cfg.ssm
+    assert s is not None
+    d_in, H, P, N = _dims(cfg)
+
+    z, xs, Bm, Cm, dt = _project_all(cfg, p, x)
+    xs = constrain(xs, ("batch", "seq", "ssm_heads_act", "ssm_hd_act"))
+    z = constrain(z, ("batch", "seq", "ssm_heads_act", "ssm_hd_act"))
+
+    tails = (state.conv_x, state.conv_B, state.conv_C) if state is not None else (None, None, None)
+    xs, tx = causal_conv(xs, p["conv_x"], p["conv_x_b"], tails[0])
+    Bm, tb = causal_conv(Bm, p["conv_B"], p["conv_B_b"], tails[1])
+    Cm, tc = causal_conv(Cm, p["conv_C"], p["conv_C_b"], tails[2])
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])  # (H,)
+
+    init_h = state.h if state is not None else None
+    if x.shape[1] == 1 and state is not None:
+        # decode fast path: O(1) recurrent update
+        dA = jnp.exp(dt[:, 0] * A)  # (B,H)
+        xdt = xs[:, 0] * dt[:, 0, :, None].astype(xs.dtype)  # (B,H,P)
+        Bh = jnp.repeat(Bm[:, 0], H // s.n_groups, axis=1)  # (B,H,N)
+        Ch = jnp.repeat(Cm[:, 0], H // s.n_groups, axis=1)
+        h_new = state.h * dA[..., None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", xdt.astype(jnp.float32), Bh.astype(jnp.float32)
+        )
+        y = jnp.einsum("bhpn,bhn->bhp", h_new.astype(xs.dtype), Ch)[:, None]  # (B,1,H,P)
+        final_h = h_new
+    else:
+        y, final_h = ssd_scan(
+            xs, dt, A, Bm, Cm, s.chunk_size, init_h, use_scan=cfg.scan_layers
+        )
+
+    y = y + xs * p["D_skip"][:, None].astype(xs.dtype)
+    y = layers.rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bshp,hpd->bsd", y, p["out"].astype(y.dtype))
+    out = constrain(out, ("batch", "seq", "act_embed"))
+
+    new_state = None
+    if return_state:
+        new_state = SSMState(h=final_h, conv_x=tx, conv_B=tb, conv_C=tc)
+    return out, new_state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int) -> SSMState:
+    s = cfg.ssm
+    assert s is not None
+    d_in, H, P, N = _dims(cfg)
+    w = s.conv_width
+    return SSMState(
+        h=jnp.zeros((batch, H, P, N), jnp.float32),
+        conv_x=jnp.zeros((batch, w - 1, H, P), jnp.bfloat16),
+        conv_B=jnp.zeros((batch, w - 1, s.n_groups, N), jnp.bfloat16),
+        conv_C=jnp.zeros((batch, w - 1, s.n_groups, N), jnp.bfloat16),
+    )
+
+
+def ssm_state_logical() -> SSMState:
+    return SSMState(
+        h=("batch", "ssm_heads_act", "ssm_hd_act", None),
+        conv_x=("batch", None, "ssm_heads_act", "ssm_hd_act"),
+        conv_B=("batch", None, None, None),
+        conv_C=("batch", None, None, None),
+    )

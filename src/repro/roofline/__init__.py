@@ -1,0 +1,8 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed)."""
+
+from repro.roofline.analysis import (  # noqa: F401
+    HW_V5E,
+    RooflineResult,
+    analyze_compiled,
+    collective_bytes_from_hlo,
+)

@@ -1,0 +1,150 @@
+"""Assemble EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run JSONs.
+
+    PYTHONPATH=src python -m repro.roofline.report [--dir experiments/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.config import SHAPES, get_arch, shape_applicable
+from repro.launch.cells import SHAPE_ORDER
+from repro.roofline.analysis import HW_V5E, model_flops
+
+DEFAULT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+
+def load_cells(dirpath: str) -> dict[tuple[str, str, str], dict]:
+    out = {}
+    for path in glob.glob(os.path.join(dirpath, "*.json")):
+        d = json.load(open(path))
+        tag = "pod2" if d.get("multi_pod") else "pod1"
+        out[(d["arch"], d["shape"], tag)] = d
+    return out
+
+
+def _fmt_t(seconds: float) -> str:
+    if seconds >= 1.0:
+        return f"{seconds:.2f}s"
+    return f"{seconds * 1e3:.2f}ms"
+
+
+def _fmt_b(b: float) -> str:
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if b >= div:
+            return f"{b / div:.2f}{unit}"
+    return f"{b:.0f}B"
+
+
+def dryrun_table(cells: dict) -> str:
+    """§Dry-run: compile proof per cell per mesh + memory analysis."""
+    from repro.configs import ASSIGNED_ARCHS
+
+    lines = [
+        "| arch | shape | mesh | compile | lower+compile s | args/dev | temp/dev | collective ops |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_arch(arch)
+        for shape in SHAPE_ORDER:
+            ok, why = shape_applicable(cfg, SHAPES[shape])
+            if not ok:
+                lines.append(f"| {arch} | {shape} | — | SKIP | — | — | — | {why} |")
+                continue
+            for tag in ("pod1", "pod2"):
+                d = cells.get((arch, shape, tag))
+                if d is None:
+                    lines.append(f"| {arch} | {shape} | {tag} | **MISSING** | | | | |")
+                    continue
+                ops = d.get("collective_ops", {})
+                ops_s = " ".join(f"{k.replace('all-', 'a')}:{v}" for k, v in sorted(ops.items()))
+                lines.append(
+                    f"| {arch} | {shape} | {tag} | OK | "
+                    f"{d.get('lower_s', 0) + d.get('compile_s', 0):.0f} | "
+                    f"{_fmt_b(d.get('arg_bytes', 0))} | {_fmt_b(d.get('temp_bytes', 0))} | {ops_s} |"
+                )
+    return "\n".join(lines)
+
+
+def roofline_table(cells: dict) -> str:
+    """§Roofline: per (arch x shape), single-pod, extrapolated exact costs."""
+    from repro.configs import ASSIGNED_ARCHS
+
+    lines = [
+        "| arch | shape | t_compute | t_memory | t_collective | bottleneck | "
+        "MODEL_FLOPS | useful ratio | roofline fraction | one-line fix |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_arch(arch)
+        for shape in SHAPE_ORDER:
+            ok, _ = shape_applicable(cfg, SHAPES[shape])
+            if not ok:
+                continue
+            d = cells.get((arch, shape, "pod1"))
+            if d is None or "extrapolated" not in d:
+                lines.append(f"| {arch} | {shape} | **MISSING** | | | | | | | |")
+                continue
+            ex = d["extrapolated"]
+            mf = model_flops(cfg, SHAPES[shape])
+            t_dom = max(ex["t_compute"], ex["t_memory"], ex["t_collective"])
+            # roofline fraction: ideal compute time (MODEL_FLOPS at peak)
+            # over the dominant modelled term
+            t_ideal = mf / (256 * HW_V5E.peak_flops)
+            frac = t_ideal / t_dom if t_dom else 0.0
+            fix = {
+                "memory": "cut bytes: fuse/blocked attention, bf16 softmax, remat policy",
+                "compute": "cut waste flops: drop recompute, pad less, fuse gates",
+                "collective": "reshard: fewer all-gathers, overlap, 2D sharding",
+            }[ex["bottleneck"]]
+            lines.append(
+                f"| {arch} | {shape} | {_fmt_t(ex['t_compute'])} | {_fmt_t(ex['t_memory'])} | "
+                f"{_fmt_t(ex['t_collective'])} | **{ex['bottleneck']}** | {mf:.2e} | "
+                f"{ex['useful_ratio']:.3f} | {frac:.3f} | {fix} |"
+            )
+    return "\n".join(lines)
+
+
+def pick_hillclimb(cells: dict) -> list[tuple[str, str, str]]:
+    """worst roofline fraction, most collective-bound, most paper-representative."""
+    from repro.configs import ASSIGNED_ARCHS
+
+    scored = []
+    for (arch, shape, tag), d in cells.items():
+        if tag != "pod1" or "extrapolated" not in d:
+            continue
+        ex = d["extrapolated"]
+        cfg = get_arch(arch)
+        mf = model_flops(cfg, SHAPES[shape])
+        t_dom = max(ex["t_compute"], ex["t_memory"], ex["t_collective"])
+        t_ideal = mf / (256 * HW_V5E.peak_flops)
+        frac = t_ideal / t_dom if t_dom else 0
+        coll_share = ex["t_collective"] / t_dom if t_dom else 0
+        scored.append((arch, shape, frac, coll_share))
+    worst = min(scored, key=lambda s: s[2])
+    coll = max(scored, key=lambda s: s[3])
+    return [
+        (worst[0], worst[1], "worst roofline fraction"),
+        (coll[0], coll[1], "most collective-bound"),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=DEFAULT_DIR)
+    args = ap.parse_args()
+    cells = load_cells(args.dir)
+    print("## §Dry-run\n")
+    print(dryrun_table(cells))
+    print("\n## §Roofline\n")
+    print(roofline_table(cells))
+    print("\n## hillclimb candidates\n")
+    for arch, shape, why in pick_hillclimb(cells):
+        print(f"* {arch} x {shape} — {why}")
+
+
+if __name__ == "__main__":
+    main()

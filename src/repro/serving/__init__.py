@@ -1,0 +1,3 @@
+"""Serving: KV-cache decode engine over the model zoo."""
+
+from repro.serving.engine import ServeEngine  # noqa: F401

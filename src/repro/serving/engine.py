@@ -1,0 +1,70 @@
+"""Batched decode engine: prefill once, then jitted single-token steps.
+
+The serving counterpart of the training service: used by the ``serve.py``
+launcher, the decode-shape dry-runs, and the quickstart example.  Sampling is
+greedy or temperature; the decode step is one jitted SPMD program whose state
+(KV caches / SSM states) is donated so updates are in-place on device.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import model_zoo
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params: Any, max_len: int = 512):
+        self.cfg = cfg
+        self.model = model_zoo.build_model(cfg)
+        self.params = params
+        self.max_len = max_len
+        self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
+
+    # ------------------------------------------------------------------
+    def _sample(self, logits: jax.Array, key, temperature: float) -> jax.Array:
+        logits = logits[:, -1, : self.cfg.vocab_size].astype(jnp.float32)
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)
+
+    def _decode_batch(self, tokens: jax.Array, pos: int) -> dict:
+        batch = {"tokens": tokens[:, None]}
+        if self.cfg.rope_mode == "mrope":
+            B = tokens.shape[0]
+            p = jnp.full((3, B, 1), pos, jnp.int32)
+            batch["positions3"] = p
+        return batch
+
+    # ------------------------------------------------------------------
+    def generate(
+        self,
+        prompt_batch: dict,
+        steps: int,
+        temperature: float = 0.0,
+        seed: int = 0,
+    ) -> jax.Array:
+        """Prefill on the prompt batch, then decode `steps` tokens.
+
+        Returns (B, steps) int32 generated tokens."""
+        logits, state = self.model.prefill(self.params, prompt_batch, self.max_len)
+        pos = prompt_batch["tokens"].shape[1]
+        if self.cfg.family == "vlm" and "patches" in prompt_batch:
+            pos += prompt_batch["patches"].shape[1]
+        key = jax.random.PRNGKey(seed)
+        outs = []
+        key, k = jax.random.split(key)
+        tok = self._sample(logits, k, temperature)
+        for _ in range(steps):
+            outs.append(tok)
+            batch = self._decode_batch(tok, pos)
+            logits, state = self._decode(self.params, state, batch)
+            pos += 1
+            key, k = jax.random.split(key)
+            tok = self._sample(logits, k, temperature)
+        return jnp.stack(outs, axis=1)

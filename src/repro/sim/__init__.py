@@ -1,0 +1,3 @@
+"""Distributed replay simulation service (paper §3)."""
+
+from repro.sim.replay import PerceptionModel, ReplaySimulator  # noqa: F401

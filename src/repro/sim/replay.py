@@ -1,0 +1,169 @@
+"""Distributed replay simulation (paper §3).
+
+The paper replays recorded ROS-bag data through a candidate algorithm on many
+Spark executors and aggregates the results.  Here:
+
+* the "ROS node" is a jitted perception step (a CNN over camera frames +
+  a LiDAR featurizer) — the algorithm binary under test;
+* the "bag" is an RDD of BinPipe-coded drive-log records
+  (:func:`repro.data.synthetic.drive_log_dataset`);
+* the Spark executor is a data-parallel shard: each partition is decoded,
+  stacked (BinPipeRDD's batch path) and pushed through the model; per-
+  partition results are aggregated on the driver, Spark-``collect`` style;
+* A/B testing a *new* algorithm against the deployed one (the paper's
+  "quick verification ... before on-road testing") is a paired replay run
+  with per-record disagreement stats.
+
+``simulate`` is embarrassingly parallel over partitions; wall-clock scaling
+with shard count is benchmarked in ``benchmarks/sim_scaling.py`` (Fig. 6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.binpipe import stack_batch
+from repro.core.rdd import ShardedDataset
+from repro.models.params import ParamDef, init_params as _init_params
+
+
+# ---------------------------------------------------------------------------
+# Perception model (the paper's CNN workload)
+# ---------------------------------------------------------------------------
+
+
+class PerceptionModel:
+    """Small detection CNN: 3 conv blocks + pooled head -> per-frame
+    obstacle score grid.  ``use_pallas=True`` routes convolutions through the
+    Pallas conv2d kernel (the §2.3 OpenCL offload analog)."""
+
+    def __init__(self, channels: tuple[int, ...] = (16, 32, 64), num_out: int = 8,
+                 use_pallas: bool = False):
+        self.channels = channels
+        self.num_out = num_out
+        self.use_pallas = use_pallas
+
+    def plan(self, in_ch: int = 3) -> dict:
+        plan: dict[str, Any] = {}
+        c_in = in_ch
+        for i, c in enumerate(self.channels):
+            plan[f"conv{i}"] = {
+                "w": ParamDef((3, 3, c_in, c), (None, None, None, None), scale=0.1,
+                              dtype=jnp.float32),
+                "b": ParamDef((c,), (None,), init="zeros", dtype=jnp.float32),
+            }
+            c_in = c
+        plan["head"] = {
+            "w": ParamDef((c_in, self.num_out), (None, None), dtype=jnp.float32),
+            "b": ParamDef((self.num_out,), (None,), init="zeros", dtype=jnp.float32),
+        }
+        return plan
+
+    def init(self, key: jax.Array, in_ch: int = 3):
+        return _init_params(self.plan(in_ch), key)
+
+    def _conv(self, p, x):
+        if self.use_pallas:
+            from repro.kernels.conv2d.ops import conv2d
+
+            return conv2d(x, p["w"], p["b"], block_co=min(128, p["w"].shape[-1]))
+        out = jax.lax.conv_general_dilated(
+            x, p["w"], (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+        return out + p["b"]
+
+    def apply(self, params, images: jax.Array) -> jax.Array:
+        """images (B, H, W, 3) -> obstacle scores (B, num_out)."""
+        x = images
+        for i in range(len(self.channels)):
+            x = jax.nn.relu(self._conv(params[f"conv{i}"], x))
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+            )
+        x = jnp.mean(x, axis=(1, 2))  # global average pool
+        return x @ params["head"]["w"] + params["head"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# Replay harness
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ReplayReport:
+    partitions: int
+    frames: int
+    mean_score: float
+    score_std: float
+    max_score: float
+    wall_time_s: float
+    per_partition_s: list[float]
+
+
+@dataclasses.dataclass
+class ABReport:
+    frames: int
+    mean_abs_diff: float
+    decision_flips: int
+    flip_rate: float
+
+
+class ReplaySimulator:
+    def __init__(self, model: PerceptionModel, params: Any):
+        self.model = model
+        self.params = params
+        self._step = jax.jit(self.model.apply)
+
+    def _run_partition(self, records: list[dict]) -> np.ndarray:
+        batch = stack_batch(records, ["image"])
+        scores = self._step(self.params, jnp.asarray(batch["image"]))
+        return np.asarray(jax.block_until_ready(scores))
+
+    def simulate(self, dataset: ShardedDataset, partitions: Optional[list[int]] = None) -> ReplayReport:
+        """Replay every (or the given) partition through the model and
+        aggregate — one partition == one executor's chunk."""
+        parts = partitions if partitions is not None else list(range(dataset.num_partitions))
+        all_scores = []
+        per_part = []
+        t0 = time.perf_counter()
+        for p in parts:
+            tp = time.perf_counter()
+            recs = dataset.compute_partition(p)
+            all_scores.append(self._run_partition(recs))
+            per_part.append(time.perf_counter() - tp)
+        wall = time.perf_counter() - t0
+        scores = np.concatenate(all_scores) if all_scores else np.zeros((0, 1))
+        return ReplayReport(
+            partitions=len(parts),
+            frames=int(scores.shape[0]),
+            mean_score=float(scores.mean()),
+            score_std=float(scores.std()),
+            max_score=float(scores.max()),
+            wall_time_s=wall,
+            per_partition_s=per_part,
+        )
+
+    def ab_test(self, dataset: ShardedDataset, candidate_params: Any) -> ABReport:
+        """Replay the same data through deployed vs candidate parameters and
+        report decision disagreement (the new-algorithm qualification test)."""
+        diffs, flips, frames = [], 0, 0
+        for p in range(dataset.num_partitions):
+            recs = dataset.compute_partition(p)
+            batch = jnp.asarray(stack_batch(recs, ["image"])["image"])
+            a = self._step(self.params, batch)
+            b = self._step(candidate_params, batch)
+            diffs.append(np.asarray(jnp.abs(a - b).mean()))
+            flips += int(np.sum(np.argmax(np.asarray(a), 1) != np.argmax(np.asarray(b), 1)))
+            frames += batch.shape[0]
+        return ABReport(
+            frames=frames,
+            mean_abs_diff=float(np.mean(diffs)),
+            decision_flips=flips,
+            flip_rate=flips / max(frames, 1),
+        )

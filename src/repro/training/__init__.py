@@ -1,0 +1,1 @@
+"""Training service (paper §4): optimizer, losses, train step, checkpointing."""

@@ -1,0 +1,133 @@
+"""Checkpointing through the tiered store: atomic, async-durable, elastic.
+
+Layout per step (all inside one TieredStore namespace):
+
+    ckpt_<step>/manifest   — BinPipe record: step, leaf names, shapes, dtypes
+    ckpt_<step>/<leaf>     — raw little-endian array bytes
+    LATEST                 — committed step number (written LAST = the commit)
+
+Writes go to the store's MEM tier immediately and persist asynchronously
+(the Alluxio co-located-cache pattern); ``save(..., durable=True)`` blocks on
+the flush so the commit point is on persistent storage.  Restore is
+mesh-agnostic: arrays are loaded on host and ``jax.device_put`` with the
+*target* sharding — restoring a checkpoint onto a different mesh (elastic
+resize after node failure) is the same code path as a same-mesh restore.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.core.tiered_store import TieredStore
+
+
+def _flatten_with_names(tree: Any) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((name, leaf))
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, store: TieredStore, keep: int = 3, name: str = "ckpt"):
+        self.store = store
+        self.keep = keep
+        self.name = name
+
+    # ------------------------------------------------------------------
+    def save(self, state: Any, step: int, durable: bool = False) -> None:
+        leaves = _flatten_with_names(state)
+        manifest = {
+            "step": int(step),
+            "leaves": [
+                {
+                    "name": n,
+                    "shape": list(np.asarray(x).shape),
+                    "dtype": str(np.asarray(x).dtype),
+                }
+                for n, x in leaves
+            ],
+        }
+        prefix = f"{self.name}_{step}"
+        for n, x in leaves:
+            arr = np.asarray(x)
+            self.store.put(f"{prefix}/{n}", arr.tobytes())
+        self.store.put(f"{prefix}/manifest", json.dumps(manifest).encode())
+        # the commit point: LATEST names a fully-written checkpoint
+        self.store.put("LATEST", str(step).encode())
+        if durable:
+            self.store.flush()
+        self._gc(step)
+
+    def _gc(self, newest: int) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if len(steps) > self.keep else []:
+            if s == newest:
+                continue
+            man = self._manifest(s)
+            if man:
+                for leaf in man["leaves"]:
+                    self.store.delete(f"{self.name}_{s}/{leaf['name']}")
+                self.store.delete(f"{self.name}_{s}/manifest")
+
+    def all_steps(self) -> list[int]:
+        # scan manifests via LATEST + probing backwards is fragile; keep an index
+        idx = self.store.get(f"{self.name}_index")
+        steps = json.loads(idx.decode()) if idx else []
+        latest = self.latest_step()
+        if latest is not None and latest not in steps:
+            steps.append(latest)
+            steps.sort()
+        self.store.put(f"{self.name}_index", json.dumps(steps).encode(), persist=False)
+        return steps
+
+    def latest_step(self) -> Optional[int]:
+        raw = self.store.get("LATEST")
+        return int(raw.decode()) if raw else None
+
+    def _manifest(self, step: int) -> Optional[dict]:
+        raw = self.store.get(f"{self.name}_{step}/manifest")
+        return json.loads(raw.decode()) if raw else None
+
+    # ------------------------------------------------------------------
+    def restore(
+        self,
+        like: Any,
+        step: Optional[int] = None,
+        shardings: Any = None,
+    ) -> tuple[Any, int]:
+        """Restore into the structure of ``like`` (a pytree of arrays or
+        ShapeDtypeStructs).  ``shardings``, when given, is a matching pytree of
+        NamedShardings for the *target* mesh — elastic restores just pass the
+        new mesh's shardings."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError("no checkpoint committed")
+        man = self._manifest(step)
+        if man is None:
+            raise FileNotFoundError(f"manifest missing for step {step}")
+        by_name = {leaf["name"]: leaf for leaf in man["leaves"]}
+
+        names = [n for n, _ in _flatten_with_names(like)]
+        leaves_like, treedef = jax.tree.flatten(like)
+        shard_flat = (
+            jax.tree.leaves(shardings) if shardings is not None else [None] * len(names)
+        )
+        out = []
+        for name, leaf_like, shard in zip(names, leaves_like, shard_flat):
+            meta = by_name[name]
+            raw = self.store.get(f"{self.name}_{step}/{name}")
+            if raw is None:
+                raise FileNotFoundError(f"missing leaf {name} at step {step}")
+            arr = np.frombuffer(raw, dtype=np.dtype(meta["dtype"])).reshape(meta["shape"])
+            if shard is not None:
+                out.append(jax.device_put(arr, shard))
+            else:
+                out.append(jax.numpy.asarray(arr))
+        return jax.tree.unflatten(treedef, out), step

@@ -1,0 +1,50 @@
+"""Cross-entropy over the (model-axis-sharded) padded vocab, with z-loss."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+
+def ce_loss(
+    cfg: ModelConfig,
+    logits: jax.Array,  # (B, S, V_pad) — vocab dim sharded over 'model'
+    targets: jax.Array,  # (B, S) int32 in [0, vocab_size)
+    mask: jax.Array | None = None,  # (B, S) float weights
+    z_coef: float = 1e-4,
+) -> tuple[jax.Array, dict]:
+    """Mean CE over masked positions. Padded vocab columns are excluded.
+
+    Everything reduces over the sharded vocab dim with GSPMD-inserted
+    collectives; the full fp32 logit tensor is never gathered.
+    """
+    B, S, Vp = logits.shape
+    logits = logits.astype(jnp.float32)
+    if Vp > cfg.vocab_size:
+        col = jax.lax.broadcasted_iota(jnp.int32, (1, 1, Vp), 2)
+        logits = jnp.where(col < cfg.vocab_size, logits, -1e30)
+    lse = jax.nn.logsumexp(logits, axis=-1)  # (B, S)
+    true_logit = jnp.take_along_axis(logits, targets[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    nll = lse - true_logit
+    z = jnp.square(lse)
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = jnp.sum(nll * mask) / denom
+    z_loss = z_coef * jnp.sum(z * mask) / denom
+    acc = jnp.sum((jnp.argmax(logits, -1) == targets) * mask) / denom
+    return loss + z_loss, {"ce": loss, "z_loss": z_loss, "accuracy": acc}
+
+
+def loss_mask_for(cfg: ModelConfig, batch: dict) -> jax.Array | None:
+    """VLM: no loss on the prepended patch positions."""
+    if cfg.family == "vlm" and "patches" in batch:
+        B = batch["targets"].shape[0]
+        S = batch["targets"].shape[1]
+        F = batch["patches"].shape[1]
+        pos = jax.lax.broadcasted_iota(jnp.int32, (B, S), 1)
+        return (pos >= F).astype(jnp.float32)
+    return None

@@ -1,0 +1,243 @@
+"""Optimizers from scratch: SGD-momentum, AdamW, Adafactor.
+
+Parameters are stored in the model dtype (bf16); optimizer state keeps an
+fp32 master copy plus moments.  ``zero1_state_specs`` shards the optimizer
+state over the data axes on top of the parameter sharding — the collective
+"parameter server" of DESIGN.md §2 (state lives in the workers' HBM,
+reduce-scatter/all-gather is the pull/push).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+from repro.distributed.sharding import logical_to_spec, zero1_spec
+
+
+def lr_schedule(cfg: TrainConfig) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = cfg.learning_rate * (step + 1.0) / max(cfg.warmup_steps, 1)
+        total = max(cfg.total_steps, cfg.warmup_steps + 1)
+        frac = jnp.clip(
+            (step - cfg.warmup_steps) / max(total - cfg.warmup_steps, 1), 0.0, 1.0
+        )
+        cos = cfg.learning_rate * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+    return lr
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], Any]  # params -> opt_state
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+    # (grads, opt_state, params, step) -> (new_params, new_opt_state)
+    state_logical: Callable[[Any], Any]  # param logical tree -> state logical tree
+
+
+def _f32(tree):
+    return jax.tree.map(lambda x: x.astype(jnp.float32), tree)
+
+
+def make_optimizer(cfg: TrainConfig) -> Optimizer:
+    if cfg.optimizer == "adamw":
+        return _adamw(cfg)
+    if cfg.optimizer == "adafactor":
+        return _adafactor(cfg)
+    if cfg.optimizer == "sgd":
+        return _sgd(cfg)
+    raise ValueError(cfg.optimizer)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def _adamw(cfg: TrainConfig) -> Optimizer:
+    lr_fn = lr_schedule(cfg)
+
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params),
+            "master": _f32(params),
+        }
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+        b1, b2, eps, wd = cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, master):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mh, vh = m / c1, v / c2
+            master = master - lr * (mh / (jnp.sqrt(vh) + eps) + wd * master)
+            return m, v, master
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], state["master"])
+        m = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        master = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_params = jax.tree.map(lambda mm, p: mm.astype(p.dtype), master, params)
+        return new_params, {"m": m, "v": v, "master": master}
+
+    def state_logical(param_logical):
+        return {"m": param_logical, "v": param_logical, "master": param_logical}
+
+    return Optimizer("adamw", init, update, state_logical)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment — fits 72B-class optimizer state)
+# ---------------------------------------------------------------------------
+
+
+def _adafactor(cfg: TrainConfig) -> Optimizer:
+    lr_fn = lr_schedule(cfg)
+    eps2 = 1e-30
+
+    def _factored(shape) -> bool:
+        return len(shape) >= 2
+
+    def init(params):
+        def one(x):
+            if _factored(x.shape):
+                return {
+                    "vr": jnp.zeros(x.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(x.shape[:-2] + x.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(x.shape, jnp.float32)}
+
+        return {
+            "second": jax.tree.map(one, params),
+            "master": _f32(params),
+        }
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+        t = step.astype(jnp.float32) + 1.0
+        beta2 = 1.0 - t ** -0.8
+        wd = cfg.weight_decay
+
+        def upd(g, sec, master):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps2
+            if _factored(g.shape):
+                vr = beta2 * sec["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * sec["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                rfac = jax.lax.rsqrt(
+                    vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps2)
+                )
+                cfac = jax.lax.rsqrt(vc)
+                u = g * rfac[..., None] * cfac[..., None, :]
+                new_sec = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * sec["v"] + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(v)
+                new_sec = {"v": v}
+            # update clipping (Shazeer & Stern)
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + eps2)
+            u = u / jnp.maximum(1.0, rms_u)
+            master = master - lr * (u + wd * master)
+            return new_sec, master
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_s = tdef.flatten_up_to(state["second"])
+        flat_m = jax.tree.leaves(state["master"])
+        pairs = [upd(g, s, m) for g, s, m in zip(flat_g, flat_s, flat_m)]
+        second = jax.tree.unflatten(tdef, [p[0] for p in pairs])
+        master = jax.tree.unflatten(tdef, [p[1] for p in pairs])
+        new_params = jax.tree.map(lambda mm, p: mm.astype(p.dtype), master, params)
+        return new_params, {"second": second, "master": master}
+
+    def state_logical(param_logical):
+        def one(lg):
+            lg = tuple(lg)
+            if len(lg) >= 2:
+                return {"vr": lg[:-1], "vc": lg[:-2] + lg[-1:]}
+            return {"v": lg}
+
+        return {
+            "second": jax.tree.map(
+                one, param_logical,
+                is_leaf=lambda x: isinstance(x, tuple)
+                and all(isinstance(e, (str, type(None))) for e in x),
+            ),
+            "master": param_logical,
+        }
+
+    return Optimizer("adafactor", init, update, state_logical)
+
+
+# ---------------------------------------------------------------------------
+# SGD + momentum
+# ---------------------------------------------------------------------------
+
+
+def _sgd(cfg: TrainConfig) -> Optimizer:
+    lr_fn = lr_schedule(cfg)
+
+    def init(params):
+        return {
+            "mom": jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params),
+            "master": _f32(params),
+        }
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+
+        def upd(g, mom, master):
+            mom = 0.9 * mom + g.astype(jnp.float32)
+            master = master - lr * mom
+            return mom, master
+
+        out = jax.tree.map(upd, grads, state["mom"], state["master"])
+        mom = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        master = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_params = jax.tree.map(lambda mm, p: mm.astype(p.dtype), master, params)
+        return new_params, {"mom": mom, "master": master}
+
+    def state_logical(param_logical):
+        return {"mom": param_logical, "master": param_logical}
+
+    return Optimizer("sgd", init, update, state_logical)
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1: optimizer-state sharding specs
+# ---------------------------------------------------------------------------
+
+
+def zero1_state_specs(
+    opt_state_logical: Any,
+    opt_state_shapes: Any,
+    mesh,
+    rules,
+    dp_axes: tuple[str, ...],
+    enabled: bool = True,
+):
+    """PartitionSpecs for optimizer state: the parameter spec, additionally
+    sharded over the data axes on the first evenly-divisible dim."""
+
+    def one(lg, shape_struct):
+        spec = logical_to_spec(lg, mesh, rules)
+        if not enabled:
+            return spec
+        return zero1_spec(spec, shape_struct.shape, mesh, dp_axes, logical=lg)
+
+    is_lg = lambda x: x is None or (
+        isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+    )
+    return jax.tree.map(one, opt_state_logical, opt_state_shapes, is_leaf=is_lg)

@@ -1,0 +1,38 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the dry-run subprocesses set their
+# own fake-device XLA flags; never set them globally here).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def store(tmp_path):
+    from repro.core.tiered_store import TieredStore
+
+    ts = TieredStore(str(tmp_path / "store"), mem_capacity=64 << 20)
+    yield ts
+    ts.close()
+
+
+def run_subprocess(code: str, devices: int = 8, timeout: int = 600):
+    """Run `code` in a fresh python with `devices` fake XLA devices."""
+    import subprocess
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True, text=True,
+        timeout=timeout,
+    )
+    assert r.returncode == 0, f"subprocess failed:\nSTDOUT:{r.stdout}\nSTDERR:{r.stderr}"
+    return r.stdout

@@ -1,0 +1,80 @@
+"""BinPipeRDD codec: exact roundtrip properties (paper §3.1)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import binpipe
+
+names = st.text(
+    alphabet=st.characters(min_codepoint=33, max_codepoint=0x2FF), min_size=1, max_size=16
+)
+scalars = st.one_of(
+    st.integers(min_value=-(2**62), max_value=2**62),
+    st.floats(allow_nan=False, allow_infinity=False, width=64),
+    st.text(max_size=64),
+    st.binary(max_size=256),
+)
+def _arrays_for(dtype):
+    if np.issubdtype(dtype, np.floating):
+        elements = st.floats(-1e6, 1e6, width=32)
+    else:
+        elements = st.integers(0, 100) if dtype == np.uint8 else st.integers(-100, 100)
+    return hnp.arrays(dtype=dtype, shape=hnp.array_shapes(max_dims=3, max_side=8),
+                      elements=elements)
+
+
+arrays = st.sampled_from(
+    [np.float32, np.int32, np.uint8, np.float64, np.int64]
+).flatmap(_arrays_for)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.dictionaries(names, st.one_of(scalars, arrays), min_size=0, max_size=6))
+def test_record_roundtrip(record):
+    dec = binpipe.decode_record(binpipe.encode_record(record))
+    assert set(dec) == set(record)
+    for k, v in record.items():
+        if isinstance(v, np.ndarray):
+            assert dec[k].dtype == v.dtype and dec[k].shape == v.shape
+            np.testing.assert_array_equal(dec[k], v)
+        elif isinstance(v, float):
+            assert dec[k] == pytest.approx(v, nan_ok=True)
+        else:
+            assert dec[k] == v
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.binary(max_size=128), max_size=16))
+def test_stream_roundtrip(blobs):
+    assert binpipe.deserialize_stream(binpipe.serialize_stream(blobs)) == blobs
+
+
+def test_partition_roundtrip():
+    recs = [
+        {"lidar": np.random.randn(8, 3).astype(np.float32), "t": float(i), "id": i}
+        for i in range(10)
+    ]
+    out = binpipe.decode_partition(binpipe.encode_partition(recs))
+    assert len(out) == 10
+    np.testing.assert_array_equal(out[3]["lidar"], recs[3]["lidar"])
+
+
+def test_bad_magic_rejected():
+    with pytest.raises(binpipe.BinPipeError):
+        binpipe.deserialize_stream(b"\x00" * 16)
+
+
+def test_truncation_rejected():
+    blob = binpipe.encode_record({"x": np.arange(100, dtype=np.int64)})
+    with pytest.raises(binpipe.BinPipeError):
+        binpipe.decode_record(blob[: len(blob) // 2])
+
+
+def test_stack_batch():
+    recs = [{"img": np.ones((4, 4), np.float32) * i, "v": float(i)} for i in range(5)]
+    batch = binpipe.stack_batch(recs)
+    assert batch["img"].shape == (5, 4, 4)
+    assert batch["v"].shape == (5,)
+    assert batch["img"][3, 0, 0] == 3.0

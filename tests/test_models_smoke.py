@@ -1,0 +1,135 @@
+"""Per-arch smoke tests (deliverable f): reduced config of the same family,
+one forward/train step on CPU asserting output shapes + no NaNs, plus
+prefill/decode consistency with the full forward."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ShapeConfig, get_arch, list_archs, scale_down
+from repro.configs import ASSIGNED_ARCHS
+from repro.models import model_zoo as mz
+
+S, B = 32, 2
+KEY = jax.random.PRNGKey(0)
+
+
+def _smoke_cfg(name):
+    return scale_down(get_arch(name))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_arch_registered_with_exact_config(arch):
+    cfg = get_arch(arch)
+    # exact values from the assignment table
+    expect = {
+        "phi3-medium-14b": (40, 5120, 40, 10, 17920, 100352),
+        "qwen3-4b": (36, 2560, 32, 8, 9728, 151936),
+        "stablelm-1.6b": (24, 2048, 32, 32, 5632, 100352),
+        "qwen2-0.5b": (24, 896, 14, 2, 4864, 151936),
+        "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+        "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+        "seamless-m4t-medium": (24, 1024, 16, 16, 4096, 256206),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+        "mamba2-130m": (24, 768, 24, 24, 0, 50280),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.d_ff, cfg.vocab_size)
+    assert got == expect
+
+
+def test_moe_expert_counts():
+    q = get_arch("qwen2-moe-a2.7b")
+    assert (q.moe.num_experts, q.moe.top_k, q.moe.num_shared_experts) == (60, 4, 4)
+    o = get_arch("olmoe-1b-7b")
+    assert (o.moe.num_experts, o.moe.top_k) == (64, 8)
+
+
+def test_ssm_state_dims():
+    assert get_arch("zamba2-2.7b").ssm.state_dim == 64
+    assert get_arch("mamba2-130m").ssm.state_dim == 128
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = _smoke_cfg(arch)
+    model = mz.build_model(cfg)
+    params = mz.init_params(model, KEY)
+    batch = mz.make_train_batch(cfg, ShapeConfig("t", S, B, "train"), KEY)
+
+    logits, _ = model.forward(params, batch)
+    s_total = logits.shape[1]
+    assert logits.shape[0] == B and logits.shape[2] == cfg.padded_vocab
+    assert not bool(jnp.isnan(logits).any()), "NaN in forward logits"
+
+    loss, grads = jax.value_and_grad(lambda p: mz.loss_fn(model, p, batch)[0])(params)
+    assert np.isfinite(float(loss))
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0.0
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_decode_matches_forward(arch):
+    cfg = _smoke_cfg(arch)
+    model = mz.build_model(cfg)
+    params = mz.init_params(model, KEY)
+    batch = mz.make_train_batch(cfg, ShapeConfig("t", S, B, "train"), KEY)
+    full, _ = model.forward(params, batch)
+
+    if cfg.family == "encdec":
+        pre = {"src_emb": batch["src_emb"], "tokens": batch["tokens"][:, :-1]}
+        db = {"tokens": batch["tokens"][:, -1:]}
+    elif cfg.family == "vlm":
+        pre = {
+            "patches": batch["patches"],
+            "tokens": batch["tokens"][:, :-1],
+            "positions3": batch["positions3"][:, :, :-1],
+        }
+        db = {"tokens": batch["tokens"][:, -1:], "positions3": batch["positions3"][:, :, -1:]}
+    else:
+        pre = {"tokens": batch["tokens"][:, :-1]}
+        db = {"tokens": batch["tokens"][:, -1:]}
+
+    if cfg.family == "ssm":
+        plog, state = model.prefill(params, pre)
+    else:
+        plog, state = model.prefill(params, pre, 64)
+    dlog, _ = model.decode_step(params, state, db)
+    np.testing.assert_allclose(
+        np.asarray(dlog[:, 0], np.float32),
+        np.asarray(full[:, -1], np.float32),
+        atol=1e-4,
+        rtol=1e-3,
+    )
+
+
+def test_vlm_loss_masks_patch_positions():
+    cfg = _smoke_cfg("qwen2-vl-72b")
+    from repro.training.losses import loss_mask_for
+
+    batch = mz.make_train_batch(cfg, ShapeConfig("t", S, B, "train"), KEY)
+    mask = loss_mask_for(cfg, batch)
+    F = cfg.frontend_tokens
+    assert mask is not None
+    assert float(mask[:, :F].sum()) == 0.0
+    assert float(mask[:, F:].sum()) == B * (S - F)
+
+
+def test_param_counts_match_analytic():
+    """init'd parameter count tracks the analytic count (ex vocab padding)."""
+    from repro.models.params import count_params
+
+    for arch in ["qwen2-0.5b", "mamba2-130m", "olmoe-1b-7b"]:
+        cfg = get_arch(arch)
+        model = mz.build_model(cfg)
+        specs = mz.param_specs(model)
+        total = count_params(specs)
+        # remove vocab padding before comparing
+        pad = cfg.padded_vocab - cfg.vocab_size
+        n_embed_tables = 1 if cfg.tie_embeddings else 2
+        total -= pad * cfg.d_model * n_embed_tables
+        analytic = cfg.param_count()
+        assert abs(total - analytic) / analytic < 0.02, (arch, total, analytic)

@@ -1,0 +1,41 @@
+"""TieredParamServer: versioned pull/push with staleness visibility (paper §4.2)."""
+
+import numpy as np
+
+from repro.core.param_server import TieredParamServer
+
+
+def _params():
+    return {"w": np.ones((4, 4), np.float32), "b": np.zeros((4,), np.float32)}
+
+
+def test_publish_pull_roundtrip(store):
+    ps = TieredParamServer(store)
+    v = ps.publish(_params())
+    got, version = ps.pull()
+    assert version == v
+    np.testing.assert_array_equal(got["w"], np.ones((4, 4)))
+
+
+def test_versioning(store):
+    ps = TieredParamServer(store)
+    ps.publish(_params())
+    p2 = _params()
+    p2["w"] *= 5
+    v2 = ps.publish(p2)
+    got, version = ps.pull()
+    assert version == v2 == 2
+    assert got["w"][0, 0] == 5.0
+
+
+def test_worker_update_cycle(store):
+    ps = TieredParamServer(store)
+    params = _params()
+    v = ps.publish(params)
+    grads = {"w": np.full((4, 4), 2.0, np.float32), "b": np.ones((4,), np.float32)}
+    ps.push_update(grads, "w0", v)
+    ps.push_update(grads, "w1", v)
+    ups = ps.gather_updates(["w0", "w1", "w_missing"], v)
+    assert len(ups) == 2  # missing worker's update simply absent (stragglers visible)
+    new = ps.apply_mean_update(params, ups, lr=0.1)
+    np.testing.assert_allclose(new["w"], np.ones((4, 4)) - 0.2)

@@ -1,0 +1,75 @@
+"""Roofline extraction: collective parsing + hardware model math."""
+
+import jax.numpy as jnp
+import pytest
+
+from repro.config import SHAPES, get_arch
+from repro.roofline.analysis import (
+    HW_V5E,
+    collective_bytes_from_hlo,
+    model_flops,
+)
+
+HLO_SAMPLE = """
+HloModule jit_f
+%x = f32[256,1024]{1,0} all-reduce(%dot), channel_id=1, replica_groups=[4,4]<=[16], use_global_device_ids=true
+%y = bf16[64,64]{1,0} all-gather(%p), channel_id=2, replica_groups=[2,8]<=[16], dimensions={0}
+%z = f32[32]{0} reduce-scatter(%q), channel_id=3, replica_groups=[1,16]<=[16]
+%w = f32[128]{0} collective-permute(%r), source_target_pairs={{0,1}}
+%skip = f32[999]{0} all-reduce-done(%x2)
+// %comment = f32[100000,100000] all-reduce(%nope)
+"""
+
+
+def test_collective_parser():
+    stats = collective_bytes_from_hlo(HLO_SAMPLE)
+    assert stats.op_counts == {
+        "all-reduce": 1, "all-gather": 1, "reduce-scatter": 1, "collective-permute": 1
+    }
+    ar = 256 * 1024 * 4  # operand == result
+    ag = 64 * 64 * 2 / 8  # operand == result / group
+    rs = 32 * 4 * 16  # operand == result * group
+    cp = 128 * 4
+    assert stats.operand_bytes == pytest.approx(ar + ag + rs + cp)
+    # ring wire estimate ordering: all-reduce ~2x its operand
+    assert stats.wire_bytes > stats.operand_bytes * 0.5
+
+
+def test_parser_ignores_comments_and_done():
+    stats = collective_bytes_from_hlo(HLO_SAMPLE)
+    assert all(b < 1e9 for _, b, _ in stats.lines)
+
+
+def test_model_flops_train_matches_6nd():
+    cfg = get_arch("qwen2-0.5b")
+    shape = SHAPES["train_4k"]
+    f = model_flops(cfg, shape)
+    base = 6.0 * cfg.param_count() * shape.tokens
+    assert f > base  # attention term added
+    assert f < base * 1.5
+
+
+def test_model_flops_moe_uses_active():
+    cfg = get_arch("olmoe-1b-7b")
+    f = model_flops(cfg, SHAPES["train_4k"])
+    dense_equiv = 6.0 * cfg.param_count() * SHAPES["train_4k"].tokens
+    assert f < dense_equiv * 0.5  # top-8 of 64 experts
+
+
+def test_model_flops_decode_counts_cache_reads():
+    cfg = get_arch("phi3-medium-14b")
+    f = model_flops(cfg, SHAPES["decode_32k"])
+    floor = 2.0 * cfg.param_count() * SHAPES["decode_32k"].global_batch
+    assert f > floor
+
+
+def test_ssm_has_no_attention_flops():
+    cfg = get_arch("mamba2-130m")
+    f = model_flops(cfg, SHAPES["decode_32k"])
+    assert f == pytest.approx(2.0 * cfg.param_count() * 128)
+
+
+def test_hw_constants():
+    assert HW_V5E.peak_flops == 197e12
+    assert HW_V5E.hbm_bw == 819e9
+    assert HW_V5E.ici_bw == 50e9

@@ -1,0 +1,83 @@
+"""ResourceManager: containers, preemption, elasticity, quarantine (paper §2.3)."""
+
+from repro.core.scheduler import (
+    JOB_PENDING,
+    JOB_PREEMPTED,
+    JOB_RUNNING,
+    Job,
+    ResourceManager,
+    run_with_speculation,
+)
+
+
+def test_basic_allocation():
+    rm = ResourceManager(16)
+    rm.submit(Job("train", "train", devices=8))
+    rm.submit(Job("sim", "simulate", devices=8))
+    assert rm.jobs["train"].state == JOB_RUNNING
+    assert rm.jobs["sim"].state == JOB_RUNNING
+    assert rm.utilization() == 1.0
+
+
+def test_isolation_no_overlap():
+    rm = ResourceManager(16)
+    rm.submit(Job("a", "train", devices=8))
+    rm.submit(Job("b", "train", devices=8))
+    da = set(rm.jobs["a"].container.device_ids)
+    db = set(rm.jobs["b"].container.device_ids)
+    assert not (da & db)
+
+
+def test_queueing_when_full():
+    rm = ResourceManager(8)
+    rm.submit(Job("a", "train", devices=8))
+    rm.submit(Job("b", "train", devices=8))
+    assert rm.jobs["b"].state == JOB_PENDING
+    rm.complete("a")
+    assert rm.jobs["b"].state == JOB_RUNNING
+
+
+def test_elastic_shrink():
+    rm = ResourceManager(12)
+    rm.submit(Job("a", "train", devices=8))
+    rm.submit(Job("b", "train", devices=8, min_devices=2))
+    assert rm.jobs["b"].state == JOB_RUNNING
+    assert rm.jobs["b"].container.size == 4  # shrank to the available block
+
+
+def test_priority_preemption():
+    rm = ResourceManager(8)
+    rm.submit(Job("batch", "simulate", devices=8, priority=0))
+    rm.submit(Job("urgent", "train", devices=8, min_devices=4, priority=10))
+    assert rm.jobs["batch"].state == JOB_PREEMPTED
+    assert rm.jobs["urgent"].state == JOB_RUNNING
+    rm.complete("urgent")
+    assert rm.jobs["batch"].state == JOB_RUNNING  # resumed
+    assert rm.jobs["batch"].resumes == 1
+
+
+def test_container_failure_quarantines_and_reschedules():
+    rm = ResourceManager(8)
+    rm.submit(Job("a", "train", devices=8, min_devices=2))
+    dead = rm.jobs["a"].container.device_ids[:2]
+    rm.fail_container("a", dead_devices=2)
+    # rescheduled on the surviving devices (elastic), dead ones quarantined
+    assert rm.jobs["a"].state == JOB_RUNNING
+    assert set(dead) <= rm.quarantined
+    assert not (set(rm.jobs["a"].container.device_ids) & rm.quarantined)
+    rm.heal()
+    assert not rm.quarantined
+
+
+def test_speculative_execution():
+    calls = []
+
+    def task(p):
+        calls.append(p)
+        return p * 10
+
+    runtimes = {0: 1.0, 1: 1.0, 2: 10.0, 3: 1.1}
+    results, speculated = run_with_speculation(task, [0, 1, 2, 3], runtimes)
+    assert speculated == [2]
+    assert results[2] == 20
+    assert calls.count(2) == 2  # backup launched for the straggler

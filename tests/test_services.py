@@ -1,0 +1,143 @@
+"""Simulation replay + HD map generation services (paper §3, §5)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.synthetic import drive_log_dataset, lm_token_dataset
+from repro.data.loader import BatchLoader
+from repro.mapgen import gridmap, slam
+from repro.mapgen.gridmap import GridSpec
+from repro.mapgen.pipeline import MapGenConfig, MapGenPipeline
+from repro.sim.replay import PerceptionModel, ReplaySimulator
+
+
+@pytest.fixture(scope="module")
+def drive_ds():
+    return drive_log_dataset(num_partitions=3, frames_per_partition=6, lidar_points=128)
+
+
+# ---------------------------------------------------------------------------
+# simulation
+# ---------------------------------------------------------------------------
+
+
+def test_replay_aggregates_all_partitions(drive_ds):
+    model = PerceptionModel(channels=(8, 16))
+    sim = ReplaySimulator(model, model.init(jax.random.PRNGKey(0)))
+    rep = sim.simulate(drive_ds)
+    assert rep.frames == 18 and rep.partitions == 3
+    assert np.isfinite(rep.mean_score)
+
+
+def test_replay_partition_subset(drive_ds):
+    model = PerceptionModel(channels=(8,))
+    sim = ReplaySimulator(model, model.init(jax.random.PRNGKey(0)))
+    rep = sim.simulate(drive_ds, partitions=[1])
+    assert rep.frames == 6
+
+
+def test_ab_test_identical_params_no_flips(drive_ds):
+    model = PerceptionModel(channels=(8,))
+    params = model.init(jax.random.PRNGKey(0))
+    sim = ReplaySimulator(model, params)
+    ab = sim.ab_test(drive_ds, params)
+    assert ab.decision_flips == 0 and ab.mean_abs_diff == 0.0
+
+
+def test_ab_test_detects_regression(drive_ds):
+    model = PerceptionModel(channels=(8,))
+    sim = ReplaySimulator(model, model.init(jax.random.PRNGKey(0)))
+    ab = sim.ab_test(drive_ds, model.init(jax.random.PRNGKey(9)))
+    assert ab.mean_abs_diff > 0.0
+
+
+def test_perception_pallas_conv_matches_xla():
+    model_x = PerceptionModel(channels=(8, 16), use_pallas=False)
+    model_p = PerceptionModel(channels=(8, 16), use_pallas=True)
+    params = model_x.init(jax.random.PRNGKey(0))
+    img = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16, 3))
+    np.testing.assert_allclose(
+        np.asarray(model_x.apply(params, img)),
+        np.asarray(model_p.apply(params, img)),
+        atol=1e-4, rtol=1e-4,
+    )
+
+
+def test_loader_straggler_speculation():
+    ds = lm_token_dataset(vocab=64, seq_len=16, seqs_per_partition=4, num_partitions=3)
+    # make partition 1 slow on first computation
+    import time
+    orig = ds.lineage.fn
+
+    def slow_gen(i):
+        if i == 1:
+            time.sleep(0.3)
+        return orig(i)
+
+    ds.lineage.fn = slow_gen
+    loader = BatchLoader(ds, batch_size=4, straggler_timeout_s=0.05)
+    batches = list(loader.batches(epochs=1))
+    assert len(batches) == 3
+    assert loader.speculative_fetches >= 1
+
+
+# ---------------------------------------------------------------------------
+# mapgen
+# ---------------------------------------------------------------------------
+
+
+def test_slam_tracks_ground_truth(drive_ds):
+    pipe = MapGenPipeline()
+    data = pipe.load(drive_ds)
+    out = pipe.stage_slam(data)
+    err = pipe.pose_error(out)
+    assert err < 1.0, err
+
+
+def test_rasterize_exact_small():
+    spec = GridSpec(x_min=0.0, y_min=0.0, cells_x=4, cells_y=4, resolution=1.0)
+    pts = jnp.array([[0.5, 0.5, 1.0], [0.4, 0.6, 3.0], [3.5, 3.5, 0.2], [9.0, 9.0, 5.0]])
+    inten = jnp.array([0.2, 0.4, 0.9, 1.0])
+    counts, elev, refl = gridmap.rasterize(pts, inten, spec)
+    assert float(counts[0, 0]) == 2.0  # two points in cell (0,0)
+    assert float(counts[3, 3]) == 1.0
+    assert float(counts.sum()) == 3.0  # out-of-bounds point dropped
+    np.testing.assert_allclose(float(elev[0, 0]), 2.0)  # mean of z=1,3
+    np.testing.assert_allclose(float(refl[0, 0]), 0.3, atol=1e-6)
+
+
+def test_labels():
+    counts = jnp.array([[1.0, 1.0], [0.0, 1.0]])
+    elev = jnp.array([[0.1, 0.5], [0.0, 0.1]])
+    refl = jnp.array([[0.9, 0.1], [0.0, 0.1]])
+    labels = gridmap.label_map(counts, elev, refl)
+    assert int(labels[0, 0]) == gridmap.LABEL_LANE_MARK
+    assert int(labels[0, 1]) == gridmap.LABEL_OBSTACLE
+    assert int(labels[1, 0]) == gridmap.LABEL_EMPTY
+    assert int(labels[1, 1]) == gridmap.LABEL_ROAD
+
+
+def test_transform_cloud_roundtrip():
+    pose = jnp.array([2.0, -1.0, 0.7])
+    cloud = jax.random.normal(jax.random.PRNGKey(0), (32, 3))
+    world = slam.transform_cloud(pose, cloud)
+    R, t = slam.pose_to_matrix(pose)
+    np.testing.assert_allclose(np.asarray((world - t) @ R), np.asarray(cloud), atol=1e-5)
+
+
+def test_mapgen_fused_equals_staged(drive_ds, store):
+    pipe = MapGenPipeline(MapGenConfig(icp_refine=False))
+    gm_f, _ = pipe.run(drive_ds, fused=True)
+    gm_s, _ = pipe.run(drive_ds, fused=False, store=store)
+    np.testing.assert_array_equal(np.asarray(gm_f.counts), np.asarray(gm_s.counts))
+    np.testing.assert_array_equal(np.asarray(gm_f.labels), np.asarray(gm_s.labels))
+
+
+def test_mapgen_end_to_end_with_icp(drive_ds):
+    pipe = MapGenPipeline(MapGenConfig())
+    gm, out = pipe.run(drive_ds, fused=True)
+    assert int(np.asarray(gm.counts > 0).sum()) > 50
+    assert np.isfinite(float(np.asarray(out["icp_err"]).mean()))
+    assert pipe.pose_error(out) < 1.0

@@ -1,0 +1,56 @@
+"""ServeEngine: greedy decode is deterministic and matches manual stepping."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_arch, scale_down
+from repro.models import model_zoo as mz
+from repro.serving.engine import ServeEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = scale_down(get_arch("qwen2-0.5b"), num_layers=2)
+    model = mz.build_model(cfg)
+    params = mz.init_params(model, jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_generate_shapes_and_determinism(setup):
+    cfg, model, params = setup
+    B, S, G = 2, 16, 8
+    prompt = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)}
+    eng = ServeEngine(cfg, params, max_len=S + G)
+    out1 = eng.generate(dict(prompt), G)
+    eng2 = ServeEngine(cfg, params, max_len=S + G)
+    out2 = eng2.generate(dict(prompt), G)
+    assert out1.shape == (B, G)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    assert int(out1.max()) < cfg.vocab_size
+
+
+def test_generate_matches_manual_decode(setup):
+    cfg, model, params = setup
+    B, S, G = 1, 12, 4
+    prompt = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab_size)}
+    eng = ServeEngine(cfg, params, max_len=S + G)
+    out = np.asarray(eng.generate(dict(prompt), G))
+
+    logits, state = model.prefill(params, dict(prompt), S + G)
+    toks = []
+    tok = jnp.argmax(logits[:, -1, : cfg.vocab_size], -1).astype(jnp.int32)
+    for _ in range(G):
+        toks.append(np.asarray(tok))
+        logits, state = model.decode_step(params, state, {"tokens": tok[:, None]})
+        tok = jnp.argmax(logits[:, -1, : cfg.vocab_size], -1).astype(jnp.int32)
+    np.testing.assert_array_equal(out, np.stack(toks, 1))
+
+
+def test_temperature_sampling_stays_in_vocab(setup):
+    cfg, model, params = setup
+    prompt = {"tokens": jnp.zeros((2, 8), jnp.int32)}
+    eng = ServeEngine(cfg, params, max_len=24)
+    out = eng.generate(prompt, 8, temperature=1.0, seed=3)
+    assert int(out.max()) < cfg.vocab_size and int(out.min()) >= 0

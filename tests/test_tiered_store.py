@@ -1,0 +1,83 @@
+"""TieredStore: Alluxio-style tiering semantics (paper §2.2)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tiered_store import TieredStore
+
+
+def test_put_get_mem_hit(store):
+    store.put("a", b"hello")
+    assert store.get("a") == b"hello"
+    assert store.stats["MEM"].hits == 1
+
+
+def test_demotion_chain(tmp_path):
+    ts = TieredStore(str(tmp_path), mem_capacity=100, ssd_capacity=150, hdd_capacity=10_000)
+    for i in range(8):
+        ts.put(f"k{i}", bytes([i]) * 60)
+    # oldest blocks demoted below MEM but still readable
+    for i in range(8):
+        got = ts.get(f"k{i}")
+        assert got == bytes([i]) * 60
+    assert ts.stats["SSD"].hits + ts.stats["HDD"].hits + ts.stats["PERSIST"].hits > 0
+    ts.close()
+
+
+def test_persist_survives_cache_wipe(tmp_path):
+    ts = TieredStore(str(tmp_path), mem_capacity=1 << 20)
+    ts.put("x", b"durable")
+    ts.flush()
+    ts.drop_caches()
+    assert ts.get("x") == b"durable"
+    ts.close()
+
+
+def test_no_persist_flag(tmp_path):
+    ts = TieredStore(str(tmp_path), mem_capacity=1 << 20)
+    ts.put("tmp", b"volatile", persist=False)
+    ts.flush()
+    ts.drop_caches()
+    assert ts.get("tmp") is None
+    ts.close()
+
+
+def test_delete(store):
+    store.put("d", b"zzz")
+    store.flush()
+    store.delete("d")
+    assert store.get("d") is None
+
+
+def test_overwrite_updates_all_tiers(tmp_path):
+    ts = TieredStore(str(tmp_path), mem_capacity=1 << 20)
+    ts.put("k", b"v1")
+    ts.put("k", b"v2")
+    ts.flush()
+    ts.drop_caches()
+    assert ts.get("k") == b"v2"
+    ts.close()
+
+
+def test_record_helpers(store):
+    rec = {"name": "frame", "data": np.arange(12, dtype=np.float32).reshape(3, 4)}
+    store.put_record("r", rec)
+    out = store.get_record("r")
+    np.testing.assert_array_equal(out["data"], rec["data"])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.text(min_size=1, max_size=8), st.binary(min_size=1, max_size=64)),
+                min_size=1, max_size=24))
+def test_store_is_a_map(tmp_path_factory, kvs):
+    """Last write per key wins, regardless of tier placement."""
+    ts = TieredStore(str(tmp_path_factory.mktemp("s")), mem_capacity=256,
+                     ssd_capacity=512, hdd_capacity=1 << 20, async_persist=False)
+    expect = {}
+    for k, v in kvs:
+        ts.put(k, v)
+        expect[k] = v
+    for k, v in expect.items():
+        assert ts.get(k) == v
+    ts.close()
