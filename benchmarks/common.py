@@ -14,6 +14,10 @@ from typing import Callable
 
 import jax
 
+# Machine-readable mirror of every row() printed this process; run.py
+# drains it into ``--json OUT`` so perf trajectories are diffable across PRs.
+RESULTS: list[dict] = []
+
 
 def timeit(fn: Callable, iters: int = 5, warmup: int = 2) -> float:
     """Median-ish wall time per call in seconds (block_until_ready-aware)."""
@@ -31,4 +35,5 @@ def timeit(fn: Callable, iters: int = 5, warmup: int = 2) -> float:
 def row(name: str, seconds: float, derived: str = "") -> str:
     line = f"{name},{seconds * 1e6:.1f},{derived}"
     print(line, flush=True)
+    RESULTS.append({"name": name, "us_per_call": seconds * 1e6, "derived": derived})
     return line

@@ -1,14 +1,18 @@
 """Benchmark harness (deliverable d): one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--json OUT]
 
 Prints ``name,us_per_call,derived`` CSV; the derived column carries the
 paper-claim analog (speedups / efficiencies) next to the paper's number.
+``--json OUT`` additionally writes the rows as machine-readable JSON
+(e.g. ``BENCH_serving.json``) so the perf trajectory is tracked across
+PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -22,12 +26,15 @@ MODULES = [
     ("train_pipeline", "Fig.7 unified training pipeline ~2x"),
     ("train_scaling", "Fig.9 near-linear distributed training scaling"),
     ("mapgen_bench", "§5.2 fused map job 5x; ICP offload 30x"),
+    ("serving_bench", "§4.3 serving: continuous batching + paged KV >=3x"),
 ]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="also write rows as JSON to this path")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -42,6 +49,12 @@ def main() -> None:
         except Exception:
             traceback.print_exc()
             failed.append(name)
+    if args.json:
+        from benchmarks.common import RESULTS
+
+        with open(args.json, "w") as f:
+            json.dump({"results": RESULTS, "failed": failed}, f, indent=2)
+        print(f"# wrote {len(RESULTS)} rows to {args.json}")
     if failed:
         print(f"# FAILED: {failed}")
         sys.exit(1)

@@ -12,10 +12,19 @@ def default_interpret() -> bool:
 
 
 def tpu_compiler_params(dimension_semantics: tuple[str, ...]):
-    """Best-effort TPU compiler params (ignored in interpret mode)."""
+    """Best-effort TPU compiler params (ignored in interpret mode).
+
+    The class was renamed across jax releases (``TPUCompilerParams`` →
+    ``CompilerParams``); try both so the semantics actually reach the
+    Mosaic compiler instead of silently degrading to ``None``."""
     try:
         from jax.experimental.pallas import tpu as pltpu
 
-        return pltpu.CompilerParams(dimension_semantics=dimension_semantics)
+        cls = getattr(pltpu, "CompilerParams", None) or getattr(
+            pltpu, "TPUCompilerParams", None
+        )
+        if cls is None:
+            return None
+        return cls(dimension_semantics=dimension_semantics)
     except Exception:
         return None

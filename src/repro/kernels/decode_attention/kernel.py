@@ -1,0 +1,155 @@
+"""Paged GQA decode attention (online softmax over block-table pages).
+
+One query token per sequence attends over a KV cache stored as fixed-size
+pages in a shared pool; the per-sequence page list (block table) and the
+live length arrive as *scalar-prefetch* operands, so the K/V BlockSpec
+index maps can gather pages straight from HBM — the kernel never sees a
+dense ``(B, max_len)`` cache and HBM traffic scales with live tokens.
+
+Tiling: grid = (batch, kv_heads, pages); the page axis is innermost and
+sequential, with running max / sum / output accumulator in VMEM scratch
+(FlashAttention-2 decode schedule).  GQA is native: the q block for kv
+head ``h`` is that head's whole query group ``(G, hd)``, so pages are
+fetched once per kv head, not per query head.
+
+The current token's K/V are separate ``(B, Hkv, hd)`` operands merged
+analytically at the final page step — mirroring
+``attention.sdpa_decode_readonly``, the cache stays read-only and is
+written once by the caller, outside the layer scan.
+
+Pages past ``seq_len`` are skipped via ``pl.when`` (their block-table
+entries point at the allocator's null page, so the prefetched index is
+always in range); positions past ``seq_len`` inside the last live page
+are masked positionally.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import tpu_compiler_params
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(
+    tables_ref,  # scalar prefetch: (B, n_pages) int32 page ids
+    lens_ref,  # scalar prefetch: (B,) int32 live lengths (tokens < q_pos)
+    q_ref,  # (1, 1, G, hd)
+    k_ref,  # (1, page, 1, hd) — page tables_ref[b, ip], kv head h
+    v_ref,  # (1, page, 1, hd)
+    kn_ref,  # (1, 1, hd) current token's key, kv head h
+    vn_ref,  # (1, 1, hd)
+    o_ref,  # (1, 1, G, hd)
+    m_scr,  # (G,) fp32 running max
+    l_scr,  # (G,) fp32 running sum
+    acc_scr,  # (G, hd) fp32 output accumulator
+    *,
+    scale: float,
+    page_size: int,
+    n_pages: int,
+):
+    b, ip = pl.program_id(0), pl.program_id(2)
+    seq_len = lens_ref[b]
+
+    @pl.when(ip == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(ip * page_size < seq_len)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)  # (G, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)  # (page, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (G, page)
+        pos = ip * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, dimension=1
+        )
+        s = jnp.where(pos < seq_len, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ip == n_pages - 1)
+    def _finalize():
+        # merge the current token (its cache slot is written after the layer
+        # scan) — one extra online-softmax step with a single key
+        q = q_ref[0, 0].astype(jnp.float32)  # (G, hd)
+        kn = kn_ref[0, 0].astype(jnp.float32)  # (hd,)
+        vn = vn_ref[0, 0].astype(jnp.float32)
+        ln = (q @ kn) * scale  # (G,)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, ln)
+        alpha = jnp.exp(m_prev - m_new)
+        en = jnp.exp(ln - m_new)
+        denom = l_scr[...] * alpha + en
+        acc = acc_scr[...] * alpha[:, None] + en[:, None] * vn[None, :]
+        o_ref[0, 0] = (acc / denom[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_fwd(
+    q: jax.Array,  # (B, Hkv, G, hd) — query heads grouped under their kv head
+    k_pages: jax.Array,  # (P, page, Hkv, hd) shared page pool (last page = null)
+    v_pages: jax.Array,
+    k_new: jax.Array,  # (B, Hkv, hd) current token
+    v_new: jax.Array,
+    block_tables: jax.Array,  # (B, n_pages) int32, null-page-padded
+    seq_lens: jax.Array,  # (B,) int32 tokens already in cache (< q_pos)
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hkv, G, hd = q.shape
+    page_size = k_pages.shape[1]
+    n_pages = block_tables.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(
+        _paged_decode_kernel, scale=scale, page_size=page_size, n_pages=n_pages
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, ip, tr, lr: (b, h, 0, 0)),
+            pl.BlockSpec(
+                (1, page_size, 1, hd), lambda b, h, ip, tr, lr: (tr[b, ip], 0, h, 0)
+            ),
+            pl.BlockSpec(
+                (1, page_size, 1, hd), lambda b, h, ip, tr, lr: (tr[b, ip], 0, h, 0)
+            ),
+            pl.BlockSpec((1, 1, hd), lambda b, h, ip, tr, lr: (b, h, 0)),
+            pl.BlockSpec((1, 1, hd), lambda b, h, ip, tr, lr: (b, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, ip, tr, lr: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    kwargs = {}
+    params = tpu_compiler_params(("parallel", "parallel", "arbitrary"))
+    if params is not None:
+        kwargs["compiler_params"] = params
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, hd), q.dtype),
+        interpret=interpret,
+        **kwargs,
+    )(block_tables, seq_lens, q, k_pages, v_pages, k_new, v_new)

@@ -1,0 +1,62 @@
+"""Jitted public wrapper for paged GQA decode attention.
+
+Accepts model-layout tensors (``q``/``k_new`` as ``(B, 1, H, hd)``) plus
+the page pool and block tables, and routes:
+
+* TPU — the Pallas kernel, compiled, gathering pages via scalar-prefetch
+  block tables (``use_kernel=True`` forces the kernel elsewhere, in
+  interpret mode — the tests' path).
+* anywhere else — ``ref.paged_decode_ref``: a page gather + the existing
+  ``sdpa_decode_readonly`` einsum path (interpret-mode Pallas is orders
+  of magnitude slower than XLA on CPU, so the fallback is the *runtime*
+  path there, not just the oracle).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import paged_decode_fwd
+from repro.kernels.decode_attention.ref import paged_decode_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def paged_decode_attention(
+    q: jax.Array,  # (B, 1, Hq, hd)
+    k_pages: jax.Array,  # (P, page, Hkv, hd) — pool; last page is the null page
+    v_pages: jax.Array,
+    k_new: jax.Array,  # (B, 1, Hkv, hd) current token (not yet in the pool)
+    v_new: jax.Array,
+    block_tables: jax.Array,  # (B, n_pages) int32
+    seq_lens: jax.Array,  # (B,) int32 live tokens strictly below the query
+    *,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Returns (B, 1, Hq, hd) attention over [paged cache | current token]."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if not use_kernel:
+        return paged_decode_ref(
+            q, k_pages, v_pages, k_new, v_new, block_tables, seq_lens
+        )
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, _, Hq, hd = q.shape
+    Hkv = k_pages.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, hd)  # heads grouped under their kv head
+    out = paged_decode_fwd(
+        qg,
+        k_pages,
+        v_pages,
+        k_new[:, 0],
+        v_new[:, 0],
+        block_tables.astype(jnp.int32),
+        seq_lens.astype(jnp.int32),
+        interpret=interpret,
+    )
+    return out.reshape(B, 1, Hq, hd)

@@ -1,0 +1,50 @@
+"""Einsum oracle for the paged decode kernel.
+
+Gathers the block-table pages back into a dense ``(B, T, Hkv, hd)`` cache
+and runs the existing merged-softmax einsum decode path
+(``attention.sdpa_decode_readonly``) over it.  This doubles as the
+non-TPU runtime fallback: on backends where Pallas doesn't compile the
+gather+einsum is the fastest correct path (ops.py routes here).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_pages(
+    pages: jax.Array,  # (P, page, Hkv, hd)
+    block_tables: jax.Array,  # (B, n_pages) int32
+) -> jax.Array:
+    """Densify: (B, n_pages*page, Hkv, hd).  Null-page entries gather zeros
+    past ``seq_len`` — masked out by the caller's positional mask."""
+    B, n_pages = block_tables.shape
+    page, Hkv, hd = pages.shape[1:]
+    dense = jnp.take(pages, block_tables.reshape(-1), axis=0)
+    return dense.reshape(B, n_pages * page, Hkv, hd)
+
+
+def paged_decode_ref(
+    q: jax.Array,  # (B, 1, Hq, hd)
+    k_pages: jax.Array,  # (P, page, Hkv, hd)
+    v_pages: jax.Array,
+    k_new: jax.Array,  # (B, 1, Hkv, hd)
+    v_new: jax.Array,
+    block_tables: jax.Array,  # (B, n_pages)
+    seq_lens: jax.Array,  # (B,)
+    *,
+    scores_dtype=jnp.float32,
+) -> jax.Array:
+    from repro.models.attention import sdpa_decode_readonly
+
+    ck = gather_pages(k_pages, block_tables)
+    cv = gather_pages(v_pages, block_tables)
+    T = ck.shape[1]
+    kv_pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (q.shape[0], T))
+    return sdpa_decode_readonly(
+        q, ck, cv, k_new, v_new,
+        q_pos=seq_lens[:, None].astype(jnp.int32),
+        kv_pos=kv_pos,
+        scores_dtype=scores_dtype,
+    )

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import default_interpret, tpu_compiler_params
+
 NEG_INF = -1e30
 
 
@@ -85,8 +87,10 @@ def flash_attention_fwd(
     causal: bool = True,
     block_q: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    if interpret is None:
+        interpret = default_interpret()
     B, Hq, S, D = q.shape
     Hkv, T = k.shape[1], k.shape[2]
     assert Hq % Hkv == 0, (Hq, Hkv)
@@ -99,6 +103,12 @@ def flash_attention_fwd(
     kernel = functools.partial(
         _attn_kernel, scale=scale, causal=causal, bq=bq, bk=bk, nk=nk
     )
+    kwargs = {}
+    # batch / head / q-block axes are embarrassingly parallel; the kv axis
+    # carries the online-softmax scratch and must stay sequential
+    params = tpu_compiler_params(("parallel", "parallel", "parallel", "arbitrary"))
+    if params is not None:
+        kwargs["compiler_params"] = params
     return pl.pallas_call(
         kernel,
         grid=(B, Hq, nq, nk),
@@ -117,4 +127,5 @@ def flash_attention_fwd(
             pltpu.VMEM((bq, D), jnp.float32),
         ],
         interpret=interpret,
+        **kwargs,
     )(q, k, v)

@@ -1,7 +1,11 @@
-"""Serving driver: batched prefill + decode with the ServeEngine.
+"""Serving driver: static-batch or continuous-batching decode.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
-        --batch 4 --prompt-len 64 --gen 32
+        --batch 4 --prompt-len 64 --gen 32 [--engine continuous]
+
+``--engine continuous`` serves the batch as individual requests through
+the paged-KV continuous-batching engine (transformer families only) and
+reports per-token latency percentiles next to throughput.
 """
 
 from __future__ import annotations
@@ -11,10 +15,13 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import get_arch, scale_down
 from repro.models import model_zoo
+from repro.serving.continuous import ContinuousBatchingEngine
 from repro.serving.engine import ServeEngine
+from repro.serving.scheduler import Request, token_latencies
 
 
 def main(argv=None):
@@ -26,6 +33,9 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", choices=["static", "continuous"], default="static")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=0, help="decode slots (0 = batch)")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -45,6 +55,35 @@ def main(argv=None):
         )
     if cfg.family == "encdec":
         prompt["src_emb"] = jax.random.normal(key, (B, S, cfg.frontend_dim), jnp.float32)
+
+    if args.engine == "continuous":
+        engine = ContinuousBatchingEngine(
+            cfg, params,
+            num_slots=args.slots or B,
+            page_size=args.page_size,
+            max_len=S + args.gen,
+            seed=args.seed,
+        )
+        reqs = [
+            Request(
+                rid=i, tokens=np.asarray(prompt["tokens"][i]),
+                max_new_tokens=args.gen, temperature=args.temperature,
+            )
+            for i in range(B)
+        ]
+        t0 = time.perf_counter()
+        outs = engine.run(reqs)
+        dt = time.perf_counter() - t0
+        toks = sum(len(o.tokens) for o in outs)
+        lat = token_latencies(outs)
+        print(
+            f"[serve/continuous] {toks} tokens in {dt:.2f}s ({toks/dt:,.1f} tok/s) "
+            f"p50/p99 token latency {np.percentile(lat, 50)*1e3:.1f}/"
+            f"{np.percentile(lat, 99)*1e3:.1f} ms"
+        )
+        first = min(outs, key=lambda o: o.rid)
+        print("[serve/continuous] first sequence:", first.tokens[:16])
+        return
 
     engine = ServeEngine(cfg, params, max_len=S + args.gen + (cfg.frontend_tokens or 0))
     t0 = time.perf_counter()

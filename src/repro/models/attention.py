@@ -176,6 +176,32 @@ def sdpa_decode_readonly(
     return constrain(out, ("batch", "seq", "act_heads", None))
 
 
+def paged_decode(
+    q: jax.Array,  # (B, 1, Hq, hd)
+    k_pages: jax.Array,  # (P, page, Hkv, hd) shared pool (last page = null)
+    v_pages: jax.Array,
+    k_new: jax.Array,  # (B, 1, Hkv, hd) current token
+    v_new: jax.Array,
+    *,
+    block_tables: jax.Array,  # (B, n_pages) int32
+    seq_lens: jax.Array,  # (B,) int32 tokens already cached (< query position)
+    use_kernel: bool | None = None,
+) -> jax.Array:
+    """Decode attention over a block-table paged cache.
+
+    The paged counterpart of :func:`sdpa_decode_readonly`: the pool is
+    read-only inside the layer scan and the current token is merged
+    analytically; the caller writes each layer's new (k, v) into its page
+    slot once, after the scan.  Routes to the Pallas paged kernel on TPU
+    and to the gather + einsum path elsewhere (kernels.decode_attention)."""
+    from repro.kernels.decode_attention import ops as pd_ops
+
+    return pd_ops.paged_decode_attention(
+        q, k_pages, v_pages, k_new, v_new, block_tables, seq_lens,
+        use_kernel=use_kernel,
+    )
+
+
 def blocked_sdpa(
     q: jax.Array,  # (B, S, Hq, hd)
     k: jax.Array,

@@ -25,6 +25,19 @@ class DecodeState(NamedTuple):
     pos: jax.Array  # scalar int32: next write position
 
 
+class PagedKVState(NamedTuple):
+    """Paged KV pool shared by all sequences (serving path).
+
+    Pages are (page_size, n_kv, hd) token slabs; a sequence owns an
+    arbitrary set of pages named by its block-table row, so HBM scales
+    with live tokens instead of batch x max_len.  The last page of the
+    pool is the allocator's *null page*: unused block-table entries point
+    at it, and writes for inactive slots land there harmlessly."""
+
+    k_pages: jax.Array  # (L, P, page_size, n_kv, hd)
+    v_pages: jax.Array
+
+
 # ---------------------------------------------------------------------------
 # Block
 # ---------------------------------------------------------------------------
@@ -57,6 +70,7 @@ def block_apply(
     kv_pos: jax.Array,
     cache: Optional[tuple[jax.Array, jax.Array]] = None,
     cache_pos: Optional[jax.Array] = None,
+    paged: Optional[tuple] = None,
 ):
     """Returns (x_out, (k, v), metrics).
 
@@ -66,10 +80,18 @@ def block_apply(
       (sdpa_decode_readonly) and returned so the caller writes the cache
       once, outside the layer scan — keeping the cache a scan constant
       avoids GSPMD's replicate-repartition at the ys boundary.
+    * paged decode: ``paged`` is (k_pages, v_pages, block_tables, seq_lens)
+      for this layer; same read-only contract through the paged kernel.
     """
     h = layers.apply_norm(cfg, p["ln1"], x)
     q, k, v = attention.qkv(cfg, p["attn"], h, angles)
-    if cache is not None:
+    if paged is not None:
+        kp, vp, block_tables, seq_lens = paged
+        o = attention.paged_decode(
+            q, kp, vp, k, v, block_tables=block_tables, seq_lens=seq_lens
+        )
+        kv_out = (k, v)
+    elif cache is not None:
         ck, cv = cache
         o = attention.sdpa_decode_readonly(
             q, ck, cv, k, v, q_pos=q_pos, kv_pos=kv_pos,
@@ -146,6 +168,28 @@ def run_layers_decode(cfg: ModelConfig, stacked: Any, x, angles, q_pos, kv_pos, 
     new_k = jax.lax.dynamic_update_slice(cache.k, nk.astype(cache.k.dtype), (0, 0, pos, 0, 0))
     new_v = jax.lax.dynamic_update_slice(cache.v, nv.astype(cache.v.dtype), (0, 0, pos, 0, 0))
     return x, KVCache(k=new_k, v=new_v)
+
+
+def run_layers_decode_paged(
+    cfg: ModelConfig, stacked: Any, x, angles, q_pos, block_tables, seq_lens,
+    pages: PagedKVState,
+):
+    """Paged decode over the layer stack.  The page pool is a read-only scan
+    input; ys are the per-layer new (k, v) slices, written into their page
+    slots once by the caller."""
+
+    def body(h, xs):
+        lp, kp, vp = xs
+        h, (nk, nv), _ = block_apply(
+            cfg, lp, h, angles, q_pos, None,
+            paged=(kp, vp, block_tables, seq_lens),
+        )
+        return h, (nk, nv)
+
+    x, (nk, nv) = scan_or_unroll(
+        body, x, (stacked, pages.k_pages, pages.v_pages), cfg.scan_layers
+    )
+    return x, nk, nv
 
 
 # ---------------------------------------------------------------------------
@@ -242,7 +286,55 @@ class TransformerLM:
         logits = layers.lm_logits(params["embed"], x, cfg.tie_embeddings)
         return logits, DecodeState(cache=cache, pos=state.pos + 1)
 
+    def decode_step_paged(
+        self, params, pages: PagedKVState, batch
+    ) -> tuple[jax.Array, PagedKVState]:
+        """One token per slot against the paged pool.
+
+        ``batch``: tokens (B, 1); block_tables (B, n_pages) int32;
+        seq_lens (B,) int32 — the number of cached tokens per slot, which
+        is also the current token's position.  Inactive slots carry
+        all-null block-table rows, so their cache writes land in the null
+        page and their logits are ignored by the engine."""
+        cfg = self.cfg
+        if cfg.rope_mode == "mrope":
+            raise NotImplementedError("paged decode supports standard/none rope")
+        dtype = jnp.dtype(cfg.dtype)
+        x = layers.embed_tokens(params["embed"], batch["tokens"], dtype)
+        x = constrain(x, ("batch", "seq", "act_embed"))
+        block_tables = batch["block_tables"].astype(jnp.int32)
+        seq_lens = batch["seq_lens"].astype(jnp.int32)
+        q_pos = seq_lens[:, None]  # (B, 1)
+        angles = None if cfg.rope_mode == "none" else layers.rope_angles(cfg, q_pos)
+        x, nk, nv = run_layers_decode_paged(
+            cfg, params["layers"], x, angles, q_pos, block_tables, seq_lens, pages
+        )
+        # write every layer's new (k, v) into its page slot in one scatter
+        page_size = pages.k_pages.shape[2]
+        B = x.shape[0]
+        page_ids = block_tables[jnp.arange(B), seq_lens // page_size]  # (B,)
+        offs = seq_lens % page_size
+        nk = jnp.squeeze(nk, axis=2).astype(pages.k_pages.dtype)  # (L, B, kv, hd)
+        nv = jnp.squeeze(nv, axis=2).astype(pages.v_pages.dtype)
+        new_pages = PagedKVState(
+            k_pages=pages.k_pages.at[:, page_ids, offs].set(nk),
+            v_pages=pages.v_pages.at[:, page_ids, offs].set(nv),
+        )
+        x = layers.apply_norm(cfg, params["final_norm"], x)
+        logits = layers.lm_logits(params["embed"], x, cfg.tie_embeddings)
+        return logits, new_pages
+
     # ---- decode state construction ----
+    def init_paged_state(self, num_pages: int, page_size: int) -> PagedKVState:
+        """``num_pages`` INCLUDES the null page (allocators pass pool+1)."""
+        cfg = self.cfg
+        shape = (
+            cfg.num_layers, num_pages, page_size, cfg.num_kv_heads,
+            cfg.resolved_head_dim,
+        )
+        dtype = jnp.dtype(cfg.dtype)
+        return PagedKVState(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
     def init_decode_state(self, batch_size: int, max_len: int) -> DecodeState:
         cfg = self.cfg
         hd = cfg.resolved_head_dim

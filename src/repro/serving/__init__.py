@@ -1,3 +1,11 @@
-"""Serving: KV-cache decode engine over the model zoo."""
+"""Serving: KV-cache decode engines over the model zoo.
 
+``ServeEngine`` is the static-batch baseline (one prefill + lockstep
+decode).  ``ContinuousBatchingEngine`` is the serving hot path:
+continuous batching over a block-table paged KV cache with a fused
+sampling decode step (see ``serving.continuous``).
+"""
+
+from repro.serving.continuous import ContinuousBatchingEngine  # noqa: F401
 from repro.serving.engine import ServeEngine  # noqa: F401
+from repro.serving.scheduler import Request, RequestOutput  # noqa: F401

@@ -1,0 +1,341 @@
+"""Continuous-batching decode engine over the paged KV cache.
+
+The serving hot path: a fixed set of decode *slots* advances one token
+per step in a single jitted SPMD program; sequences join (bucketed
+prefill + page scatter) and leave (eviction frees their pages) mid-
+flight, so throughput tracks live tokens instead of the slowest member
+of a static batch.  Three design rules:
+
+* **Paged memory** — K/V live in a shared page pool addressed through
+  per-slot block tables (``serving.paged_cache``); HBM scales with live
+  tokens, admission is a free-list check, eviction is O(pages).
+* **Fused sampling, donated state** — the decode step embeds, attends
+  through the paged kernel, writes the new K/V, and samples (greedy or
+  temperature) in ONE jitted call whose page pool is donated; the only
+  per-step host traffic is the sampled-token fetch that the scheduler
+  itself needs.
+* **Bucketed prefill** — prompts pad to power-of-two buckets so joining
+  costs one of O(log max_len) compiled programs, not one per length;
+  the prompt's K/V is scattered into its pages page-aligned, and the
+  first token is sampled inside the same jitted call.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models import layers, model_zoo
+from repro.models.transformer import PagedKVState, run_layers_prefill
+from repro.serving.paged_cache import BlockAllocator, pages_for
+from repro.serving.scheduler import AdmissionScheduler, Request, RequestOutput
+
+
+@dataclasses.dataclass
+class _ActiveSeq:
+    """Host-side record for a sequence occupying a decode slot."""
+
+    req: Request
+    generated: list[int]
+    token_times: list[float]
+
+    @property
+    def remaining(self) -> int:
+        return self.req.max_new_tokens - len(self.generated)
+
+
+def _bucket_len(plen: int, page_size: int, max_len: int) -> int:
+    """Smallest power-of-two >= plen, page-aligned and capped at max_len."""
+    b = page_size
+    while b < plen:
+        b *= 2
+    b = ((b + page_size - 1) // page_size) * page_size
+    return min(b, ((max_len + page_size - 1) // page_size) * page_size)
+
+
+class ContinuousBatchingEngine:
+    """Slot-scheduled continuous batching for transformer-family models.
+
+    SSM/hybrid state is slot-indexed differently and mrope needs
+    per-request position streams; both fall back to ``ServeEngine``."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Any,
+        *,
+        num_slots: int = 8,
+        page_size: int = 16,
+        max_len: int = 512,
+        num_pages: Optional[int] = None,
+        seed: int = 0,
+    ):
+        if cfg.family not in ("dense", "moe"):
+            raise ValueError(f"paged serving supports dense/moe, got {cfg.family!r}")
+        if cfg.rope_mode == "mrope":
+            raise ValueError("paged serving supports standard/none rope")
+        self.cfg = cfg
+        self.model = model_zoo.build_model(cfg)
+        self.params = params
+        self.num_slots = num_slots
+        self.page_size = page_size
+        self.max_len = max_len
+        self.max_pages_per_seq = pages_for(max_len, page_size)
+        self.num_pages = num_pages or num_slots * self.max_pages_per_seq
+        # disjoint sampling streams: decode folds the step counter, prefill
+        # folds (rid, tokens-already-generated) — no key is ever shared
+        # between the two, or between a preempted request's readmissions
+        self._key = jax.random.PRNGKey(seed)
+        self._decode_key = jax.random.fold_in(self._key, 0)
+        self._prefill_key = jax.random.fold_in(self._key, 1)
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
+        self._prefill = jax.jit(self._prefill_impl, donate_argnums=(1,))
+        self.reset()
+
+    # ------------------------------------------------------------------
+    def reset(self) -> None:
+        """Fresh pool/queue/slots; compiled programs are retained."""
+        self.pages = self.model.init_paged_state(self.num_pages + 1, self.page_size)
+        self.alloc = BlockAllocator(
+            self.num_slots, self.max_pages_per_seq, self.num_pages
+        )
+        self.scheduler = AdmissionScheduler()
+        self._slots: list[Optional[_ActiveSeq]] = [None] * self.num_slots
+        self._tokens = np.zeros((self.num_slots,), np.int32)
+        self._temps = np.zeros((self.num_slots,), np.float32)
+        self._counter = 0
+
+    # ------------------------------------------------------------------
+    # jitted programs
+    # ------------------------------------------------------------------
+    def _sample(self, logits: jax.Array, key, temps: jax.Array) -> jax.Array:
+        """(B, V) logits + per-slot temperature -> (B,) int32 tokens."""
+        lg = logits[:, : self.cfg.vocab_size].astype(jnp.float32)
+        greedy = jnp.argmax(lg, axis=-1)
+        safe = jnp.where(temps > 0, temps, 1.0)
+        sampled = jax.random.categorical(key, lg / safe[:, None], axis=-1)
+        return jnp.where(temps > 0, sampled, greedy).astype(jnp.int32)
+
+    def _decode_impl(
+        self, params, pages, tokens, block_tables, seq_lens, active, temps, key, step
+    ):
+        batch = {
+            "tokens": tokens[:, None],
+            "block_tables": block_tables,
+            "seq_lens": seq_lens,
+        }
+        logits, pages = self.model.decode_step_paged(params, pages, batch)
+        tok = self._sample(logits[:, -1], jax.random.fold_in(key, step), temps)
+        return jnp.where(active, tok, tokens), pages
+
+    def _prefill_impl(self, params, pages, tokens_pad, plen, page_ids, key, temp):
+        """Prefill one prompt (padded to a bucket), scatter its K/V into the
+        slot's pages, and sample the first token — one compiled program per
+        bucket length."""
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        S = tokens_pad.shape[1]
+        x = layers.embed_tokens(params["embed"], tokens_pad, dtype)
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (1, S))
+        angles = None if cfg.rope_mode == "none" else layers.rope_angles(cfg, pos)
+        x, cache = run_layers_prefill(cfg, params["layers"], x, angles, pos, pos, S)
+        # logits at the *real* last prompt position (padding sits above it and
+        # is never attended by earlier positions under the causal mask)
+        h = jax.lax.dynamic_slice_in_dim(x, plen - 1, 1, axis=1)
+        h = layers.apply_norm(cfg, params["final_norm"], h)
+        logits = layers.lm_logits(params["embed"], h, cfg.tie_embeddings)
+        tok = self._sample(logits[:, -1], key, temp[None])[0]
+        # page-aligned scatter: (L, S, kv, hd) -> (L, S/page, page, kv, hd);
+        # pad pages beyond the prompt carry null ids and land in trash
+        L, n = cache.k.shape[0], S // self.page_size
+        kv_shape = (L, n, self.page_size) + cache.k.shape[3:]
+        ks = cache.k[:, 0].reshape(kv_shape).astype(pages.k_pages.dtype)
+        vs = cache.v[:, 0].reshape(kv_shape).astype(pages.v_pages.dtype)
+        pages = PagedKVState(
+            k_pages=pages.k_pages.at[:, page_ids].set(ks),
+            v_pages=pages.v_pages.at[:, page_ids].set(vs),
+        )
+        return pages, tok
+
+    # ------------------------------------------------------------------
+    # scheduling
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"request {req.rid}: max_new_tokens must be >= 1 "
+                "(prefill always samples the first token)"
+            )
+        total = req.prompt_len + req.max_new_tokens
+        if total > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {req.prompt_len} + gen "
+                f"{req.max_new_tokens} exceeds max_len {self.max_len}"
+            )
+        # worst-case page need must fit the whole pool, or the request (or a
+        # preempted continuation of it) could block the FCFS head forever
+        if pages_for(total, self.page_size) > self.num_pages:
+            raise ValueError(
+                f"request {req.rid}: needs {pages_for(total, self.page_size)} "
+                f"pages worst-case, pool has {self.num_pages}"
+            )
+        self.scheduler.submit(req)
+
+    def _finish(self, slot: int, finished: list[RequestOutput]) -> None:
+        s = self._slots[slot]
+        finished.append(
+            RequestOutput(
+                rid=s.req.rid,
+                prompt_len=s.req.prompt_len,
+                tokens=s.generated,
+                arrival_time=s.req.arrival_time,
+                token_times=s.token_times,
+            )
+        )
+        self.alloc.release(slot)
+        self._slots[slot] = None
+        self._temps[slot] = 0.0
+
+    def _admit(self, now: float, finished: list[RequestOutput]) -> None:
+        while True:
+            req = self.scheduler.next_admissible(self.alloc, self.page_size, now)
+            if req is None:
+                return
+            slot, page_ids = self.alloc.allocate_slot(req.prompt_len, self.page_size)
+            plen = req.prompt_len
+            bucket = _bucket_len(plen, self.page_size, self.max_len)
+            tokens_pad = np.zeros((1, bucket), np.int32)
+            tokens_pad[0, :plen] = req.tokens
+            ids = np.full((bucket // self.page_size,), self.alloc.null_page, np.int32)
+            ids[: len(page_ids)] = page_ids
+            carry: _ActiveSeq = getattr(req, "_carry", None) or _ActiveSeq(
+                req=req, generated=[], token_times=[]
+            )
+            key = jax.random.fold_in(
+                jax.random.fold_in(self._prefill_key, req.rid), len(carry.generated)
+            )
+            self.pages, tok = self._prefill(
+                self.params, self.pages, jnp.asarray(tokens_pad), np.int32(plen),
+                jnp.asarray(ids), key, np.float32(req.temperature),
+            )
+            carry.generated.append(int(tok))  # admission-time sync, not per-step
+            carry.token_times.append(now if np.isfinite(now) else 0.0)
+            self._slots[slot] = carry
+            self._tokens[slot] = carry.generated[-1]
+            self._temps[slot] = req.temperature
+            if carry.remaining <= 0 or carry.generated[-1] == (
+                req.eos_id if req.eos_id is not None else -1
+            ):
+                self._finish(slot, finished)
+
+    def _preempt_one(self, stalled: list[int]) -> None:
+        """Pool exhausted and nothing can advance: evict the youngest stalled
+        sequence and requeue it as a continuation (its full prefix re-prefills
+        on readmission; the readmission prefill key folds in the generated
+        count, so its sampling stream does not repeat the first admission's)."""
+        victim = min(stalled, key=lambda i: int(self.alloc.seq_lens[i]))
+        s = self._slots[victim]
+        cont = Request(
+            rid=s.req.rid,
+            tokens=np.concatenate(
+                [s.req.tokens, np.asarray(s.generated, np.int32)]
+            ),
+            max_new_tokens=s.req.max_new_tokens,
+            temperature=s.req.temperature,
+            arrival_time=0.0,
+            eos_id=s.req.eos_id,
+        )
+        cont._carry = s  # type: ignore[attr-defined]
+        self.alloc.release(victim)
+        self._slots[victim] = None
+        self._temps[victim] = 0.0
+        self.scheduler.pending.appendleft(cont)
+
+    # ------------------------------------------------------------------
+    # serving loop
+    # ------------------------------------------------------------------
+    def step(self, now: float = float("inf")) -> list[RequestOutput]:
+        """Admit arrivals, advance every active slot one token, evict the
+        finished.  Returns requests completed during this step."""
+        finished: list[RequestOutput] = []
+        self._admit(now, finished)
+        active = np.array([s is not None for s in self._slots])
+        if not active.any():
+            return finished
+        stalled = []
+        for i, s in enumerate(self._slots):
+            if s is None:
+                continue
+            if not self.alloc.extend(
+                i, int(self.alloc.seq_lens[i]) + 1, self.page_size
+            ):
+                active[i] = False
+                stalled.append(i)
+        if not active.any():
+            self._preempt_one(stalled)
+            return finished
+        tok_dev, self.pages = self._decode(
+            self.params,
+            self.pages,
+            jnp.asarray(self._tokens),
+            jnp.asarray(self.alloc.block_tables),
+            jnp.asarray(self.alloc.seq_lens),
+            jnp.asarray(active),
+            jnp.asarray(self._temps),
+            self._decode_key,
+            np.int32(self._counter),
+        )
+        self._counter += 1
+        toks = np.asarray(tok_dev)  # the scheduler's sync point
+        t_emit = now if np.isfinite(now) else 0.0
+        for i in np.flatnonzero(active):
+            s = self._slots[i]
+            self.alloc.seq_lens[i] += 1
+            s.generated.append(int(toks[i]))
+            s.token_times.append(t_emit)
+            self._tokens[i] = toks[i]
+            done = s.remaining <= 0 or (
+                s.req.eos_id is not None and s.generated[-1] == s.req.eos_id
+            )
+            if done:
+                self._finish(int(i), finished)
+        return finished
+
+    def has_work(self) -> bool:
+        return bool(len(self.scheduler)) or any(
+            s is not None for s in self._slots
+        )
+
+    def run(self, requests: Optional[list[Request]] = None) -> list[RequestOutput]:
+        """Serve a trace to completion; ``arrival_time`` is honoured against
+        a wall clock starting at the first call."""
+        for r in requests or []:
+            self.submit(r)
+        outs: list[RequestOutput] = []
+        t0 = time.perf_counter()
+        while self.has_work():
+            now = time.perf_counter() - t0
+            pending = self.scheduler.pending
+            if not any(s is not None for s in self._slots) and pending:
+                wait = pending[0].arrival_time - now
+                if wait > 0:
+                    time.sleep(wait)
+                    now = time.perf_counter() - t0
+                elif not self.alloc.can_admit(
+                    pending[0].prompt_len + 1, self.page_size
+                ):
+                    # nothing active, head has arrived and still can't fit:
+                    # no step can change that — fail loudly, don't busy-spin
+                    raise RuntimeError(
+                        f"request {pending[0].rid} is unadmissible with all "
+                        f"slots idle ({pending[0].prompt_len + 1} tokens vs "
+                        f"{self.alloc.free_page_count} free pages)"
+                    )
+            outs.extend(self.step(now))
+        return outs

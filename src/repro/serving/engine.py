@@ -1,9 +1,12 @@
-"""Batched decode engine: prefill once, then jitted single-token steps.
+"""Static-batch decode engine: prefill once, then jitted single-token steps.
 
-The serving counterpart of the training service: used by the ``serve.py``
-launcher, the decode-shape dry-runs, and the quickstart example.  Sampling is
-greedy or temperature; the decode step is one jitted SPMD program whose state
-(KV caches / SSM states) is donated so updates are in-place on device.
+The simple baseline (and the only path for SSM/hybrid/encdec/mrope
+families): one batch enters together, decodes in lockstep to the longest
+request, and leaves together — sampling runs on the host between steps.
+The serving hot path for transformer families is
+``serving.continuous.ContinuousBatchingEngine`` (continuous batching over
+a paged KV cache with fused sampling); ``benchmarks/serving_bench.py``
+measures the two against each other.
 """
 
 from __future__ import annotations

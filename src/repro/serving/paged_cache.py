@@ -1,0 +1,95 @@
+"""Block-table paged KV cache management (host side).
+
+The device state is a single page pool per layer (``models.transformer.
+PagedKVState``); this module owns everything the scheduler needs on the
+host: the free-page list, per-slot block tables and live lengths.  All
+methods are O(pages touched) python — the hot path stays inside the
+engine's jitted step, which only ever sees the (small) block-table and
+seq-len arrays.
+
+Pool convention: page ids ``0..num_pages-1`` are allocatable; id
+``num_pages`` is the *null page*.  Unused block-table entries point at
+the null page so prefetched kernel indices are always in range and
+inactive-slot writes land harmlessly in trash.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    return (n_tokens + page_size - 1) // page_size
+
+
+class BlockAllocator:
+    """Free-list page allocator + per-slot block tables (pure host/numpy)."""
+
+    def __init__(self, num_slots: int, max_pages_per_seq: int, num_pages: int):
+        self.num_slots = num_slots
+        self.max_pages_per_seq = max_pages_per_seq
+        self.num_pages = num_pages
+        self.null_page = num_pages
+        self.free_pages: list[int] = list(range(num_pages - 1, -1, -1))
+        self.free_slots: list[int] = list(range(num_slots - 1, -1, -1))
+        self.block_tables = np.full(
+            (num_slots, max_pages_per_seq), self.null_page, np.int32
+        )
+        self.seq_lens = np.zeros((num_slots,), np.int32)
+
+    # ------------------------------------------------------------------
+    @property
+    def free_page_count(self) -> int:
+        return len(self.free_pages)
+
+    @property
+    def free_slot_count(self) -> int:
+        return len(self.free_slots)
+
+    def can_admit(self, n_tokens: int, page_size: int) -> bool:
+        need = pages_for(n_tokens, page_size)
+        return bool(
+            self.free_slots
+            and need <= len(self.free_pages)
+            and need <= self.max_pages_per_seq
+        )
+
+    # ------------------------------------------------------------------
+    def allocate_slot(self, n_tokens: int, page_size: int) -> tuple[int, list[int]]:
+        """Claim a slot and pages covering ``n_tokens``; returns (slot, pages)."""
+        assert self.can_admit(n_tokens, page_size)
+        slot = self.free_slots.pop()
+        n = pages_for(n_tokens, page_size)
+        page_ids = [self.free_pages.pop() for _ in range(n)]
+        self.block_tables[slot, :n] = page_ids
+        self.seq_lens[slot] = n_tokens
+        return slot, page_ids
+
+    def extend(self, slot: int, target_len: int, page_size: int) -> bool:
+        """Grow ``slot`` so positions < target_len are backed.  False = pool
+        exhausted (the caller stalls the slot this step and retries)."""
+        have = pages_for(int(self.seq_lens[slot]), page_size)
+        need = pages_for(target_len, page_size)
+        if need > self.max_pages_per_seq:
+            return False
+        if need - have > len(self.free_pages):
+            return False
+        for i in range(have, need):
+            self.block_tables[slot, i] = self.free_pages.pop()
+        return True
+
+    def release(self, slot: int) -> None:
+        """Evict a finished sequence: return its pages to the pool."""
+        row = self.block_tables[slot]
+        for p in row[row != self.null_page]:
+            self.free_pages.append(int(p))
+        row[:] = self.null_page
+        self.seq_lens[slot] = 0
+        self.free_slots.append(slot)
+
+    # ------------------------------------------------------------------
+    def live_tokens(self) -> int:
+        return int(self.seq_lens.sum())
+
+    def pages_in_use(self) -> int:
+        return self.num_pages - len(self.free_pages)

@@ -1,0 +1,86 @@
+"""Request queue + admission control for the continuous-batching engine.
+
+Requests are FCFS; a request is admitted when (a) its arrival time has
+passed on the trace clock, (b) a decode slot is free, and (c) the page
+pool can back its prompt plus one generated token.  The scheduler never
+reorders — head-of-line requests too big for the current pool block the
+queue until evictions free pages (simple, starvation-free).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from repro.serving.paged_cache import BlockAllocator
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request (prompt tokens + sampling params)."""
+
+    rid: int
+    tokens: np.ndarray  # (prompt_len,) int32
+    max_new_tokens: int
+    temperature: float = 0.0
+    arrival_time: float = 0.0  # seconds on the trace clock (0 = already queued)
+    eos_id: Optional[int] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.tokens.shape[0])
+
+
+@dataclasses.dataclass
+class RequestOutput:
+    """Finished request: generated tokens + per-token emission times."""
+
+    rid: int
+    prompt_len: int
+    tokens: list[int]
+    arrival_time: float
+    token_times: list[float]  # trace-clock time each token became available
+
+    @property
+    def finish_time(self) -> float:
+        return self.token_times[-1] if self.token_times else self.arrival_time
+
+
+def token_latencies(outs: list["RequestOutput"]) -> np.ndarray:
+    """Per-token latency across a set of finished requests: the first token
+    measures from arrival (TTFT), the rest are inter-token gaps (TPOT)."""
+    lats: list[float] = []
+    for o in outs:
+        prev = o.arrival_time
+        for t in o.token_times:
+            lats.append(max(t - prev, 0.0))
+            prev = t
+    return np.asarray(lats, np.float64)
+
+
+class AdmissionScheduler:
+    def __init__(self) -> None:
+        self.pending: deque[Request] = deque()
+
+    def submit(self, req: Request) -> None:
+        self.pending.append(req)
+
+    def __len__(self) -> int:
+        return len(self.pending)
+
+    def next_admissible(
+        self, alloc: BlockAllocator, page_size: int, now: float
+    ) -> Optional[Request]:
+        """Pop the head request if it has arrived and fits; else None."""
+        if not self.pending:
+            return None
+        head = self.pending[0]
+        if head.arrival_time > now:
+            return None
+        # +1: the first decode step writes the sampled token's K/V
+        if not alloc.can_admit(head.prompt_len + 1, page_size):
+            return None
+        return self.pending.popleft()

@@ -1,4 +1,6 @@
-"""ServeEngine: greedy decode is deterministic and matches manual stepping."""
+"""ServeEngine: greedy decode is deterministic and matches manual stepping.
+ContinuousBatchingEngine: paged continuous decode reproduces the static
+engine's greedy tokens through joins, evictions and preemption."""
 
 import jax
 import jax.numpy as jnp
@@ -7,7 +9,9 @@ import pytest
 
 from repro.config import get_arch, scale_down
 from repro.models import model_zoo as mz
+from repro.serving.continuous import ContinuousBatchingEngine
 from repro.serving.engine import ServeEngine
+from repro.serving.scheduler import Request
 
 
 @pytest.fixture(scope="module")
@@ -54,3 +58,90 @@ def test_temperature_sampling_stays_in_vocab(setup):
     eng = ServeEngine(cfg, params, max_len=24)
     out = eng.generate(prompt, 8, temperature=1.0, seed=3)
     assert int(out.max()) < cfg.vocab_size and int(out.min()) >= 0
+
+
+# ---------------------------------------------------------------------------
+# continuous batching over the paged KV cache
+# ---------------------------------------------------------------------------
+
+
+def test_continuous_matches_static_greedy(setup):
+    """Fewer slots than requests: sequences join and evict mid-flight, yet
+    every request reproduces the static engine's greedy continuation."""
+    cfg, model, params = setup
+    B, S, G = 3, 12, 6
+    prompt = jax.random.randint(jax.random.PRNGKey(5), (B, S), 0, cfg.vocab_size)
+    ref = np.asarray(ServeEngine(cfg, params, max_len=S + G).generate(
+        {"tokens": prompt}, G
+    ))
+    eng = ContinuousBatchingEngine(cfg, params, num_slots=2, page_size=8, max_len=64)
+    outs = eng.run([
+        Request(rid=i, tokens=np.asarray(prompt[i]), max_new_tokens=G)
+        for i in range(B)
+    ])
+    got = np.array([o.tokens for o in sorted(outs, key=lambda o: o.rid)])
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_continuous_variable_lengths_match_per_request(setup):
+    """Variable prompt/gen lengths: each request matches its own B=1 static
+    decode (no cross-request contamination through the shared page pool)."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(3)
+    reqs = [
+        Request(
+            rid=i,
+            tokens=rng.integers(0, cfg.vocab_size, int(pl)).astype(np.int32),
+            max_new_tokens=int(g),
+        )
+        for i, (pl, g) in enumerate([(5, 4), (17, 9), (9, 2), (24, 6)])
+    ]
+    eng = ContinuousBatchingEngine(cfg, params, num_slots=3, page_size=8, max_len=64)
+    outs = {o.rid: o.tokens for o in eng.run(list(reqs))}
+    for r in reqs:
+        ref = np.asarray(
+            ServeEngine(cfg, params, max_len=r.prompt_len + r.max_new_tokens).generate(
+                {"tokens": jnp.asarray(r.tokens[None])}, r.max_new_tokens
+            )
+        )[0]
+        np.testing.assert_array_equal(np.asarray(outs[r.rid]), ref)
+
+
+def test_continuous_preemption_requeue(setup):
+    """A page pool too small for both sequences forces preemption; the
+    continuation re-prefills and still matches static greedy."""
+    cfg, model, params = setup
+    B, S, G = 2, 12, 8
+    prompt = jax.random.randint(jax.random.PRNGKey(6), (B, S), 0, cfg.vocab_size)
+    ref = np.asarray(ServeEngine(cfg, params, max_len=S + G).generate(
+        {"tokens": prompt}, G
+    ))
+    eng = ContinuousBatchingEngine(
+        cfg, params, num_slots=2, page_size=8, max_len=32, num_pages=4
+    )
+    outs = eng.run([
+        Request(rid=i, tokens=np.asarray(prompt[i]), max_new_tokens=G)
+        for i in range(B)
+    ])
+    got = np.array([o.tokens for o in sorted(outs, key=lambda o: o.rid)])
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_continuous_temperature_and_validation(setup):
+    cfg, model, params = setup
+    eng = ContinuousBatchingEngine(cfg, params, num_slots=2, page_size=8, max_len=32)
+    outs = eng.run([
+        Request(rid=0, tokens=np.zeros((8,), np.int32), max_new_tokens=6,
+                temperature=0.9)
+    ])
+    toks = outs[0].tokens
+    assert len(toks) == 6 and max(toks) < cfg.vocab_size and min(toks) >= 0
+    with pytest.raises(ValueError):
+        eng.submit(Request(rid=1, tokens=np.zeros((30,), np.int32), max_new_tokens=8))
+    # worst-case page need beyond the pool is rejected at submit, not
+    # discovered as a busy-spinning never-admissible queue head
+    tiny = ContinuousBatchingEngine(
+        cfg, params, num_slots=2, page_size=8, max_len=32, num_pages=2
+    )
+    with pytest.raises(ValueError, match="pages"):
+        tiny.submit(Request(rid=2, tokens=np.zeros((8,), np.int32), max_new_tokens=9))
