@@ -27,6 +27,7 @@ MODULES = [
     ("train_scaling", "Fig.9 near-linear distributed training scaling"),
     ("mapgen_bench", "§5.2 fused map job 5x; ICP offload 30x"),
     ("serving_bench", "§4.3 serving: continuous batching + paged KV >=3x"),
+    ("scenario_bench", "§3 closed-loop scenario sweeps: scenarios/sec vs batch"),
 ]
 
 

@@ -1,0 +1,54 @@
+"""§3 closed-loop scenario throughput: scenarios/sec vs batch size.
+
+The paper's simulation service scales replay across thousands of cores; the
+closed-loop analog batches scenarios into one SoA ``lax.scan`` program, so
+throughput should grow near-linearly with batch size until the vector units
+saturate.  Reports scenario-steps/sec at S = 128..2048 (>= 1024 concurrent
+scenarios closed-loop per the acceptance bar) plus the Pallas collision
+kernel per-step cost at fleet width.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+from repro.scenario.dsl import build_batch
+from repro.scenario.world import aeb_policy, rollout
+
+STEPS = 64
+DT = 0.1
+
+
+def run() -> None:
+    base = None
+    for S in (128, 512, 1024, 2048):
+        per_family = S // 5 + 1
+        batch, _ = build_batch(per_family=per_family, key=jax.random.PRNGKey(0))
+        batch = jax.tree_util.tree_map(lambda x: x[:S], batch)
+
+        t = timeit(lambda: rollout(batch, aeb_policy, steps=STEPS, dt=DT)[0],
+                   iters=3, warmup=1)
+        scen_per_s = S / t
+        if base is None:
+            base = scen_per_s
+        row(
+            f"scenario_closed_loop_S{S}", t,
+            f"scen/s={scen_per_s:.0f},scen-steps/s={S * STEPS / t:.0f},"
+            f"scaling={scen_per_s / base:.2f}x",
+        )
+
+    # Pallas collision/TTC kernel, one fleet-wide step at S=2048
+    from repro.kernels.collision.ops import collision_ttc
+
+    S, A = 2048, 8
+    ks = jax.random.split(jax.random.PRNGKey(1), 6)
+    ep = jax.random.normal(ks[0], (S, 2)) * 30
+    ev = jax.random.normal(ks[1], (S, 2)) * 8
+    er = jnp.full((S,), 2.0)
+    ap = jax.random.normal(ks[2], (S, A, 2)) * 30
+    av = jax.random.normal(ks[3], (S, A, 2)) * 8
+    ar = jnp.full((S, A), 2.0)
+    t = timeit(lambda: collision_ttc(ep, ev, er, ap, av, ar), iters=3, warmup=1)
+    row(f"collision_kernel_S{S}xA{A}", t, f"pairs/s={S * A / t:.0f}")

@@ -1,0 +1,37 @@
+"""Closed-loop scenario sweep example (paper §3 service).
+
+Fans five scenario families (cut-in, hard-brake lead, merge, pedestrian
+crossing, occluded intersection) into a randomized sweep, shards the batch
+across scheduler containers, and qualifies a candidate planner (AEB) against
+the deployed baseline — the closed-loop counterpart of
+``examples/replay_simulation.py``.
+
+    PYTHONPATH=src python examples/run_scenarios.py
+"""
+
+import jax
+
+from repro.core.scheduler import ResourceManager
+from repro.scenario import FleetRunner, aeb_policy, baseline_policy, build_batch
+
+
+def main():
+    batch, families = build_batch(per_family=48, key=jax.random.PRNGKey(0))
+    print(f"compiled {batch.num_scenarios} scenarios across {len(families)} families")
+
+    # a shared 8-device pool: sweeps run as `simulate` jobs next to train/serve
+    runner = FleetRunner(ResourceManager(8), shards=4, devices_per_shard=2,
+                         steps=100, dt=0.1)
+
+    deployed, candidate, gate = runner.ab_test(
+        batch, families, baseline_policy, aeb_policy
+    )
+    print("\ndeployed planner (no AEB):")
+    print(deployed.summary())
+    print("\ncandidate planner (AEB):")
+    print(candidate.summary())
+    print("\nqualification verdict:", gate.verdict())
+
+
+if __name__ == "__main__":
+    main()

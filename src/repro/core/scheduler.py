@@ -20,9 +20,22 @@ elasticity logic:
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
+import threading
 import time
 from typing import Callable, Optional
+
+
+def _locked(fn):
+    """Run a ResourceManager method under the pool lock."""
+
+    @functools.wraps(fn)
+    def wrapper(self, *args, **kwargs):
+        with self._lock:
+            return fn(self, *args, **kwargs)
+
+    return wrapper
 
 JOB_PENDING = "PENDING"
 JOB_RUNNING = "RUNNING"
@@ -67,11 +80,16 @@ class ResourceManager:
         self.jobs: dict[str, Job] = {}
         self._cid = itertools.count(1)
         self.events: list[str] = []
+        # one pool, many tenants: submit/complete may race from worker
+        # threads (e.g. a sweep runner waiting out a train job); RLock
+        # because complete() -> schedule() re-enters
+        self._lock = threading.RLock()
 
     # ------------------------------------------------------------------
     def _log(self, msg: str) -> None:
         self.events.append(msg)
 
+    @_locked
     def submit(self, job: Job) -> None:
         if job.name in self.jobs:
             raise ValueError(f"duplicate job {job.name}")
@@ -79,13 +97,51 @@ class ResourceManager:
         self._log(f"submit {job.name} kind={job.kind} want={job.devices}")
         self.schedule()
 
+    @staticmethod
+    def _runs(ids: set[int]) -> list[tuple[int, int]]:
+        """Maximal contiguous runs of device ids as (start, length)."""
+        runs = []
+        start = prev = None
+        for d in sorted(ids):
+            if prev is None or d != prev + 1:
+                if start is not None:
+                    runs.append((start, prev - start + 1))
+                start = d
+            prev = d
+        if start is not None:
+            runs.append((start, prev - start + 1))
+        return runs
+
+    @classmethod
+    def _max_run(cls, ids: set[int]) -> int:
+        return max((length for _, length in cls._runs(ids)), default=0)
+
     def _allocate(self, n: int) -> Optional[Container]:
-        if len(self.free) < n:
+        """Claim a *contiguous* block of n devices (the sub-mesh container
+        promise) — best-fit over free runs so preemption churn doesn't
+        fragment the pool."""
+        if n <= 0 or len(self.free) < n:
             return None
-        ids = tuple(sorted(self.free)[:n])
+        fits = [(length, start) for start, length in self._runs(self.free) if length >= n]
+        if not fits:
+            return None
+        _, start = min(fits)
+        ids = tuple(range(start, start + n))
         self.free.difference_update(ids)
         c = Container(next(self._cid), ids)
         self.containers[c.cid] = c
+        return c
+
+    def _allocate_shrinking(self, size: int, min_devices: int) -> Optional[Container]:
+        """Try ``size`` first, halving toward ``min_devices`` when
+        fragmentation leaves no contiguous run that large."""
+        c = None
+        while c is None and size >= min_devices:
+            c = self._allocate(size)
+            if c is None:
+                if size == min_devices:
+                    break
+                size = max(size // 2, min_devices)
         return c
 
     def _release(self, c: Container) -> None:
@@ -93,6 +149,7 @@ class ResourceManager:
         self.containers.pop(c.cid, None)
 
     # ------------------------------------------------------------------
+    @_locked
     def schedule(self) -> None:
         """Greedy highest-priority-first packing with shrink + preemption."""
         pending = sorted(
@@ -106,9 +163,9 @@ class ResourceManager:
                 # elastic shrink: take what's available (>= min)
                 size = 1 << (len(self.free).bit_length() - 1)
                 size = max(size, job.min_devices)
-                c = self._allocate(size)
+                c = self._allocate_shrinking(size, job.min_devices)
                 if c is not None:
-                    self._log(f"shrink {job.name} -> {size}")
+                    self._log(f"shrink {job.name} -> {c.size}")
             if c is None:
                 c = self._preempt_for(job)
             if c is None:
@@ -125,15 +182,25 @@ class ResourceManager:
             (j for j in self.jobs.values() if j.state == JOB_RUNNING and j.priority < job.priority),
             key=lambda j: j.priority,
         )
-        freed = 0
+        # dry-run the evictions: only preempt if the resulting free pool has a
+        # *contiguous* run big enough — otherwise victims would lose progress
+        # for an allocation that still fails on fragmentation
+        hypo = set(self.free)
         taken = []
         for v in victims:
-            freed += v.container.size
+            hypo.update(set(v.container.device_ids) - self.quarantined)
             taken.append(v)
-            if freed + len(self.free) >= job.min_devices:
+            if self._max_run(hypo) >= job.min_devices:
                 break
-        if freed + len(self.free) < job.min_devices:
+        fits = [(length, start) for start, length in self._runs(hypo)
+                if length >= job.min_devices]
+        if not fits:
             return None
+        # spare victims whose devices don't touch the winning run — evicting
+        # them would cost their progress without helping the requester
+        length, start = min(fits)
+        run_ids = set(range(start, start + length))
+        taken = [v for v in taken if set(v.container.device_ids) & run_ids]
         for v in taken:
             self._log(f"preempt {v.name}")
             self._release(v.container)
@@ -143,9 +210,10 @@ class ResourceManager:
         want = min(job.devices, len(self.free))
         size = 1 << (want.bit_length() - 1) if want else 0
         size = max(size, job.min_devices)
-        return self._allocate(size)
+        return self._allocate_shrinking(size, job.min_devices)
 
     # ------------------------------------------------------------------
+    @_locked
     def complete(self, name: str) -> None:
         job = self.jobs[name]
         job.state = JOB_DONE
@@ -155,6 +223,7 @@ class ResourceManager:
         self._log(f"done {name}")
         self.schedule()
 
+    @_locked
     def fail_container(self, name: str, dead_devices: int = 1) -> None:
         """A node in the job's container died: quarantine devices, resubmit."""
         job = self.jobs[name]
@@ -168,6 +237,7 @@ class ResourceManager:
         job.state = JOB_PENDING  # driver resumes from checkpoint on reschedule
         self.schedule()
 
+    @_locked
     def heal(self, device_ids: Optional[list[int]] = None) -> None:
         ids = set(device_ids) if device_ids else set(self.quarantined)
         self.quarantined.difference_update(ids)

@@ -1,0 +1,4 @@
+"""Pairwise ego-agent collision / time-to-collision Pallas kernel package."""
+
+from repro.kernels.collision.ops import collision_ttc  # noqa: F401
+from repro.kernels.collision.ref import collision_ttc_ref  # noqa: F401

@@ -1,0 +1,52 @@
+"""Pure-jnp oracle for the collision/TTC kernel.
+
+Entities are discs: an ego disc per scenario and ``A`` agent discs.  For each
+ego-agent pair the oracle returns
+
+* ``dist`` — signed surface distance ``|p_a - p_e| - (r_e + r_a)`` (negative
+  means overlap),
+* ``ttc`` — time until the discs first touch under constant velocities,
+  i.e. the smaller positive root of ``|p + v t| = r_e + r_a``;  ``0`` when
+  already overlapping and ``TTC_MAX`` when the pair is not on a collision
+  course,
+* ``hit`` — boolean collision flag (``dist <= 0``).
+
+The closed-loop world step evaluates exactly this math every tick; the
+Pallas kernel in ``kernel.py`` is the tiled scenarios x agents version of it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+TTC_MAX = 1e9
+_EPS = 1e-9
+
+
+def collision_ttc_ref(
+    ego_pos: jax.Array,  # (S, 2)
+    ego_vel: jax.Array,  # (S, 2)
+    ego_radius: jax.Array,  # (S,)
+    agent_pos: jax.Array,  # (S, A, 2)
+    agent_vel: jax.Array,  # (S, A, 2)
+    agent_radius: jax.Array,  # (S, A)
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (dist (S,A) f32, ttc (S,A) f32, hit (S,A) bool)."""
+    rel = agent_pos.astype(jnp.float32) - ego_pos.astype(jnp.float32)[:, None, :]
+    rv = agent_vel.astype(jnp.float32) - ego_vel.astype(jnp.float32)[:, None, :]
+    rad = ego_radius.astype(jnp.float32)[:, None] + agent_radius.astype(jnp.float32)
+
+    # |rel|^2 and the quadratic |rel + rv t|^2 = rad^2:  a t^2 + b t + c = 0
+    c2 = jnp.einsum("sad,sad->sa", rel, rel)
+    a = jnp.einsum("sad,sad->sa", rv, rv)
+    b = 2.0 * jnp.einsum("sad,sad->sa", rel, rv)
+    c = c2 - rad * rad
+
+    dist = jnp.sqrt(jnp.maximum(c2, 0.0)) - rad
+    disc = b * b - 4.0 * a * c
+    t_hit = (-b - jnp.sqrt(jnp.maximum(disc, 0.0))) / (2.0 * a + _EPS)
+    approaching = (disc > 0.0) & (t_hit > 0.0)
+    ttc = jnp.where(c <= 0.0, 0.0, jnp.where(approaching, t_hit, TTC_MAX))
+    hit = dist <= 0.0
+    return dist, ttc, hit

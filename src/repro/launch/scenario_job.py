@@ -1,0 +1,61 @@
+"""Closed-loop scenario sweep driver (paper §3 simulation service).
+
+    PYTHONPATH=src python -m repro.launch.scenario_job --per-family 64 --shards 4
+    PYTHONPATH=src python -m repro.launch.scenario_job --ab-test --policy aeb
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.core.scheduler import ResourceManager
+from repro.scenario.dsl import FAMILIES, build_batch
+from repro.scenario.runner import FleetRunner
+from repro.scenario.world import aeb_policy, baseline_policy
+
+POLICIES = {"baseline": baseline_policy, "aeb": aeb_policy}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--families", nargs="*", default=None, choices=sorted(FAMILIES),
+                    help="scenario families to sweep (default: all)")
+    ap.add_argument("--per-family", type=int, default=64)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--dt", type=float, default=0.1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--policy", default="aeb", choices=sorted(POLICIES))
+    ap.add_argument("--shards", type=int, default=4)
+    ap.add_argument("--devices", type=int, default=8, help="scheduler pool size")
+    ap.add_argument("--devices-per-shard", type=int, default=2)
+    ap.add_argument("--pallas-collision", action="store_true",
+                    help="route collision/TTC through the Pallas kernel")
+    ap.add_argument("--ab-test", action="store_true",
+                    help="qualify --policy against the deployed baseline")
+    args = ap.parse_args(argv)
+
+    batch, names = build_batch(args.families, args.per_family,
+                               jax.random.PRNGKey(args.seed))
+    runner = FleetRunner(
+        ResourceManager(args.devices),
+        shards=args.shards, devices_per_shard=args.devices_per_shard,
+        steps=args.steps, dt=args.dt, use_pallas=args.pallas_collision,
+    )
+    if args.ab_test:
+        rep_a, rep_b, gate = runner.ab_test(
+            batch, names, baseline_policy, POLICIES[args.policy]
+        )
+        print("[scenario] deployed (baseline):")
+        print(rep_a.summary())
+        print(f"[scenario] candidate ({args.policy}):")
+        print(rep_b.summary())
+        print("[scenario] verdict:", gate.verdict())
+    else:
+        rep = runner.run(batch, names, POLICIES[args.policy])
+        print(rep.summary())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Closed-loop scenario simulation service (paper §3).
+
+Where ``repro.sim`` replays recorded logs open-loop, this subsystem *drives*:
+a candidate planner closes the loop against scripted/reactive traffic over
+thousands of scenarios stepped as one batched SoA program.
+
+* :mod:`repro.scenario.world` — jitted batched world step (ego bicycle model
+  + phase-scripted agents) rolled out with ``lax.scan`` and donated state;
+* :mod:`repro.scenario.dsl` — declarative scenario specs, a library of
+  scenario families, and PRNG-split randomized parameter sweeps compiled to
+  initial-state tensors;
+* :mod:`repro.scenario.metrics` — safety-metric aggregation into a
+  :class:`ScenarioReport` (collision rate, min-TTC histogram, violations);
+* :mod:`repro.scenario.runner` — fleet runner sharding scenario batches over
+  ``core.scheduler`` containers plus the A/B planner qualification gate.
+"""
+
+from repro.scenario.dsl import (  # noqa: F401
+    FAMILIES,
+    AgentSpec,
+    ScenarioSpec,
+    build_batch,
+    compile_specs,
+)
+from repro.scenario.metrics import ScenarioReport, aggregate, qualify  # noqa: F401
+from repro.scenario.runner import FleetRunner  # noqa: F401
+from repro.scenario.world import aeb_policy, baseline_policy, rollout  # noqa: F401

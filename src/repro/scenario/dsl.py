@@ -1,0 +1,257 @@
+"""Declarative scenario DSL + family library (paper §3: "as many scenarios
+as you can imagine").
+
+A :class:`ScenarioSpec` is a plain declarative description — ego initial
+state plus a tuple of :class:`AgentSpec` three-phase scripts.  Family
+builders (``cut_in``, ``hard_brake_lead``, ``merge``,
+``pedestrian_crossing``, ``occluded_intersection``) sample spec parameters
+from documented ranges via PRNG-split perturbations, so a single seed fans
+out into a randomized sweep; deterministic ``*_spec`` constructors expose
+the canonical instance of each family for tests.
+
+:func:`compile_specs` lowers a list of specs into the SoA
+:class:`~repro.scenario.world.ScenarioBatch` tensors the jitted world step
+consumes (agent axis padded to the widest spec, invalid slots parked far
+away with zero radius).
+
+Geometry conventions: ego starts at the origin heading +x, lane centers at
+``y = 0, ±3.5``; distances in meters, speeds m/s, times seconds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.scenario.world import ScenarioBatch
+
+LANE_W = 3.5
+FAR = 1.0e6  # parking spot for padded agent slots
+NEVER = 1.0e9  # phase switch time that never arrives
+
+
+@dataclasses.dataclass(frozen=True)
+class AgentSpec:
+    """One scripted traffic participant (vehicle or pedestrian)."""
+
+    x: float
+    y: float
+    psi: float = 0.0
+    v: float = 0.0
+    radius: float = 2.0
+    accel_phases: tuple[float, float, float] = (0.0, 0.0, 0.0)
+    yaw_phases: tuple[float, float, float] = (0.0, 0.0, 0.0)
+    phase_times: tuple[float, float] = (NEVER, NEVER)
+    reactive: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """One closed-loop scenario: ego initial condition + scripted agents."""
+
+    family: str
+    ego_v: float
+    ego_target_v: float | None = None  # defaults to ego_v
+    ego_y: float = 0.0
+    ego_psi: float = 0.0
+    ego_radius: float = 2.0
+    speed_limit: float = 30.0
+    agents: tuple[AgentSpec, ...] = ()
+
+
+# ---------------------------------------------------------------------------
+# Spec -> tensor compilation
+# ---------------------------------------------------------------------------
+
+
+def compile_specs(specs: Sequence[ScenarioSpec]) -> tuple[ScenarioBatch, list[str]]:
+    """Lower specs into ``(ScenarioBatch, family_names)``; ``family_id``
+    indexes ``family_names`` (stable first-appearance order)."""
+    if not specs:
+        raise ValueError("compile_specs: empty spec list")
+    S = len(specs)
+    A = max(1, max(len(s.agents) for s in specs))
+    names = list(dict.fromkeys(s.family for s in specs))
+    fid = {n: i for i, n in enumerate(names)}
+
+    ego = np.zeros((S, 7), np.float32)  # x0 y0 psi0 v0 radius target_v limit
+    family = np.zeros((S,), np.int32)
+    agf = {
+        k: np.zeros((S, A), np.float32)
+        for k in ("x", "y", "psi", "v", "radius", "reactive", "valid")
+    }
+    agf["x"].fill(FAR)
+    agf["y"].fill(FAR)
+    accel = np.zeros((S, A, 3), np.float32)
+    yaw = np.zeros((S, A, 3), np.float32)
+    times = np.full((S, A, 2), NEVER, np.float32)
+
+    for i, s in enumerate(specs):
+        tv = s.ego_v if s.ego_target_v is None else s.ego_target_v
+        ego[i] = (0.0, s.ego_y, s.ego_psi, s.ego_v, s.ego_radius, tv, s.speed_limit)
+        family[i] = fid[s.family]
+        for j, a in enumerate(s.agents):
+            agf["x"][i, j] = a.x
+            agf["y"][i, j] = a.y
+            agf["psi"][i, j] = a.psi
+            agf["v"][i, j] = a.v
+            agf["radius"][i, j] = a.radius
+            agf["reactive"][i, j] = float(a.reactive)
+            agf["valid"][i, j] = 1.0
+            accel[i, j] = a.accel_phases
+            yaw[i, j] = a.yaw_phases
+            times[i, j] = a.phase_times
+
+    batch = ScenarioBatch(
+        ego_x0=jnp.asarray(ego[:, 0]),
+        ego_y0=jnp.asarray(ego[:, 1]),
+        ego_psi0=jnp.asarray(ego[:, 2]),
+        ego_v0=jnp.asarray(ego[:, 3]),
+        ego_radius=jnp.asarray(ego[:, 4]),
+        target_v=jnp.asarray(ego[:, 5]),
+        speed_limit=jnp.asarray(ego[:, 6]),
+        family_id=jnp.asarray(family),
+        ag_x0=jnp.asarray(agf["x"]),
+        ag_y0=jnp.asarray(agf["y"]),
+        ag_psi0=jnp.asarray(agf["psi"]),
+        ag_v0=jnp.asarray(agf["v"]),
+        ag_radius=jnp.asarray(agf["radius"]),
+        accel_phases=jnp.asarray(accel),
+        yaw_phases=jnp.asarray(yaw),
+        phase_t=jnp.asarray(times),
+        reactive=jnp.asarray(agf["reactive"]),
+        valid=jnp.asarray(agf["valid"]),
+    )
+    return batch, names
+
+
+# ---------------------------------------------------------------------------
+# Canonical (deterministic) family instances
+# ---------------------------------------------------------------------------
+
+
+def hard_brake_spec(
+    gap: float = 18.0, v: float = 15.0, brake_t: float = 1.0, decel: float = 7.0
+) -> ScenarioSpec:
+    """Lead vehicle ahead slams the brakes at ``brake_t``."""
+    lead = AgentSpec(
+        x=gap, y=0.0, v=v,
+        accel_phases=(0.0, -decel, -decel), phase_times=(brake_t, NEVER),
+    )
+    return ScenarioSpec(family="hard_brake_lead", ego_v=v, agents=(lead,))
+
+
+def cut_in_spec(
+    dx: float = 8.0, dv: float = 2.5, ego_v: float = 15.0,
+    yaw_rate: float = 0.08, turn_s: float = 1.7,
+) -> ScenarioSpec:
+    """Slower adjacent-lane vehicle swerves into the ego lane ``dv`` m/s
+    under ego speed, then straightens — the ego closes in from behind."""
+    cutter = AgentSpec(
+        x=dx, y=LANE_W, v=max(ego_v - dv, 0.0),
+        yaw_phases=(-yaw_rate, yaw_rate, 0.0), phase_times=(turn_s, 2 * turn_s),
+    )
+    return ScenarioSpec(family="cut_in", ego_v=ego_v, agents=(cutter,))
+
+
+def merge_spec(
+    dx: float = 0.0, ego_v: float = 14.0, ramp_v: float = 11.0,
+    yaw_rate: float = 0.08, turn_s: float = 1.7, accel: float = 1.2,
+) -> ScenarioSpec:
+    """On-ramp vehicle accelerates and merges up into the ego lane."""
+    merger = AgentSpec(
+        x=dx, y=-LANE_W, v=ramp_v, reactive=True,
+        accel_phases=(accel, accel, 0.0),
+        yaw_phases=(yaw_rate, -yaw_rate, 0.0), phase_times=(turn_s, 2 * turn_s),
+    )
+    return ScenarioSpec(family="merge", ego_v=ego_v, agents=(merger,))
+
+
+def pedestrian_spec(
+    dx: float = 28.0, start_t: float = 0.8, walk_v: float = 1.4, ego_v: float = 12.0
+) -> ScenarioSpec:
+    """Pedestrian at the curb starts crossing after ``start_t`` seconds;
+    reactive (pauses rather than walking into a vehicle blocking the path)."""
+    ped = AgentSpec(
+        x=dx, y=-6.0, psi=math.pi / 2, v=0.0, radius=0.4, reactive=True,
+        accel_phases=(0.0, walk_v, 0.0), phase_times=(start_t, start_t + 1.0),
+    )
+    return ScenarioSpec(family="pedestrian_crossing", ego_v=ego_v, agents=(ped,))
+
+
+def intersection_spec(
+    dx: float = 30.0, cross_v: float = 9.0, ego_v: float = 13.0
+) -> ScenarioSpec:
+    """Cross traffic from the right, sightline blocked by a parked truck."""
+    crosser = AgentSpec(x=dx, y=-18.0, psi=math.pi / 2, v=cross_v)
+    occluder = AgentSpec(x=dx - 8.0, y=-4.5, v=0.0, radius=2.2)
+    return ScenarioSpec(family="occluded_intersection", ego_v=ego_v,
+                        agents=(crosser, occluder))
+
+
+# ---------------------------------------------------------------------------
+# Randomized family sweeps (PRNG-split perturbations)
+# ---------------------------------------------------------------------------
+
+
+def _sweep(key: jax.Array, n: int, ranges: Sequence[tuple[float, float]]) -> np.ndarray:
+    """(n, len(ranges)) uniform samples, one column per parameter range."""
+    u = np.asarray(jax.random.uniform(key, (n, len(ranges)), jnp.float32))
+    lo = np.array([r[0] for r in ranges], np.float32)
+    hi = np.array([r[1] for r in ranges], np.float32)
+    return lo + (hi - lo) * u
+
+
+def hard_brake_lead(key: jax.Array, n: int = 1) -> list[ScenarioSpec]:
+    p = _sweep(key, n, [(15.0, 25.0), (12.0, 18.0), (0.6, 1.4), (6.0, 8.0)])
+    return [hard_brake_spec(*row) for row in p]
+
+
+def cut_in(key: jax.Array, n: int = 1) -> list[ScenarioSpec]:
+    p = _sweep(key, n, [(6.0, 12.0), (1.0, 4.0), (12.0, 18.0), (0.06, 0.1), (1.4, 2.0)])
+    return [cut_in_spec(*row) for row in p]
+
+
+def merge(key: jax.Array, n: int = 1) -> list[ScenarioSpec]:
+    p = _sweep(key, n, [(-5.0, 5.0), (12.0, 16.0), (9.0, 13.0)])
+    return [merge_spec(*row) for row in p]
+
+
+def pedestrian_crossing(key: jax.Array, n: int = 1) -> list[ScenarioSpec]:
+    p = _sweep(key, n, [(20.0, 40.0), (0.3, 1.5), (1.1, 1.8), (10.0, 15.0)])
+    return [pedestrian_spec(*row) for row in p]
+
+
+def occluded_intersection(key: jax.Array, n: int = 1) -> list[ScenarioSpec]:
+    p = _sweep(key, n, [(25.0, 40.0), (7.0, 12.0), (11.0, 15.0)])
+    return [intersection_spec(*row) for row in p]
+
+
+FAMILIES: dict[str, Callable[[jax.Array, int], list[ScenarioSpec]]] = {
+    "hard_brake_lead": hard_brake_lead,
+    "cut_in": cut_in,
+    "merge": merge,
+    "pedestrian_crossing": pedestrian_crossing,
+    "occluded_intersection": occluded_intersection,
+}
+
+
+def build_batch(
+    families: Sequence[str] | None = None,
+    per_family: int = 32,
+    key: jax.Array | None = None,
+) -> tuple[ScenarioBatch, list[str]]:
+    """Fan the given families (default: all five) into a compiled randomized
+    sweep of ``per_family`` scenarios each — one PRNG split per family, so
+    the batch is a pure function of the seed."""
+    families = list(FAMILIES) if families is None else list(families)
+    key = jax.random.PRNGKey(0) if key is None else key
+    specs: list[ScenarioSpec] = []
+    for fam, k in zip(families, jax.random.split(key, len(families))):
+        specs.extend(FAMILIES[fam](k, per_family))
+    return compile_specs(specs)

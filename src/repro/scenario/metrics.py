@@ -1,0 +1,152 @@
+"""Safety-metric aggregation for scenario sweeps (paper §3 qualification).
+
+Per-scenario rollout outputs (collision flag, min signed distance, min TTC,
+rule-violation counts) aggregate into a :class:`ScenarioReport` with
+per-family breakdowns, and :func:`qualify` is the A/B planner qualification
+gate — the closed-loop analog of ``ReplaySimulator.ab_test``'s "quick
+verification before on-road testing".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+DEFAULT_TTC_BINS = (0.0, 0.5, 1.0, 2.0, 3.0, 5.0)
+
+
+@dataclasses.dataclass
+class FamilyStats:
+    scenarios: int
+    collisions: int
+    collision_rate: float
+    mean_min_dist: float
+    min_ttc_hist: list[int]  # counts per DEFAULT_TTC_BINS bucket (last = >= last edge)
+    violation_rate: float  # fraction of scenarios with >= 1 speeding step
+
+
+@dataclasses.dataclass
+class ScenarioReport:
+    scenarios: int
+    steps: int
+    wall_time_s: float
+    scenarios_per_sec: float
+    steps_per_sec: float  # scenario-steps / s (the fleet throughput figure)
+    collision_rate: float
+    families: dict[str, FamilyStats]
+    ttc_bin_edges: tuple[float, ...] = DEFAULT_TTC_BINS
+
+    def summary(self) -> str:
+        lines = [
+            f"scenarios={self.scenarios} steps={self.steps} "
+            f"wall={self.wall_time_s:.2f}s "
+            f"({self.scenarios_per_sec:.0f} scen/s, {self.steps_per_sec:.0f} scen-steps/s) "
+            f"collision_rate={self.collision_rate:.3f}"
+        ]
+        for name, fs in sorted(self.families.items()):
+            lines.append(
+                f"  {name:24s} n={fs.scenarios:4d} collisions={fs.collisions:3d} "
+                f"({fs.collision_rate:.3f}) min_dist={fs.mean_min_dist:6.2f}m "
+                f"ttc_hist={fs.min_ttc_hist} viol={fs.violation_rate:.3f}"
+            )
+        return "\n".join(lines)
+
+
+def _ttc_hist(ttc: np.ndarray, edges: tuple[float, ...]) -> list[int]:
+    bins = list(edges) + [np.inf]
+    hist, _ = np.histogram(ttc, bins=bins)
+    return hist.astype(int).tolist()
+
+
+def aggregate(
+    family_ids: np.ndarray,
+    family_names: list[str],
+    collided: np.ndarray,
+    min_ttc: np.ndarray,
+    min_dist: np.ndarray,
+    violations: np.ndarray,
+    *,
+    steps: int,
+    wall_time_s: float,
+    ttc_bins: tuple[float, ...] = DEFAULT_TTC_BINS,
+) -> ScenarioReport:
+    family_ids = np.asarray(family_ids)
+    collided = np.asarray(collided).astype(bool)
+    min_ttc = np.asarray(min_ttc, np.float64)
+    min_dist = np.asarray(min_dist, np.float64)
+    violations = np.asarray(violations)
+    S = collided.shape[0]
+
+    families: dict[str, FamilyStats] = {}
+    for i, name in enumerate(family_names):
+        m = family_ids == i
+        n = int(m.sum())
+        if n == 0:
+            continue
+        families[name] = FamilyStats(
+            scenarios=n,
+            collisions=int(collided[m].sum()),
+            collision_rate=float(collided[m].mean()),
+            mean_min_dist=float(min_dist[m].mean()),
+            min_ttc_hist=_ttc_hist(min_ttc[m], ttc_bins),
+            violation_rate=float((violations[m] > 0).mean()),
+        )
+    wall = max(wall_time_s, 1e-9)
+    return ScenarioReport(
+        scenarios=S,
+        steps=steps,
+        wall_time_s=wall_time_s,
+        scenarios_per_sec=S / wall,
+        steps_per_sec=S * steps / wall,
+        collision_rate=float(collided.mean()) if S else 0.0,
+        families=families,
+        ttc_bin_edges=ttc_bins,
+    )
+
+
+# ---------------------------------------------------------------------------
+# A/B planner qualification gate
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class QualificationResult:
+    passed: bool
+    baseline_collision_rate: float
+    candidate_collision_rate: float
+    reasons: list[str]
+
+    def verdict(self) -> str:
+        return "QUALIFY for road test" if self.passed else "REJECT: " + "; ".join(self.reasons)
+
+
+def qualify(
+    baseline: ScenarioReport,
+    candidate: ScenarioReport,
+    *,
+    max_collision_regression: float = 0.0,
+    max_family_regression: float = 0.02,
+) -> QualificationResult:
+    """Gate a candidate planner against the deployed baseline: overall
+    collision rate must not regress beyond ``max_collision_regression``, nor
+    any shared scenario family beyond ``max_family_regression``."""
+    reasons = []
+    if candidate.collision_rate > baseline.collision_rate + max_collision_regression:
+        reasons.append(
+            f"overall collision rate {candidate.collision_rate:.3f} > "
+            f"baseline {baseline.collision_rate:.3f} + {max_collision_regression}"
+        )
+    for name, b in baseline.families.items():
+        c = candidate.families.get(name)
+        if c is not None and c.collision_rate > b.collision_rate + max_family_regression:
+            reasons.append(
+                f"family {name}: {c.collision_rate:.3f} > "
+                f"{b.collision_rate:.3f} + {max_family_regression}"
+            )
+    return QualificationResult(
+        passed=not reasons,
+        baseline_collision_rate=baseline.collision_rate,
+        candidate_collision_rate=candidate.collision_rate,
+        reasons=reasons,
+    )

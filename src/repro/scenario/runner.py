@@ -1,0 +1,166 @@
+"""Fleet-scale scenario sweep runner (paper §3 distributed simulation).
+
+Shards a compiled :class:`~repro.scenario.world.ScenarioBatch` across
+``core.scheduler.ResourceManager`` containers (job kind ``simulate`` — the
+YARN-queue analog), closes the loop on every shard, and aggregates
+per-scenario safety metrics into a :class:`~repro.scenario.metrics.ScenarioReport`.
+
+Like ``ReplaySimulator``, shard execution is in-process (the single-host
+stand-in for the cluster executors); the scheduler still does real
+admission/queueing work, so sweeps coexist with train/serve jobs on the
+shared device pool — shards queue while the pool is busy and run as
+containers free up.  ``ab_test`` is the closed-loop planner qualification
+flow: same scenario sweep, deployed vs candidate policy, gated by
+:func:`~repro.scenario.metrics.qualify`.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Sequence
+
+import jax
+import numpy as np
+
+from repro.core.scheduler import JOB_DONE, JOB_RUNNING, Job, ResourceManager
+from repro.scenario import metrics as M
+from repro.scenario.world import Policy, RolloutMetrics, ScenarioBatch, rollout
+
+
+def _slice_batch(batch: ScenarioBatch, lo: int, hi: int) -> ScenarioBatch:
+    return jax.tree_util.tree_map(lambda x: x[lo:hi], batch)
+
+
+class FleetRunner:
+    """Runs scenario sweeps as ``simulate`` jobs on a shared device pool."""
+
+    def __init__(
+        self,
+        rm: ResourceManager,
+        *,
+        shards: int = 4,
+        devices_per_shard: int = 1,
+        steps: int = 100,
+        dt: float = 0.1,
+        use_pallas: bool = False,
+        priority: int = 0,
+        schedule_timeout_s: float = 60.0,
+    ):
+        self.rm = rm
+        self.shards = shards
+        self.devices_per_shard = devices_per_shard
+        self.steps = steps
+        self.dt = dt
+        self.use_pallas = use_pallas
+        self.priority = priority
+        self.schedule_timeout_s = schedule_timeout_s
+        self.shard_times_s: list[float] = []
+
+    # ------------------------------------------------------------------
+    def _run_shard(self, shard: ScenarioBatch, policy: Policy) -> RolloutMetrics:
+        m, _ = rollout(
+            shard, policy, steps=self.steps, dt=self.dt, use_pallas=self.use_pallas
+        )
+        return jax.block_until_ready(m)
+
+    def run(
+        self,
+        batch: ScenarioBatch,
+        family_names: Sequence[str],
+        policy: Policy,
+        *,
+        job_prefix: str = "scenario",
+    ) -> M.ScenarioReport:
+        """Shard the batch, schedule one ``simulate`` job per shard, execute
+        scheduled shards as their containers come up, aggregate."""
+        S = batch.num_scenarios
+        n_shards = max(1, min(self.shards, S))
+        bounds = np.linspace(0, S, n_shards + 1, dtype=int)
+        names = [f"{job_prefix}-{time.monotonic_ns()}-{i}" for i in range(n_shards)]
+
+        t0 = time.perf_counter()
+        for name in names:
+            self.rm.submit(Job(
+                name, "simulate", devices=self.devices_per_shard,
+                min_devices=1, priority=self.priority,
+            ))
+
+        done: dict[int, RolloutMetrics] = {}
+        self.shard_times_s = [0.0] * n_shards
+        try:
+            self._drain(batch, policy, names, bounds, done, t0)
+        finally:
+            # never leak queued/assigned shard jobs into the shared pool,
+            # even when aborting on timeout or a shard failure
+            for name in names:
+                if self.rm.jobs[name].state != JOB_DONE:
+                    self.rm.complete(name)
+        wall = time.perf_counter() - t0
+
+        cat = lambda f: np.concatenate([np.asarray(getattr(done[i], f)) for i in range(n_shards)])
+        return M.aggregate(
+            np.asarray(batch.family_id),
+            list(family_names),
+            cat("collided"),
+            cat("min_ttc"),
+            cat("min_dist"),
+            cat("violations"),
+            steps=self.steps,
+            wall_time_s=wall,
+        )
+
+    def _drain(
+        self,
+        batch: ScenarioBatch,
+        policy: Policy,
+        names: list[str],
+        bounds: np.ndarray,
+        done: dict[int, RolloutMetrics],
+        t0: float,
+    ) -> None:
+        n_shards = len(names)
+        while len(done) < n_shards:
+            ran_any = False
+            for i, name in enumerate(names):
+                job = self.rm.jobs[name]
+                if i in done or job.state != JOB_RUNNING:
+                    continue
+                ts = time.perf_counter()
+                done[i] = self._run_shard(
+                    _slice_batch(batch, int(bounds[i]), int(bounds[i + 1])), policy
+                )
+                self.shard_times_s[i] = time.perf_counter() - ts
+                self.rm.complete(name)  # frees the container, reschedules queue
+                ran_any = True
+            if not ran_any:
+                # pool held by foreign train/serve jobs: wait for their
+                # containers to free up (another thread drives rm.complete)
+                foreign = [
+                    j.name for j in self.rm.jobs.values()
+                    if j.state == JOB_RUNNING and j.name not in names
+                ]
+                if foreign and time.perf_counter() - t0 < self.schedule_timeout_s:
+                    # the completing thread's rm.complete() reschedules the
+                    # queue; just poll job states here
+                    time.sleep(0.01)
+                    continue
+                stuck = [names[i] for i in range(n_shards) if i not in done]
+                raise RuntimeError(
+                    f"scenario shards cannot be scheduled: {stuck}"
+                    + (f" (pool held by {foreign})" if foreign else "")
+                )
+
+    # ------------------------------------------------------------------
+    def ab_test(
+        self,
+        batch: ScenarioBatch,
+        family_names: Sequence[str],
+        deployed: Policy,
+        candidate: Policy,
+        **gate_kwargs,
+    ) -> tuple[M.ScenarioReport, M.ScenarioReport, M.QualificationResult]:
+        """Closed-loop qualification: same sweep under both planners, gated
+        on collision-rate regression (overall and per family)."""
+        rep_a = self.run(batch, family_names, deployed, job_prefix="ab-deployed")
+        rep_b = self.run(batch, family_names, candidate, job_prefix="ab-candidate")
+        return rep_a, rep_b, M.qualify(rep_a, rep_b, **gate_kwargs)

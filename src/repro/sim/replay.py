@@ -139,6 +139,12 @@ class ReplaySimulator:
             per_part.append(time.perf_counter() - tp)
         wall = time.perf_counter() - t0
         scores = np.concatenate(all_scores) if all_scores else np.zeros((0, 1))
+        if scores.shape[0] == 0:
+            # empty partition list: report zeros instead of reducing over ()
+            return ReplayReport(
+                partitions=len(parts), frames=0, mean_score=0.0, score_std=0.0,
+                max_score=0.0, wall_time_s=wall, per_partition_s=per_part,
+            )
         return ReplayReport(
             partitions=len(parts),
             frames=int(scores.shape[0]),

@@ -1,0 +1,237 @@
+"""Closed-loop scenario subsystem: kernel parity, DSL determinism, physics
+smoke runs, and the fleet runner / qualification gate (paper §3)."""
+
+import dataclasses
+import math
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.scheduler import JOB_DONE, ResourceManager
+from repro.kernels.collision.ops import collision_ttc
+from repro.kernels.collision.ref import TTC_MAX, collision_ttc_ref
+from repro.scenario.dsl import (
+    FAMILIES,
+    AgentSpec,
+    ScenarioSpec,
+    build_batch,
+    compile_specs,
+    cut_in_spec,
+    hard_brake_spec,
+    pedestrian_spec,
+)
+from repro.scenario.metrics import qualify
+from repro.scenario.runner import FleetRunner
+from repro.scenario.world import aeb_policy, baseline_policy, rollout
+
+
+# ---------------------------------------------------------------------------
+# collision kernel vs oracle (interpret mode)
+# ---------------------------------------------------------------------------
+
+COLLISION_CASES = [(4, 3), (16, 8), (64, 1), (10, 5), (256, 16)]
+
+
+@pytest.mark.parametrize("S,A", COLLISION_CASES)
+def test_collision_kernel_matches_ref(S, A):
+    ks = jax.random.split(jax.random.PRNGKey(S * 101 + A), 6)
+    ep = jax.random.normal(ks[0], (S, 2)) * 20
+    ev = jax.random.normal(ks[1], (S, 2)) * 5
+    er = jax.random.uniform(ks[2], (S,), minval=0.5, maxval=2.5)
+    ap = jax.random.normal(ks[3], (S, A, 2)) * 20
+    av = jax.random.normal(ks[4], (S, A, 2)) * 5
+    ar = jax.random.uniform(ks[5], (S, A), minval=0.3, maxval=2.5)
+    dist, ttc, hit = collision_ttc(ep, ev, er, ap, av, ar, interpret=True)
+    rdist, rttc, rhit = collision_ttc_ref(ep, ev, er, ap, av, ar)
+    np.testing.assert_allclose(np.asarray(dist), np.asarray(rdist), atol=1e-5, rtol=1e-5)
+    # compare TTC on the clipped scale so the TTC_MAX sentinel doesn't dominate
+    np.testing.assert_allclose(
+        np.minimum(np.asarray(ttc), 1e4), np.minimum(np.asarray(rttc), 1e4),
+        atol=1e-5, rtol=1e-5,
+    )
+    np.testing.assert_array_equal(np.asarray(hit), np.asarray(rhit))
+
+
+def test_collision_kernel_overlap_and_parallel():
+    """Overlapping pair -> hit with ttc 0; parallel courses -> TTC_MAX."""
+    ep = jnp.zeros((2, 2))
+    ev = jnp.array([[10.0, 0.0], [10.0, 0.0]])
+    er = jnp.full((2,), 2.0)
+    ap = jnp.array([[[1.0, 0.0]], [[50.0, 10.0]]])  # overlapping; far + parallel
+    av = jnp.array([[[10.0, 0.0]], [[10.0, 0.0]]])
+    ar = jnp.full((2, 1), 2.0)
+    dist, ttc, hit = collision_ttc(ep, ev, er, ap, av, ar, interpret=True)
+    assert bool(hit[0, 0]) and float(ttc[0, 0]) == 0.0 and float(dist[0, 0]) < 0
+    assert not bool(hit[1, 0]) and float(ttc[1, 0]) == TTC_MAX
+
+
+# ---------------------------------------------------------------------------
+# DSL
+# ---------------------------------------------------------------------------
+
+
+def test_dsl_compile_deterministic_under_seed():
+    b1, n1 = build_batch(per_family=6, key=jax.random.PRNGKey(42))
+    b2, n2 = build_batch(per_family=6, key=jax.random.PRNGKey(42))
+    assert n1 == n2
+    for f1, f2 in zip(b1, b2):
+        np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+
+
+def test_dsl_different_seed_perturbs_params():
+    b1, _ = build_batch(per_family=6, key=jax.random.PRNGKey(0))
+    b2, _ = build_batch(per_family=6, key=jax.random.PRNGKey(1))
+    assert not np.array_equal(np.asarray(b1.ag_x0), np.asarray(b2.ag_x0))
+
+
+def test_dsl_compiles_all_families_with_padding():
+    batch, names = build_batch(per_family=3, key=jax.random.PRNGKey(0))
+    assert sorted(names) == sorted(FAMILIES)
+    S = batch.num_scenarios
+    assert S == 3 * len(FAMILIES)
+    valid = np.asarray(batch.valid)
+    assert valid.shape[1] == 2  # widest family (occluded intersection) has 2 agents
+    assert (valid.sum(axis=1) >= 1).all()
+    # padded agent slots are parked far away with zero radius
+    pad = valid == 0.0
+    assert (np.asarray(batch.ag_x0)[pad] > 1e5).all()
+    assert (np.asarray(batch.ag_radius)[pad] == 0.0).all()
+
+
+# ---------------------------------------------------------------------------
+# closed-loop physics
+# ---------------------------------------------------------------------------
+
+
+def test_hard_brake_collides_without_aeb_but_not_with():
+    batch, _ = compile_specs([hard_brake_spec()])
+    m_base, _ = rollout(batch, baseline_policy, steps=80, dt=0.1)
+    m_aeb, _ = rollout(batch, aeb_policy, steps=80, dt=0.1)
+    assert bool(m_base.collided[0]) and float(m_base.min_ttc[0]) == 0.0
+    assert not bool(m_aeb.collided[0]) and float(m_aeb.min_dist[0]) > 0.0
+
+
+def test_cut_in_closes_gap_and_aeb_avoids():
+    batch, _ = compile_specs([cut_in_spec()])
+    m_base, fin = rollout(batch, baseline_policy, steps=100, dt=0.1)
+    m_aeb, _ = rollout(batch, aeb_policy, steps=100, dt=0.1)
+    assert bool(m_base.collided[0])
+    assert not bool(m_aeb.collided[0])
+    # the cutter actually changed lanes into the ego lane
+    assert abs(float(fin.ag_y[0, 0])) < 1.5
+
+
+def test_pedestrian_crosses_road():
+    batch, _ = compile_specs([pedestrian_spec()])
+    _, fin = rollout(batch, aeb_policy, steps=120, dt=0.1)
+    assert float(fin.ag_y[0, 0]) > -6.0  # walked off the curb
+
+
+def test_speed_limit_violations_counted():
+    spec = hard_brake_spec(gap=200.0)  # lead far away: pure cruise
+    spec = dataclasses.replace(spec, ego_v=20.0, speed_limit=10.0)
+    batch, _ = compile_specs([spec])
+    m, _ = rollout(batch, baseline_policy, steps=20, dt=0.1)
+    assert int(m.violations[0]) > 0
+
+
+def test_collision_on_final_tick_is_counted():
+    """A first-overlap landing exactly on the last integration step must
+    still latch the collision flag (post-scan signal check)."""
+    # stationary ego; head-on agent at 1 m/s whose disc first overlaps the
+    # ego disc only after the 4th (final) integration step
+    agent = AgentSpec(x=4.35, y=0.0, psi=math.pi, v=1.0)
+    batch, _ = compile_specs(
+        [ScenarioSpec(family="head_on", ego_v=0.0, agents=(agent,))]
+    )
+    m, _ = rollout(batch, baseline_policy, steps=4, dt=0.1)
+    assert bool(m.collided[0])
+    assert float(m.min_dist[0]) <= 0.0
+
+
+def test_rollout_matches_with_pallas_collision():
+    batch, _ = compile_specs([hard_brake_spec(), cut_in_spec()])
+    m_ref, _ = rollout(batch, aeb_policy, steps=30, dt=0.1, use_pallas=False)
+    m_pal, _ = rollout(batch, aeb_policy, steps=30, dt=0.1, use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(m_ref.collided), np.asarray(m_pal.collided))
+    np.testing.assert_allclose(
+        np.asarray(m_ref.min_dist), np.asarray(m_pal.min_dist), atol=1e-4, rtol=1e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# fleet runner + qualification gate
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_runner_reports_across_families():
+    batch, names = build_batch(per_family=8, key=jax.random.PRNGKey(0))
+    rm = ResourceManager(4)
+    runner = FleetRunner(rm, shards=4, devices_per_shard=1, steps=60, dt=0.1)
+    rep = runner.run(batch, names, aeb_policy)
+    assert rep.scenarios == batch.num_scenarios
+    assert len(rep.families) == 5
+    for fs in rep.families.values():
+        assert 0.0 <= fs.collision_rate <= 1.0
+        assert sum(fs.min_ttc_hist) == fs.scenarios
+    assert all(j.state == JOB_DONE for j in rm.jobs.values())
+    assert rep.scenarios_per_sec > 0
+
+
+def test_fleet_runner_queues_when_pool_is_small():
+    """More shards than the pool can hold at once: shards queue and drain."""
+    batch, names = build_batch(per_family=4, key=jax.random.PRNGKey(0))
+    rm = ResourceManager(2)
+    runner = FleetRunner(rm, shards=4, devices_per_shard=2, steps=30, dt=0.1)
+    rep = runner.run(batch, names, aeb_policy)
+    assert rep.scenarios == batch.num_scenarios
+    assert all(j.state == JOB_DONE for j in rm.jobs.values())
+
+
+def test_fleet_runner_waits_out_foreign_job_then_runs():
+    """Sweep shards queue behind a foreign train job holding the whole pool
+    and run once its containers free up."""
+    from repro.core.scheduler import Job
+
+    batch, names = build_batch(per_family=2, key=jax.random.PRNGKey(0))
+    rm = ResourceManager(2)
+    rm.submit(Job("train", "train", devices=2))
+    runner = FleetRunner(rm, shards=2, devices_per_shard=1, steps=10, dt=0.1,
+                         schedule_timeout_s=30.0)
+    timer = threading.Timer(0.2, rm.complete, args=("train",))
+    timer.start()
+    try:
+        rep = runner.run(batch, names, aeb_policy)
+    finally:
+        timer.cancel()
+    assert rep.scenarios == batch.num_scenarios
+
+
+def test_fleet_runner_raises_on_schedule_timeout():
+    from repro.core.scheduler import Job
+
+    batch, names = build_batch(per_family=2, key=jax.random.PRNGKey(0))
+    rm = ResourceManager(2)
+    rm.submit(Job("train", "train", devices=2))  # never completes
+    runner = FleetRunner(rm, shards=1, devices_per_shard=1, steps=10, dt=0.1,
+                         schedule_timeout_s=0.1)
+    with pytest.raises(RuntimeError, match="pool held by"):
+        runner.run(batch, names, aeb_policy)
+    # the aborted sweep must not leak queued shard jobs into the pool
+    rm.complete("train")
+    assert all(j.state == JOB_DONE for j in rm.jobs.values())
+    assert len(rm.free) == 2
+
+
+def test_ab_gate_qualifies_aeb_over_baseline():
+    batch, names = build_batch(per_family=8, key=jax.random.PRNGKey(0))
+    runner = FleetRunner(ResourceManager(4), shards=2, steps=80, dt=0.1)
+    rep_base, rep_aeb, gate = runner.ab_test(batch, names, baseline_policy, aeb_policy)
+    assert rep_aeb.collision_rate <= rep_base.collision_rate
+    assert gate.passed, gate.reasons
+    # and the gate rejects the reverse direction (baseline as candidate)
+    reverse = qualify(rep_aeb, rep_base)
+    assert not reverse.passed

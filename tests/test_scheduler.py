@@ -69,6 +69,75 @@ def test_container_failure_quarantines_and_reschedules():
     assert not rm.quarantined
 
 
+def _is_contiguous(ids):
+    ids = sorted(ids)
+    return ids == list(range(ids[0], ids[0] + len(ids)))
+
+
+def test_allocation_is_contiguous_after_fragmentation():
+    """_allocate must honor the contiguous sub-mesh promise: with holes in
+    the pool it must not stitch fragments together, and a queued job runs on
+    a truly contiguous block once one frees up."""
+    rm = ResourceManager(8)
+    for name in ("a", "b", "c", "d"):
+        rm.submit(Job(name, "train", devices=2))
+    rm.complete("a")  # frees {0,1}
+    rm.complete("c")  # frees {4,5} -> free pool {0,1,4,5}, fragmented
+    rm.submit(Job("e", "train", devices=4, min_devices=4))
+    # 4 devices are free but no contiguous run of 4 exists
+    assert rm.jobs["e"].state == JOB_PENDING
+    rm.complete("b")  # frees {2,3} -> contiguous run 0..5
+    assert rm.jobs["e"].state == JOB_RUNNING
+    assert _is_contiguous(rm.jobs["e"].container.device_ids)
+
+
+def test_elastic_shrink_halves_into_contiguous_hole():
+    """A shrinkable job fits the largest contiguous hole even when the total
+    free count suggests a bigger (fragmented) block."""
+    rm = ResourceManager(8)
+    for name in ("a", "b", "c", "d"):
+        rm.submit(Job(name, "train", devices=2))
+    rm.complete("a")
+    rm.complete("c")  # free {0,1,4,5}
+    rm.submit(Job("e", "train", devices=4, min_devices=2))
+    assert rm.jobs["e"].state == JOB_RUNNING
+    assert rm.jobs["e"].container.size == 2
+    assert _is_contiguous(rm.jobs["e"].container.device_ids)
+
+
+def test_all_containers_contiguous_under_churn():
+    rm = ResourceManager(16)
+    rm.submit(Job("a", "train", devices=4))
+    rm.submit(Job("b", "simulate", devices=8))
+    rm.submit(Job("c", "serve", devices=2))
+    rm.complete("a")
+    rm.submit(Job("d", "train", devices=2))
+    rm.submit(Job("e", "mapgen", devices=4))
+    for job in rm.jobs.values():
+        if job.container is not None:
+            assert _is_contiguous(job.container.device_ids), job.name
+
+
+def test_no_wasted_preemption_when_fragmentation_blocks_allocation():
+    """Preemption must not evict victims when the freed pool still has no
+    contiguous run for the requester (the eviction would be pure loss)."""
+    rm = ResourceManager(4)
+    rm.submit(Job("a", "train", devices=1, priority=5))   # -> {0}
+    rm.submit(Job("b", "train", devices=1, priority=0))   # -> {1}
+    rm.submit(Job("c", "train", devices=1, priority=5))   # -> {2}
+    rm.submit(Job("d", "train", devices=1, priority=0))   # -> {3}
+    # only b and d are evictable (priority < 3); that would free {1, 3} —
+    # no contiguous pair, so nobody should be preempted
+    rm.submit(Job("e", "train", devices=2, min_devices=2, priority=3))
+    assert rm.jobs["e"].state == JOB_PENDING
+    assert rm.jobs["b"].state == JOB_RUNNING and rm.jobs["b"].preemptions == 0
+    assert rm.jobs["d"].state == JOB_RUNNING and rm.jobs["d"].preemptions == 0
+    rm.complete("c")  # frees {2}: evicting b now yields contiguous {1, 2}
+    assert rm.jobs["e"].state == JOB_RUNNING
+    assert _is_contiguous(rm.jobs["e"].container.device_ids)
+    assert rm.jobs["d"].state == JOB_RUNNING  # d was never a useful victim
+
+
 def test_speculative_execution():
     calls = []
 

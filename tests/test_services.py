@@ -38,6 +38,14 @@ def test_replay_partition_subset(drive_ds):
     assert rep.frames == 6
 
 
+def test_replay_empty_partition_list_returns_zeroed_report(drive_ds):
+    model = PerceptionModel(channels=(8,))
+    sim = ReplaySimulator(model, model.init(jax.random.PRNGKey(0)))
+    rep = sim.simulate(drive_ds, partitions=[])
+    assert rep.frames == 0 and rep.partitions == 0
+    assert rep.mean_score == 0.0 and rep.max_score == 0.0
+
+
 def test_ab_test_identical_params_no_flips(drive_ds):
     model = PerceptionModel(channels=(8,))
     params = model.init(jax.random.PRNGKey(0))
