@@ -22,7 +22,7 @@ MODULES = [
     ("param_server_bench", "§4.2 Alluxio parameter server 5x I/O"),
     ("scheduler_overhead", "§2.3 LXC container overhead <5%"),
     ("sim_scaling", "Fig.6 simulation scalability 2k->10k cores"),
-    ("heterogeneous", "§2.3/§4.3 GPU offload 10-20x conv, 15x train"),
+    ("heterogeneous", "§2.3/§4.3 GPU offload 10-20x + mixed tenants, one platform"),
     ("train_pipeline", "Fig.7 unified training pipeline ~2x"),
     ("train_scaling", "Fig.9 near-linear distributed training scaling"),
     ("mapgen_bench", "§5.2 fused map job 5x; ICP offload 30x"),

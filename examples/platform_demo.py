@@ -1,0 +1,63 @@
+"""Heterogeneous three-tenant demo: priority preemption + elastic resume.
+
+One 8-device pool, three tenants submitted through the unified platform API:
+
+1. a low-priority closed-loop scenario sweep that grabs the whole pool,
+2. a high-priority train job that preempts it,
+3. a mid-priority serve job that squeezes in beside the train job —
+   forcing the sweep to *resume shrunk* to its elastic floor.
+
+The unified JobReport surfaces the whole story per tenant: devices used,
+queue time, preemption/resume counts, and service metrics.
+
+    PYTHONPATH=src python examples/platform_demo.py
+"""
+
+import tempfile
+
+from repro.platform import (
+    JobSpec,
+    Platform,
+    ScenarioJobConfig,
+    ServeJobConfig,
+    TrainJobConfig,
+)
+
+
+def main():
+    platform = Platform(total_devices=8)
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        sweep = platform.submit(JobSpec(
+            kind="scenario", name="sweep",
+            config=ScenarioJobConfig(per_family=16, steps=40),
+            devices=8, min_devices=2, priority=0,  # elastic batch tenant
+        ))
+        # submitted while the sweep holds all 8 devices -> preempts it
+        train = platform.submit(JobSpec(
+            kind="train", name="finetune",
+            config=TrainJobConfig(
+                arch="qwen2-0.5b", steps=20, batch=4, seq=64, vocab=128,
+                ckpt_dir=ckpt_dir, ckpt_every=10, log_every=10,
+            ),
+            devices=4, elastic=False, priority=10,  # urgent rigid tenant
+        ))
+        serve = platform.submit(JobSpec(
+            kind="serve", name="frontend",
+            config=ServeJobConfig(arch="qwen2-0.5b", batch=2, prompt_len=16, gen=8),
+            devices=2, priority=5,  # latency tenant fills the gap
+        ))
+
+        reports = platform.wait([sweep, train, serve])
+        print("\n=== unified JobReports (one pool, three services) ===")
+        for name in (train, serve, sweep):
+            print(reports[name].summary())
+        print("\n=== sweep lifecycle (preempted, then resumed shrunk) ===")
+        for ev in reports[sweep].events:
+            print(" ", ev)
+        assert reports[sweep].preemptions >= 1, "expected the sweep to be preempted"
+        assert reports[sweep].resumes >= 1, "expected the sweep to resume"
+        assert reports[sweep].devices_used < 8, "expected an elastic shrunk resume"
+
+
+if __name__ == "__main__":
+    main()

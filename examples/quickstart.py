@@ -1,58 +1,43 @@
-"""Quickstart: the platform in ~60 lines.
+"""Quickstart: the unified platform API in ~40 lines.
 
-Builds a reduced qwen2-0.5b, trains it briefly on synthetic Markov text fed
-through the BinPipe/RDD data path, checkpoints through the tiered store, and
-serves a few greedy tokens — the paper's train+serve services on one box.
+Submits a train job and then a serve job through ``Platform`` — the serve
+tenant picks up the train tenant's checkpoint from the tiered store, the
+paper's train+serve services composed on one shared device pool.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 import tempfile
 
-import jax
-import jax.numpy as jnp
-
-from repro.config import ParallelConfig, TrainConfig, get_arch, scale_down
-from repro.core.tiered_store import TieredStore
-from repro.data.loader import BatchLoader
-from repro.data.synthetic import lm_token_dataset
-from repro.distributed.mesh import single_device_mesh
-from repro.serving.engine import ServeEngine
-from repro.training.checkpoint import CheckpointManager
-from repro.training.train_loop import make_train_step
+from repro.platform import JobSpec, Platform, ServeJobConfig, TrainJobConfig
 
 
 def main():
-    cfg = scale_down(get_arch("qwen2-0.5b"), vocab_size=256, num_layers=2)
-    tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=5, total_steps=60)
-    mesh = single_device_mesh()
-    bundle = make_train_step(cfg, tcfg, ParallelConfig(), mesh)
+    platform = Platform(total_devices=8)
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        train = platform.submit(JobSpec(
+            kind="train",
+            config=TrainJobConfig(
+                arch="qwen2-0.5b", steps=60, batch=8, seq=64, vocab=256,
+                ckpt_dir=ckpt_dir, ckpt_every=20, log_every=20,
+            ),
+            devices=4,
+            priority=5,
+        ))
+        report = platform.wait(train)
+        print(report.summary())
 
-    data = lm_token_dataset(vocab=256, seq_len=64, seqs_per_partition=16, num_partitions=8)
-    loader = BatchLoader(data, batch_size=8)
-
-    with mesh, tempfile.TemporaryDirectory() as tmp:
-        store = TieredStore(tmp, mem_capacity=1 << 30)
-        ckpt = CheckpointManager(store)
-
-        state = jax.jit(bundle.init_fn)(jax.random.PRNGKey(0))
-        step = jax.jit(bundle.train_step, donate_argnums=(0,))
-        for i, nb in enumerate(loader.batches(epochs=20)):
-            if i >= tcfg.total_steps:
-                break
-            state, metrics = step(state, {k: jnp.asarray(v) for k, v in nb.items()})
-            if (i + 1) % 20 == 0:
-                print(f"step {i+1:3d}  loss={float(metrics['loss']):.3f}  "
-                      f"acc={float(metrics['accuracy']):.3f}")
-        loader.close()
-        ckpt.save(jax.device_get(state), tcfg.total_steps, durable=True)
-        print("checkpoint committed at step", ckpt.latest_step())
-
-        engine = ServeEngine(cfg, state["params"], max_len=96)
-        prompt = {"tokens": jnp.asarray(nb["tokens"][:2, :32])}
-        out = engine.generate(prompt, steps=16)
-        print("generated:", jax.device_get(out[0]).tolist())
-        store.close()
+        serve = platform.submit(JobSpec(
+            kind="serve",
+            config=ServeJobConfig(
+                arch="qwen2-0.5b", batch=2, prompt_len=32, gen=16,
+                vocab=256, ckpt_dir=ckpt_dir,  # serve the trained weights
+            ),
+            devices=2,
+        ))
+        report = platform.wait(serve)
+        print(report.summary())
+        print("lifecycle:", *platform.events(serve), sep="\n  ")
 
 
 if __name__ == "__main__":

@@ -47,7 +47,8 @@ JOB_DONE = "DONE"
 @dataclasses.dataclass
 class Job:
     name: str
-    kind: str  # train | simulate | mapgen | serve
+    kind: str  # train | simulate | scenario | mapgen | serve (validated
+    #            against the driver registry by repro.platform at submit)
     devices: int  # desired container size (power of two)
     min_devices: int = 1
     priority: int = 0  # higher wins
@@ -90,12 +91,19 @@ class ResourceManager:
         self.events.append(msg)
 
     @_locked
-    def submit(self, job: Job) -> None:
+    def submit(self, job: Job) -> str:
         if job.name in self.jobs:
-            raise ValueError(f"duplicate job {job.name}")
+            # multi-tenant pool: callers race on friendly names, so rename
+            # instead of rejecting (the final name is the handle)
+            base, i = job.name, 2
+            while f"{base}-{i}" in self.jobs:
+                i += 1
+            job.name = f"{base}-{i}"
+            self._log(f"uniquified duplicate job name {base} -> {job.name}")
         self.jobs[job.name] = job
         self._log(f"submit {job.name} kind={job.kind} want={job.devices}")
         self.schedule()
+        return job.name
 
     @staticmethod
     def _runs(ids: set[int]) -> list[tuple[int, int]]:
@@ -214,14 +222,27 @@ class ResourceManager:
 
     # ------------------------------------------------------------------
     @_locked
-    def complete(self, name: str) -> None:
+    def complete(self, name: str, state: str = JOB_DONE) -> None:
+        """Terminate a job and free its container.  ``state`` records the
+        outcome (JOB_DONE, or JOB_FAILED for driver errors) so co-tenants
+        inspecting the shared pool see the real disposition."""
         job = self.jobs[name]
-        job.state = JOB_DONE
+        job.state = state
         if job.container:
             self._release(job.container)
             job.container = None
-        self._log(f"done {name}")
+        self._log(f"{'done' if state == JOB_DONE else state.lower()} {name}")
         self.schedule()
+
+    @_locked
+    def running_jobs(self, exclude=()) -> list[str]:
+        """Names of RUNNING jobs not in ``exclude`` — how an executor spots
+        foreign tenants holding the pool before declaring itself stuck."""
+        return [
+            j.name
+            for j in self.jobs.values()
+            if j.state == JOB_RUNNING and j.name not in exclude
+        ]
 
     @_locked
     def fail_container(self, name: str, dead_devices: int = 1) -> None:
@@ -236,6 +257,16 @@ class ResourceManager:
         job.container = None
         job.state = JOB_PENDING  # driver resumes from checkpoint on reschedule
         self.schedule()
+
+    @_locked
+    def quarantine_devices(self, device_ids) -> None:
+        """Mark devices dead without rescheduling their job — used when a
+        failing job is abandoned (e.g. retries exhausted) but its devices
+        must still be kept out of the pool."""
+        dead = set(device_ids)
+        self.quarantined.update(dead)
+        self.free.difference_update(dead)
+        self._log(f"quarantine {sorted(dead)}")
 
     @_locked
     def heal(self, device_ids: Optional[list[int]] = None) -> None:

@@ -1,1 +1,7 @@
-"""Launchers: production mesh, dry-run, training and serving drivers."""
+"""Launchers: production mesh, dry-run, and per-service CLIs.
+
+The five service CLIs (train, simulate, scenario_job, mapgen_job, serve)
+are thin wrappers that parse flags into a :class:`repro.platform.JobSpec`
+and submit through :class:`repro.platform.Platform`; the workloads live in
+``repro.platform.services``.
+"""

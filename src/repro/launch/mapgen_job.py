@@ -1,16 +1,17 @@
-"""HD-map-generation driver (paper §5 service).
+"""HD-map-generation CLI — thin wrapper over the unified platform API (§5).
 
     PYTHONPATH=src python -m repro.launch.mapgen_job --partitions 4 --frames 16
+
+Flags become a ``mapgen`` :class:`~repro.platform.JobSpec`; the pipeline
+lives in :class:`repro.platform.services.MapGenDriver`.
 """
 
 from __future__ import annotations
 
 import argparse
+import sys
 
-import numpy as np
-
-from repro.data.synthetic import drive_log_dataset
-from repro.mapgen.pipeline import MapGenConfig, MapGenPipeline
+from repro.platform import DONE, JobSpec, MapGenJobConfig, Platform
 
 
 def main(argv=None):
@@ -20,21 +21,26 @@ def main(argv=None):
     ap.add_argument("--lidar-points", type=int, default=512)
     ap.add_argument("--staged", action="store_true", help="per-stage host I/O (baseline)")
     ap.add_argument("--no-icp", action="store_true")
+    ap.add_argument("--pool-devices", type=int, default=8)
+    ap.add_argument("--job-devices", type=int, default=4)
+    ap.add_argument("--priority", type=int, default=0)
     args = ap.parse_args(argv)
 
-    ds = drive_log_dataset(
-        num_partitions=args.partitions, frames_per_partition=args.frames,
-        lidar_points=args.lidar_points,
+    spec = JobSpec(
+        kind="mapgen",
+        config=MapGenJobConfig(
+            partitions=args.partitions, frames=args.frames,
+            lidar_points=args.lidar_points, fused=not args.staged,
+            icp_refine=not args.no_icp,
+        ),
+        devices=args.job_devices,
+        priority=args.priority,
     )
-    cfg = MapGenConfig(icp_refine=not args.no_icp)
-    pipe = MapGenPipeline(cfg)
-    gm, out = pipe.run(ds, fused=not args.staged)
-    occ = int(np.asarray(gm.counts > 0).sum())
-    lanes = int((np.asarray(gm.labels) == 2).sum())
-    print(
-        f"[mapgen] mode={'staged' if args.staged else 'fused'} "
-        f"pose_err={pipe.pose_error(out):.3f}m occupied={occ} lane_cells={lanes}"
-    )
+    platform = Platform(total_devices=args.pool_devices)
+    report = platform.wait(platform.submit(spec))
+    print(report.summary())
+    if report.state != DONE:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -1,21 +1,53 @@
-"""Closed-loop scenario sweep driver (paper §3 simulation service).
+"""Closed-loop scenario sweep CLI — thin wrapper over the platform API (§3).
 
     PYTHONPATH=src python -m repro.launch.scenario_job --per-family 64 --shards 4
     PYTHONPATH=src python -m repro.launch.scenario_job --ab-test --policy aeb
+
+A sweep is submitted as ``--shards`` independent ``scenario`` jobs (each
+rolling out its slice of the seed-deterministic batch on its own container)
+and the per-shard metrics are merged back into one
+:class:`~repro.scenario.metrics.ScenarioReport` — heterogeneous batch
+submission over the shared pool.  ``--ab-test`` runs the deployed and
+candidate sweeps through the same path and gates with
+:func:`repro.scenario.metrics.qualify`.
 """
 
 from __future__ import annotations
 
 import argparse
+import time
 
-import jax
+from repro.platform import JobSpec, Platform, ScenarioJobConfig, aggregate_scenario_metrics
+from repro.platform.services import scenario_policies
+from repro.scenario.dsl import FAMILIES
 
-from repro.core.scheduler import ResourceManager
-from repro.scenario.dsl import FAMILIES, build_batch
-from repro.scenario.runner import FleetRunner
-from repro.scenario.world import aeb_policy, baseline_policy
+POLICIES = tuple(scenario_policies())
 
-POLICIES = {"baseline": baseline_policy, "aeb": aeb_policy}
+
+def _sweep(platform: Platform, args, policy: str, prefix: str):
+    """Submit one scenario job per shard, wait, merge into a ScenarioReport."""
+    t0 = time.perf_counter()
+    specs = [
+        JobSpec(
+            kind="scenario",
+            name=f"{prefix}-{i}",
+            config=ScenarioJobConfig(
+                families=args.families, per_family=args.per_family,
+                steps=args.steps, dt=args.dt, seed=args.seed, policy=policy,
+                use_pallas=args.pallas_collision,
+                shard_index=i, num_shards=args.shards,
+            ),
+            devices=args.devices_per_shard,
+        )
+        for i in range(args.shards)
+    ]
+    reports = platform.run_batch(specs)
+    bad = {n: r.error for n, r in reports.items() if r.state != "DONE"}
+    if bad:
+        raise RuntimeError(f"scenario shards failed: {bad}")
+    return aggregate_scenario_metrics(
+        [r.metrics for r in reports.values()], time.perf_counter() - t0
+    )
 
 
 def main(argv=None):
@@ -36,24 +68,19 @@ def main(argv=None):
                     help="qualify --policy against the deployed baseline")
     args = ap.parse_args(argv)
 
-    batch, names = build_batch(args.families, args.per_family,
-                               jax.random.PRNGKey(args.seed))
-    runner = FleetRunner(
-        ResourceManager(args.devices),
-        shards=args.shards, devices_per_shard=args.devices_per_shard,
-        steps=args.steps, dt=args.dt, use_pallas=args.pallas_collision,
-    )
+    platform = Platform(total_devices=args.devices)
     if args.ab_test:
-        rep_a, rep_b, gate = runner.ab_test(
-            batch, names, baseline_policy, POLICIES[args.policy]
-        )
+        from repro.scenario.metrics import qualify
+
+        rep_a = _sweep(platform, args, "baseline", "ab-deployed")
+        rep_b = _sweep(platform, args, args.policy, "ab-candidate")
         print("[scenario] deployed (baseline):")
         print(rep_a.summary())
         print(f"[scenario] candidate ({args.policy}):")
         print(rep_b.summary())
-        print("[scenario] verdict:", gate.verdict())
+        print("[scenario] verdict:", qualify(rep_a, rep_b).verdict())
     else:
-        rep = runner.run(batch, names, POLICIES[args.policy])
+        rep = _sweep(platform, args, args.policy, "scenario")
         print(rep.summary())
 
 

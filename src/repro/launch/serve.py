@@ -1,27 +1,21 @@
-"""Serving driver: static-batch or continuous-batching decode.
+"""Serving CLI — thin wrapper over the unified platform API (paper §4.3).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
         --batch 4 --prompt-len 64 --gen 32 [--engine continuous]
 
-``--engine continuous`` serves the batch as individual requests through
-the paged-KV continuous-batching engine (transformer families only) and
-reports per-token latency percentiles next to throughput.
+``--engine continuous`` serves the batch as individual requests through the
+paged-KV continuous-batching engine (transformer families only) and reports
+per-token latency percentiles next to throughput.  ``--ckpt-dir`` serves the
+params of a previous ``launch.train`` run instead of random init.  The
+engines live in :class:`repro.platform.services.ServeDriver`.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
+import sys
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.config import get_arch, scale_down
-from repro.models import model_zoo
-from repro.serving.continuous import ContinuousBatchingEngine
-from repro.serving.engine import ServeEngine
-from repro.serving.scheduler import Request, token_latencies
+from repro.platform import DONE, JobSpec, Platform, ServeJobConfig
 
 
 def main(argv=None):
@@ -36,62 +30,34 @@ def main(argv=None):
     ap.add_argument("--engine", choices=["static", "continuous"], default="static")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--slots", type=int, default=0, help="decode slots (0 = batch)")
+    ap.add_argument("--vocab", type=int, default=512, help="smoke-scale vocab")
+    ap.add_argument("--seq", type=int, default=512,
+                    help="smoke-scale max_seq_len (match the train job's "
+                         "--seq when using --ckpt-dir)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="serve params from this train-job checkpoint dir")
+    ap.add_argument("--pool-devices", type=int, default=8)
+    ap.add_argument("--job-devices", type=int, default=2)
+    ap.add_argument("--priority", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = get_arch(args.arch)
-    if args.scale == "smoke":
-        cfg = scale_down(cfg)
-    model = model_zoo.build_model(cfg)
-    params = model_zoo.init_params(model, jax.random.PRNGKey(args.seed))
-
-    key = jax.random.PRNGKey(args.seed + 1)
-    B, S = args.batch, args.prompt_len
-    prompt = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size, jnp.int32)}
-    if cfg.family == "vlm":
-        F = cfg.frontend_tokens
-        prompt["patches"] = jax.random.normal(key, (B, F, cfg.frontend_dim), jnp.float32)
-        prompt["positions3"] = jnp.broadcast_to(
-            jnp.arange(S + F, dtype=jnp.int32), (3, B, S + F)
-        )
-    if cfg.family == "encdec":
-        prompt["src_emb"] = jax.random.normal(key, (B, S, cfg.frontend_dim), jnp.float32)
-
-    if args.engine == "continuous":
-        engine = ContinuousBatchingEngine(
-            cfg, params,
-            num_slots=args.slots or B,
-            page_size=args.page_size,
-            max_len=S + args.gen,
-            seed=args.seed,
-        )
-        reqs = [
-            Request(
-                rid=i, tokens=np.asarray(prompt["tokens"][i]),
-                max_new_tokens=args.gen, temperature=args.temperature,
-            )
-            for i in range(B)
-        ]
-        t0 = time.perf_counter()
-        outs = engine.run(reqs)
-        dt = time.perf_counter() - t0
-        toks = sum(len(o.tokens) for o in outs)
-        lat = token_latencies(outs)
-        print(
-            f"[serve/continuous] {toks} tokens in {dt:.2f}s ({toks/dt:,.1f} tok/s) "
-            f"p50/p99 token latency {np.percentile(lat, 50)*1e3:.1f}/"
-            f"{np.percentile(lat, 99)*1e3:.1f} ms"
-        )
-        first = min(outs, key=lambda o: o.rid)
-        print("[serve/continuous] first sequence:", first.tokens[:16])
-        return
-
-    engine = ServeEngine(cfg, params, max_len=S + args.gen + (cfg.frontend_tokens or 0))
-    t0 = time.perf_counter()
-    out = engine.generate(prompt, args.gen, temperature=args.temperature, seed=args.seed)
-    dt = time.perf_counter() - t0
-    toks = B * args.gen
-    print(f"[serve] generated {out.shape} tokens in {dt:.2f}s ({toks/dt:,.1f} tok/s)")
-    print("[serve] first sequence:", jax.device_get(out[0])[:16].tolist())
+    spec = JobSpec(
+        kind="serve",
+        config=ServeJobConfig(
+            arch=args.arch, scale=args.scale, batch=args.batch,
+            prompt_len=args.prompt_len, gen=args.gen,
+            temperature=args.temperature, seed=args.seed, engine=args.engine,
+            page_size=args.page_size, slots=args.slots, vocab=args.vocab,
+            seq=args.seq, ckpt_dir=args.ckpt_dir,
+        ),
+        devices=args.job_devices,
+        priority=args.priority,
+    )
+    platform = Platform(total_devices=args.pool_devices)
+    report = platform.wait(platform.submit(spec))
+    print(report.summary())
+    if report.state != DONE:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -1,16 +1,17 @@
-"""Replay-simulation driver (paper §3 service).
+"""Replay-simulation CLI — thin wrapper over the unified platform API (§3).
 
     PYTHONPATH=src python -m repro.launch.simulate --partitions 8 --frames 16
+
+Flags become a ``simulate`` :class:`~repro.platform.JobSpec`; the replay
+harness itself lives in :class:`repro.platform.services.SimulateDriver`.
 """
 
 from __future__ import annotations
 
 import argparse
+import sys
 
-import jax
-
-from repro.data.synthetic import drive_log_dataset
-from repro.sim.replay import PerceptionModel, ReplaySimulator
+from repro.platform import DONE, JobSpec, Platform, SimulateJobConfig
 
 
 def main(argv=None):
@@ -20,27 +21,26 @@ def main(argv=None):
     ap.add_argument("--lidar-points", type=int, default=512)
     ap.add_argument("--pallas-conv", action="store_true")
     ap.add_argument("--ab-test", action="store_true")
+    ap.add_argument("--pool-devices", type=int, default=8)
+    ap.add_argument("--job-devices", type=int, default=4)
+    ap.add_argument("--priority", type=int, default=0)
     args = ap.parse_args(argv)
 
-    ds = drive_log_dataset(
-        num_partitions=args.partitions, frames_per_partition=args.frames,
-        lidar_points=args.lidar_points,
+    spec = JobSpec(
+        kind="simulate",
+        config=SimulateJobConfig(
+            partitions=args.partitions, frames=args.frames,
+            lidar_points=args.lidar_points, pallas_conv=args.pallas_conv,
+            ab_test=args.ab_test,
+        ),
+        devices=args.job_devices,
+        priority=args.priority,
     )
-    model = PerceptionModel(use_pallas=args.pallas_conv)
-    params = model.init(jax.random.PRNGKey(0))
-    sim = ReplaySimulator(model, params)
-    rep = sim.simulate(ds)
-    print(
-        f"[simulate] partitions={rep.partitions} frames={rep.frames} "
-        f"mean={rep.mean_score:.4f} std={rep.score_std:.4f} wall={rep.wall_time_s:.2f}s"
-    )
-    if args.ab_test:
-        cand = model.init(jax.random.PRNGKey(1))
-        ab = sim.ab_test(ds, cand)
-        print(
-            f"[simulate] A/B: frames={ab.frames} flips={ab.decision_flips} "
-            f"flip_rate={ab.flip_rate:.3f} mad={ab.mean_abs_diff:.4f}"
-        )
+    platform = Platform(total_devices=args.pool_devices)
+    report = platform.wait(platform.submit(spec))
+    print(report.summary())
+    if report.state != DONE:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

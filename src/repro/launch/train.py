@@ -1,39 +1,21 @@
-"""End-to-end training driver (deliverable b) with crash-restart fault
-tolerance.
+"""Training CLI — thin wrapper over the unified platform API (paper §4).
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
         --steps 200 --batch 8 --seq 256 --scale smoke --ckpt-dir /tmp/run1
 
-Structure (the paper's §4 training service on the unified substrate):
-  * data: BinPipe-coded RDD shards -> host BatchLoader (prefetch +
-    speculative straggler refetch)
-  * state: params + ZeRO-sharded optimizer, restored from the newest
-    committed checkpoint if one exists (crash-restart loop)
-  * step: the pjit/GSPMD train step from training.train_loop
-  * checkpoints: atomic, tiered, async-persisted (training.checkpoint)
-  * failure injection: ``--fail-at N`` kills the process at step N to
-    exercise the restart path (used by the integration test).
+Parses flags into a ``train`` :class:`~repro.platform.JobSpec` and submits
+through :class:`~repro.platform.Platform`; the actual training loop (BinPipe
+RDD data path, ZeRO-sharded state, crash-restart from the newest committed
+checkpoint, ``--fail-at`` failure injection) lives in
+:class:`repro.platform.services.TrainDriver`.
 """
 
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import os
 import sys
-import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.config import ParallelConfig, TrainConfig, get_arch, scale_down
-from repro.core.tiered_store import TieredStore
-from repro.data.loader import BatchLoader
-from repro.data.synthetic import lm_token_dataset
-from repro.distributed.mesh import single_device_mesh
-from repro.training.checkpoint import CheckpointManager
-from repro.training.train_loop import make_train_step, state_shardings
+from repro.platform import DONE, JobSpec, Platform, TrainJobConfig
 
 
 def main(argv=None):
@@ -52,68 +34,30 @@ def main(argv=None):
     ap.add_argument("--fail-at", type=int, default=-1,
                     help="inject a crash at this step (fault-tolerance test)")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--pool-devices", type=int, default=8,
+                    help="platform device-pool size")
+    ap.add_argument("--job-devices", type=int, default=8,
+                    help="container size requested for this job")
+    ap.add_argument("--priority", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = get_arch(args.arch)
-    if args.scale == "smoke":
-        cfg = scale_down(cfg, vocab_size=args.vocab, max_seq_len=max(args.seq, 512))
-    tcfg = TrainConfig(
-        learning_rate=args.lr,
-        warmup_steps=max(args.steps // 10, 1),
-        total_steps=args.steps,
-        checkpoint_every=args.ckpt_every,
+    spec = JobSpec(
+        kind="train",
+        config=TrainJobConfig(
+            arch=args.arch, scale=args.scale, steps=args.steps,
+            batch=args.batch, seq=args.seq, vocab=args.vocab, lr=args.lr,
+            microbatches=args.microbatches, ckpt_dir=args.ckpt_dir,
+            ckpt_every=args.ckpt_every, fail_at=args.fail_at,
+            log_every=args.log_every,
+        ),
+        devices=args.job_devices,
+        priority=args.priority,
     )
-    pcfg = ParallelConfig(num_microbatches=args.microbatches)
-    mesh = single_device_mesh()  # the launcher runs CPU-scale; pods use dryrun configs
-
-    bundle = make_train_step(cfg, tcfg, pcfg, mesh)
-    store = TieredStore(args.ckpt_dir, mem_capacity=4 << 30)
-    ckpt = CheckpointManager(store, keep=tcfg.keep_checkpoints)
-
-    with mesh:
-        state_like = jax.eval_shape(bundle.init_fn, jax.ShapeDtypeStruct((2,), jnp.uint32))
-        start_step = 0
-        try:
-            state, start_step = ckpt.restore(state_like)
-            print(f"[train] resumed from checkpoint step {start_step}")
-        except FileNotFoundError:
-            state = jax.jit(bundle.init_fn)(jax.random.PRNGKey(tcfg.seed))
-            print("[train] fresh init")
-
-        step_fn = jax.jit(bundle.train_step, donate_argnums=(0,))
-        ds = lm_token_dataset(
-            vocab=cfg.vocab_size, seq_len=args.seq,
-            seqs_per_partition=max(args.batch, 8), num_partitions=16,
-        )
-        loader = BatchLoader(ds, batch_size=args.batch, straggler_timeout_s=5.0)
-
-        t0 = time.perf_counter()
-        tokens_done = 0
-        step_i = start_step
-        for nb in loader.batches(epochs=1_000_000):
-            if step_i >= args.steps:
-                break
-            batch = {k: jnp.asarray(v) for k, v in nb.items()}
-            state, metrics = step_fn(state, batch)
-            step_i += 1
-            tokens_done += args.batch * args.seq
-            if step_i % args.log_every == 0 or step_i == args.steps:
-                m = jax.device_get(metrics)
-                dt = time.perf_counter() - t0
-                print(
-                    f"[train] step {step_i:5d} loss={float(m['loss']):.4f} "
-                    f"acc={float(m['accuracy']):.3f} gnorm={float(m['grad_norm']):.2f} "
-                    f"tok/s={tokens_done/max(dt,1e-9):,.0f}"
-                )
-            if step_i % args.ckpt_every == 0 or step_i == args.steps:
-                ckpt.save(jax.device_get(state), step_i, durable=True)
-            if args.fail_at == step_i:
-                print(f"[train] INJECTED FAILURE at step {step_i}", flush=True)
-                os._exit(42)
-        loader.close()
-        store.flush()
-        store.close()
-        print(f"[train] done at step {step_i}; speculative_fetches={loader.speculative_fetches}")
+    platform = Platform(total_devices=args.pool_devices)
+    report = platform.wait(platform.submit(spec))
+    print(report.summary())
+    if report.state != DONE:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

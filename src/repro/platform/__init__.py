@@ -1,0 +1,63 @@
+"""Unified platform API: one JobSpec/ServiceDriver surface over all services.
+
+The paper's thesis is a single cloud infrastructure for every
+autonomous-driving workload.  This package is that surface:
+
+* :class:`JobSpec` — declarative job description (service kind, device /
+  priority / elasticity requirements, typed per-service config payload),
+* :class:`~repro.platform.driver.ServiceDriver` — the protocol each service
+  implements (``prepare -> run(container) -> metrics``), registered per kind,
+* :class:`Platform` — the client (``submit / status / wait / cancel /
+  results``) over a shared :class:`~repro.core.scheduler.ResourceManager`
+  pool, with a job-lifecycle state machine
+  (pending -> running -> preempted -> resumed -> done/failed) and per-job events,
+* :class:`JobReport` — the uniform result schema every service emits.
+
+Importing this package registers the five built-in drivers (train,
+simulate, scenario, mapgen, serve); the ``repro.launch.*`` CLIs are thin
+wrappers that parse flags into a JobSpec and submit here.
+"""
+
+from repro.platform import services  # noqa: F401 — registers built-in drivers
+from repro.platform.client import CANCELLED, DONE, FAILED, TERMINAL, Platform
+from repro.platform.driver import (
+    ContainerFailure,
+    ServiceDriver,
+    UnknownServiceKind,
+    available_kinds,
+    get_driver,
+    register_driver,
+    unregister_driver,
+)
+from repro.platform.services import (
+    MapGenJobConfig,
+    ScenarioJobConfig,
+    ServeJobConfig,
+    SimulateJobConfig,
+    TrainJobConfig,
+    aggregate_scenario_metrics,
+)
+from repro.platform.spec import JobReport, JobSpec
+
+__all__ = [
+    "CANCELLED",
+    "DONE",
+    "FAILED",
+    "TERMINAL",
+    "ContainerFailure",
+    "JobReport",
+    "JobSpec",
+    "MapGenJobConfig",
+    "Platform",
+    "ScenarioJobConfig",
+    "ServeJobConfig",
+    "ServiceDriver",
+    "SimulateJobConfig",
+    "TrainJobConfig",
+    "UnknownServiceKind",
+    "aggregate_scenario_metrics",
+    "available_kinds",
+    "get_driver",
+    "register_driver",
+    "unregister_driver",
+]

@@ -1,0 +1,284 @@
+"""Platform client: submit / status / wait / cancel / results over all services.
+
+The one front door to the paper's unified infrastructure.  ``submit``
+validates the spec's kind against the driver registry, uniquifies the job
+name, coerces the config payload (fail-fast), and queues the job on the
+shared :class:`~repro.core.scheduler.ResourceManager` pool.  ``wait`` drives
+an in-process executor loop — the single-host stand-in for cluster
+executors, like ``scenario.runner.FleetRunner`` — that runs scheduled jobs
+highest-priority-first and feeds completions back to the scheduler so queued
+tenants make progress.
+
+Job lifecycle (bridged from the ResourceManager's container states, with
+per-job events surfaced):
+
+    PENDING -> RUNNING -> DONE
+       ^          |   \\-> FAILED (driver error, or retries exhausted)
+       |          v
+       +---- PREEMPTED          (higher-priority tenant took the devices)
+       |          |
+       |          v
+       +--    (resumed)         RUNNING again, possibly shrunk (elastic)
+    any non-terminal -> CANCELLED
+
+A :class:`~repro.platform.driver.ContainerFailure` raised by a driver
+quarantines the dead devices and resubmits the job (up to
+``JobSpec.max_retries``) — the paper's node-failure story, now uniform
+across all five services.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional, Sequence, Union
+
+from repro.core.scheduler import (
+    JOB_DONE,
+    JOB_FAILED,
+    JOB_PENDING,
+    JOB_PREEMPTED,
+    JOB_RUNNING,
+    Job,
+    ResourceManager,
+)
+from repro.platform.driver import ContainerFailure, ServiceDriver, get_driver
+from repro.platform.spec import JobReport, JobSpec
+
+# platform-level job states: the scheduler's, plus CANCELLED
+DONE = "DONE"
+FAILED = "FAILED"
+CANCELLED = "CANCELLED"
+TERMINAL = (DONE, FAILED, CANCELLED)
+
+
+@dataclasses.dataclass
+class _JobRecord:
+    spec: JobSpec
+    driver: ServiceDriver
+    ctx: Any  # driver.prepare() output
+    state: str = JOB_PENDING
+    last_rm_state: str = JOB_PENDING
+    submitted_at: float = 0.0
+    first_run_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    run_time_s: float = 0.0
+    devices_used: int = 0
+    retries: int = 0
+    metrics: dict = dataclasses.field(default_factory=dict)
+    events: list[str] = dataclasses.field(default_factory=list)
+    error: Optional[str] = None
+
+    def log(self, msg: str) -> None:
+        self.events.append(f"+{time.monotonic() - self.submitted_at:.2f}s {msg}")
+
+
+class Platform:
+    """Unified client over the shared device pool: every service is a job."""
+
+    def __init__(self, rm: Optional[ResourceManager] = None, total_devices: int = 8):
+        self.rm = rm if rm is not None else ResourceManager(total_devices)
+        self._records: dict[str, _JobRecord] = {}
+
+    # -- submission ----------------------------------------------------
+    def submit(self, spec: JobSpec) -> str:
+        """Validate, uniquify, queue; returns the (possibly renamed) job name."""
+        driver = get_driver(spec.kind)  # raises UnknownServiceKind on typos
+        ctx = driver.prepare(spec)  # bad config payloads fail here, not in queue
+        rec = _JobRecord(spec=spec, driver=driver, ctx=ctx,
+                         submitted_at=time.monotonic())
+        job = Job(
+            spec.name or spec.kind,
+            spec.kind,
+            devices=spec.devices,
+            min_devices=spec.resolved_min_devices(),
+            priority=spec.priority,
+        )
+        name = self.rm.submit(job)  # auto-uniquifies duplicate names
+        self._records[name] = rec
+        rec.log(f"submitted kind={spec.kind} want={spec.devices} "
+                f"priority={spec.priority}")
+        self._observe()
+        return name
+
+    def submit_batch(self, specs: Sequence[JobSpec]) -> list[str]:
+        """Heterogeneous batch submission: a mixed tenant set onto one pool."""
+        return [self.submit(s) for s in specs]
+
+    # -- lifecycle bridging --------------------------------------------
+    def _observe(self) -> None:
+        """Diff ResourceManager job states into per-job lifecycle events."""
+        for name, rec in self._records.items():
+            if rec.state in TERMINAL:
+                continue
+            job = self.rm.jobs[name]
+            prev, cur = rec.last_rm_state, job.state
+            if cur == prev:
+                continue
+            if cur == JOB_RUNNING:
+                c = job.container
+                verb = "resumed" if prev == JOB_PREEMPTED else "scheduled"
+                rec.log(f"{verb} on container {c.cid} ({c.size} devices)")
+            elif cur == JOB_PREEMPTED:
+                rec.log("preempted (devices reclaimed by higher priority)")
+            elif cur == JOB_PENDING:
+                rec.log("requeued")
+            rec.last_rm_state = cur
+            rec.state = cur
+
+    # -- execution -----------------------------------------------------
+    def _runnable(self) -> list[str]:
+        return [
+            name
+            for name, rec in self._records.items()
+            if rec.state not in TERMINAL and self.rm.jobs[name].state == JOB_RUNNING
+        ]
+
+    def step(self) -> bool:
+        """Execute the highest-priority scheduled job in-process; True if any ran."""
+        self._observe()
+        runnable = self._runnable()
+        if not runnable:
+            return False
+        name = min(
+            runnable,
+            key=lambda n: (-self.rm.jobs[n].priority, self.rm.jobs[n].submitted_at),
+        )
+        rec = self._records[name]
+        job = self.rm.jobs[name]
+        rec.devices_used = job.container.size
+        if rec.first_run_at is None:
+            rec.first_run_at = time.monotonic()
+        t0 = time.perf_counter()
+        try:
+            metrics = rec.driver.run(job.container, rec.ctx)
+        except ContainerFailure as e:
+            rec.run_time_s += time.perf_counter() - t0
+            rec.log(f"container failure: {e}")
+            if rec.retries >= rec.spec.max_retries:
+                # abandoned, but its dead devices still leave the pool
+                self.rm.quarantine_devices(job.container.device_ids[: e.dead_devices])
+                self._finish(name, FAILED, error=str(e))
+            else:
+                rec.retries += 1
+                rec.log(f"resubmitting (retry {rec.retries}/{rec.spec.max_retries})")
+                self.rm.fail_container(name, dead_devices=e.dead_devices)
+                # fail_container reschedules synchronously, so the requeued
+                # job may already hold a fresh container — _observe would see
+                # RUNNING->RUNNING and drop the transition; log it here
+                job = self.rm.jobs[name]
+                rec.state = rec.last_rm_state = job.state
+                if job.state == JOB_RUNNING:
+                    rec.log(f"rescheduled on container {job.container.cid} "
+                            f"({job.container.size} devices)")
+        except Exception as e:  # driver bug / bad workload: job fails, pool survives
+            rec.run_time_s += time.perf_counter() - t0
+            self._finish(name, FAILED, error=f"{type(e).__name__}: {e}")
+        else:
+            rec.run_time_s += time.perf_counter() - t0
+            rec.metrics = metrics or {}
+            self._finish(name, DONE)
+        self._observe()
+        return True
+
+    def _finish(self, name: str, state: str, error: Optional[str] = None) -> None:
+        rec = self._records[name]
+        rec.state = state
+        rec.error = error
+        rec.finished_at = time.monotonic()
+        rec.log(state.lower() if not error else f"failed: {error}")
+        # frees the container, reschedules the queue; co-tenants sharing the
+        # ResourceManager see the real outcome, not a blanket "done"
+        self.rm.complete(name, state=JOB_FAILED if state == FAILED else JOB_DONE)
+
+    # -- client surface ------------------------------------------------
+    def status(self, name: str) -> str:
+        self._observe()
+        return self._records[name].state
+
+    def events(self, name: str) -> list[str]:
+        self._observe()
+        return list(self._records[name].events)
+
+    def cancel(self, name: str) -> bool:
+        """Withdraw a job (queued, preempted, or scheduled-but-not-started)."""
+        self._observe()
+        rec = self._records[name]
+        if rec.state in TERMINAL:
+            return False
+        rec.state = CANCELLED
+        rec.finished_at = time.monotonic()
+        rec.log("cancelled")
+        self.rm.complete(name)
+        return True
+
+    def wait(
+        self,
+        names: Union[str, Sequence[str], None] = None,
+        timeout_s: float = 600.0,
+    ) -> Union[JobReport, dict[str, JobReport]]:
+        """Drive the executor loop until the named jobs (default: all) reach a
+        terminal state; returns their JobReports (one, or name->report)."""
+        single = isinstance(names, str)
+        if single:
+            targets = [names]
+        else:
+            targets = list(self._records) if names is None else list(names)
+        t0 = time.monotonic()
+        while True:
+            self._observe()
+            if all(self._records[n].state in TERMINAL for n in targets):
+                break
+            if self.step():
+                continue
+            # nothing of ours is scheduled: either a foreign tenant (e.g. a
+            # FleetRunner on the same pool) holds the devices, or the queue
+            # is genuinely stuck (job can never fit / pool quarantined)
+            foreign = self.rm.running_jobs(exclude=self._records)
+            if foreign and time.monotonic() - t0 < timeout_s:
+                time.sleep(0.01)
+                continue
+            stuck = [n for n in targets if self._records[n].state not in TERMINAL]
+            raise RuntimeError(
+                f"platform stalled: {stuck} cannot be scheduled "
+                f"(pool={self.rm.total}, free={len(self.rm.free)}, "
+                f"quarantined={len(self.rm.quarantined)}"
+                + (f", held by {foreign})" if foreign else ")")
+            )
+        if single:
+            return self.results(targets[0])
+        return {n: self.results(n) for n in targets}
+
+    def run_batch(
+        self, specs: Sequence[JobSpec], timeout_s: float = 600.0
+    ) -> dict[str, JobReport]:
+        """submit_batch + wait: the heterogeneous multi-tenant entrypoint."""
+        names = self.submit_batch(specs)
+        reports = self.wait(names, timeout_s=timeout_s)
+        assert isinstance(reports, dict)
+        return reports
+
+    def results(self, name: str) -> JobReport:
+        """JobReport for a job (a live snapshot if it isn't terminal yet)."""
+        self._observe()
+        rec = self._records[name]
+        job = self.rm.jobs[name]
+        now = time.monotonic()
+        end = rec.finished_at if rec.finished_at is not None else now
+        # a job that never executed queued until it finished (e.g. cancelled)
+        first_run = rec.first_run_at if rec.first_run_at is not None else end
+        return JobReport(
+            name=name,
+            kind=rec.spec.kind,
+            state=rec.state,
+            devices_used=rec.devices_used,
+            queue_time_s=max(first_run - rec.submitted_at, 0.0),
+            run_time_s=rec.run_time_s,
+            wall_time_s=max(end - rec.submitted_at, 0.0),
+            preemptions=job.preemptions,
+            resumes=job.resumes,
+            retries=rec.retries,
+            metrics=dict(rec.metrics),
+            events=list(rec.events),
+            error=rec.error,
+        )

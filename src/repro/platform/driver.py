@@ -1,0 +1,88 @@
+"""ServiceDriver protocol + registry — the service side of the platform API.
+
+A service plugs into the platform by registering a driver for its job kind:
+``prepare(spec)`` validates/coerces the spec's config payload into the
+service's typed config (cheap, runs at submit time so a bad payload fails
+fast), and ``run(container, cfg)`` executes the job on its allocated
+container and returns the service-metrics dict that lands in
+``JobReport.metrics``.  ``Job.kind`` strings are validated against this
+registry at submit time, so a typo'd kind is an immediate error instead of a
+silently-unrunnable queue entry.
+"""
+
+from __future__ import annotations
+
+import difflib
+from typing import Any, Optional, Protocol, runtime_checkable
+
+from repro.core.scheduler import Container
+
+from repro.platform.spec import JobSpec
+
+
+class UnknownServiceKind(ValueError):
+    """Raised at submit time when ``JobSpec.kind`` names no registered driver."""
+
+    def __init__(self, kind: str, known: tuple[str, ...]):
+        hint = difflib.get_close_matches(kind, known, n=1)
+        msg = f"unknown service kind {kind!r}; registered kinds: {sorted(known)}"
+        if hint:
+            msg += f" (did you mean {hint[0]!r}?)"
+        super().__init__(msg)
+        self.kind = kind
+
+
+class ContainerFailure(RuntimeError):
+    """A driver raises this when its container's devices died mid-run.
+
+    The platform quarantines ``dead_devices`` of the container, requeues the
+    job (``ResourceManager.fail_container``) and retries up to
+    ``JobSpec.max_retries`` times before marking the job FAILED.
+    """
+
+    def __init__(self, msg: str = "container failure", dead_devices: int = 1):
+        super().__init__(msg)
+        self.dead_devices = dead_devices
+
+
+@runtime_checkable
+class ServiceDriver(Protocol):
+    """prepare → run(container) → metrics; one implementation per job kind."""
+
+    kind: str
+
+    def prepare(self, spec: JobSpec) -> Any:
+        """Validate ``spec.config`` and return the typed run context."""
+        ...
+
+    def run(self, container: Container, cfg: Any) -> dict:
+        """Execute on the allocated container; return service metrics."""
+        ...
+
+
+_REGISTRY: dict[str, ServiceDriver] = {}
+
+
+def register_driver(cls):
+    """Class decorator: instantiate and register a driver under ``cls.kind``."""
+    drv = cls()
+    if not getattr(drv, "kind", None):
+        raise ValueError(f"driver {cls.__name__} must define a non-empty kind")
+    _REGISTRY[drv.kind] = drv
+    return cls
+
+
+def unregister_driver(kind: str) -> None:
+    """Remove a registered kind (test hook for temporary drivers)."""
+    _REGISTRY.pop(kind, None)
+
+
+def get_driver(kind: str) -> ServiceDriver:
+    try:
+        return _REGISTRY[kind]
+    except KeyError:
+        raise UnknownServiceKind(kind, available_kinds()) from None
+
+
+def available_kinds() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))

@@ -1,0 +1,568 @@
+"""The five platform services as ServiceDriver implementations.
+
+Each service (train, simulate, scenario, mapgen, serve) exposes a typed
+``*JobConfig`` payload and a driver that runs the job on its allocated
+container — the same code path the thin ``repro.launch.*`` CLI wrappers and
+the heterogeneous benchmark submit through.  Heavy service imports happen
+inside ``run`` so ``Platform.submit`` stays cheap.
+
+Service → driver table:
+
+    kind        driver            service package        workload
+    ----------  ----------------  ---------------------  --------------------
+    train       TrainDriver       repro.training         LM training + ckpt
+    simulate    SimulateDriver    repro.sim.replay       replay simulation
+    scenario    ScenarioDriver    repro.scenario         closed-loop sweeps
+    mapgen      MapGenDriver      repro.mapgen           HD-map generation
+    serve       ServeDriver       repro.serving          batch/continuous LM
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+import time
+from typing import Any, Optional, Sequence
+
+import numpy as np
+
+from repro.core.scheduler import Container
+from repro.platform.driver import register_driver
+from repro.platform.spec import JobSpec
+
+
+def coerce_config(config: Any, cls):
+    """Coerce a spec's config payload into the service's typed dataclass.
+
+    Accepts ``None`` (all defaults), an instance of ``cls``, or a dict —
+    unknown dict keys are an error so payload typos fail at submit time.
+    """
+    if config is None:
+        return cls()
+    if isinstance(config, cls):
+        return config
+    if isinstance(config, dict):
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(config) - known)
+        if unknown:
+            raise ValueError(
+                f"unknown {cls.__name__} keys {unknown}; known: {sorted(known)}"
+            )
+        return cls(**config)
+    raise TypeError(
+        f"config must be None, dict, or {cls.__name__}; got {type(config).__name__}"
+    )
+
+
+def _smoke_cfg(arch: str, scale: str, vocab: int, seq: int):
+    """Shared model-config derivation so train and serve jobs that point at
+    the same checkpoint directory agree on parameter shapes."""
+    from repro.config import get_arch, scale_down
+
+    cfg = get_arch(arch)
+    if scale == "smoke":
+        cfg = scale_down(cfg, vocab_size=vocab, max_seq_len=max(seq, 512))
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TrainJobConfig:
+    arch: str = "qwen2-0.5b"
+    scale: str = "smoke"  # smoke: reduced config for CPU; full: real config
+    steps: int = 100
+    batch: int = 8
+    seq: int = 256
+    vocab: int = 512  # smoke-scale vocab
+    lr: float = 1e-3
+    microbatches: int = 1
+    ckpt_dir: str = "/tmp/repro_train"
+    ckpt_every: int = 50
+    # fail_at injects a HARD crash (os._exit) at this step — it simulates
+    # node death for the external crash-restart loop (the CLI restart path /
+    # test_train_integration), not a recoverable ContainerFailure; don't use
+    # it for jobs co-scheduled in-process with other tenants
+    fail_at: int = -1
+    log_every: int = 10
+
+
+@register_driver
+class TrainDriver:
+    """End-to-end LM training with crash-restart fault tolerance (paper §4)."""
+
+    kind = "train"
+
+    def prepare(self, spec: JobSpec) -> TrainJobConfig:
+        return coerce_config(spec.config, TrainJobConfig)
+
+    def run(self, container: Container, cfg: TrainJobConfig) -> dict:
+        import jax
+        import jax.numpy as jnp
+
+        from repro.config import ParallelConfig, TrainConfig
+        from repro.core.tiered_store import TieredStore
+        from repro.data.loader import BatchLoader
+        from repro.data.synthetic import lm_token_dataset
+        from repro.distributed.mesh import single_device_mesh
+        from repro.training.checkpoint import CheckpointManager
+        from repro.training.train_loop import make_train_step
+
+        mcfg = _smoke_cfg(cfg.arch, cfg.scale, cfg.vocab, cfg.seq)
+        tcfg = TrainConfig(
+            learning_rate=cfg.lr,
+            warmup_steps=max(cfg.steps // 10, 1),
+            total_steps=cfg.steps,
+            checkpoint_every=cfg.ckpt_every,
+        )
+        pcfg = ParallelConfig(num_microbatches=cfg.microbatches)
+        mesh = single_device_mesh()  # CPU-scale; pods use dryrun configs
+
+        bundle = make_train_step(mcfg, tcfg, pcfg, mesh)
+        store = TieredStore(cfg.ckpt_dir, mem_capacity=4 << 30)
+        ckpt = CheckpointManager(store, keep=tcfg.keep_checkpoints)
+
+        with mesh:
+            state_like = jax.eval_shape(
+                bundle.init_fn, jax.ShapeDtypeStruct((2,), jnp.uint32)
+            )
+            start_step = 0
+            try:
+                state, start_step = ckpt.restore(state_like)
+                print(f"[train] resumed from checkpoint step {start_step}")
+            except FileNotFoundError:
+                state = jax.jit(bundle.init_fn)(jax.random.PRNGKey(tcfg.seed))
+                print("[train] fresh init")
+
+            step_fn = jax.jit(bundle.train_step, donate_argnums=(0,))
+            ds = lm_token_dataset(
+                vocab=mcfg.vocab_size, seq_len=cfg.seq,
+                seqs_per_partition=max(cfg.batch, 8), num_partitions=16,
+            )
+            loader = BatchLoader(ds, batch_size=cfg.batch, straggler_timeout_s=5.0)
+
+            t0 = time.perf_counter()
+            tokens_done = 0
+            step_i = start_step
+            last = {}
+            for nb in loader.batches(epochs=1_000_000):
+                if step_i >= cfg.steps:
+                    break
+                batch = {k: jnp.asarray(v) for k, v in nb.items()}
+                state, metrics = step_fn(state, batch)
+                step_i += 1
+                tokens_done += cfg.batch * cfg.seq
+                if step_i % cfg.log_every == 0 or step_i == cfg.steps:
+                    last = {k: float(v) for k, v in jax.device_get(metrics).items()}
+                    dt = time.perf_counter() - t0
+                    print(
+                        f"[train] step {step_i:5d} loss={last['loss']:.4f} "
+                        f"acc={last['accuracy']:.3f} gnorm={last['grad_norm']:.2f} "
+                        f"tok/s={tokens_done/max(dt,1e-9):,.0f}"
+                    )
+                if step_i % cfg.ckpt_every == 0 or step_i == cfg.steps:
+                    ckpt.save(jax.device_get(state), step_i, durable=True)
+                if cfg.fail_at == step_i:
+                    print(f"[train] INJECTED FAILURE at step {step_i}", flush=True)
+                    os._exit(42)
+            loader.close()
+            store.flush()
+            store.close()
+            dt = time.perf_counter() - t0
+            print(
+                f"[train] done at step {step_i}; "
+                f"speculative_fetches={loader.speculative_fetches}"
+            )
+            return {
+                "steps": step_i,
+                "resumed_from_step": start_step,
+                "final_loss": last.get("loss", float("nan")),
+                "accuracy": last.get("accuracy", float("nan")),
+                "tokens_per_s": tokens_done / max(dt, 1e-9),
+                "speculative_fetches": loader.speculative_fetches,
+            }
+
+
+# ---------------------------------------------------------------------------
+# simulate (replay)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SimulateJobConfig:
+    partitions: int = 8
+    frames: int = 16
+    lidar_points: int = 512
+    channels: tuple = (16, 32, 64)  # perception CNN width per block
+    pallas_conv: bool = False
+    ab_test: bool = False
+    seed: int = 0
+
+
+@register_driver
+class SimulateDriver:
+    """Distributed replay simulation over drive-log partitions (paper §3)."""
+
+    kind = "simulate"
+
+    def prepare(self, spec: JobSpec) -> SimulateJobConfig:
+        return coerce_config(spec.config, SimulateJobConfig)
+
+    def run(self, container: Container, cfg: SimulateJobConfig) -> dict:
+        import jax
+
+        from repro.data.synthetic import drive_log_dataset
+        from repro.sim.replay import PerceptionModel, ReplaySimulator
+
+        ds = drive_log_dataset(
+            num_partitions=cfg.partitions, frames_per_partition=cfg.frames,
+            lidar_points=cfg.lidar_points,
+        )
+        model = PerceptionModel(
+            channels=tuple(cfg.channels), use_pallas=cfg.pallas_conv
+        )
+        params = model.init(jax.random.PRNGKey(cfg.seed))
+        sim = ReplaySimulator(model, params)
+        rep = sim.simulate(ds)
+        print(
+            f"[simulate] partitions={rep.partitions} frames={rep.frames} "
+            f"mean={rep.mean_score:.4f} std={rep.score_std:.4f} "
+            f"wall={rep.wall_time_s:.2f}s"
+        )
+        metrics = {
+            "partitions": rep.partitions,
+            "frames": rep.frames,
+            "mean_score": rep.mean_score,
+            "score_std": rep.score_std,
+            "sim_wall_s": rep.wall_time_s,
+        }
+        if cfg.ab_test:
+            cand = model.init(jax.random.PRNGKey(cfg.seed + 1))
+            ab = sim.ab_test(ds, cand)
+            print(
+                f"[simulate] A/B: frames={ab.frames} flips={ab.decision_flips} "
+                f"flip_rate={ab.flip_rate:.3f} mad={ab.mean_abs_diff:.4f}"
+            )
+            metrics.update(
+                decision_flips=ab.decision_flips,
+                flip_rate=ab.flip_rate,
+                mean_abs_diff=ab.mean_abs_diff,
+            )
+        return metrics
+
+
+# ---------------------------------------------------------------------------
+# scenario (closed-loop sweeps)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ScenarioJobConfig:
+    families: Optional[Sequence[str]] = None  # default: all five
+    per_family: int = 64
+    steps: int = 100
+    dt: float = 0.1
+    seed: int = 0
+    policy: str = "aeb"  # baseline | aeb
+    use_pallas: bool = False
+    # sweep sharding: job i of n runs scenarios [i*S/n, (i+1)*S/n) of the
+    # seed-deterministic batch, so the union over shards is the full sweep
+    shard_index: int = 0
+    num_shards: int = 1
+
+
+@register_driver
+class ScenarioDriver:
+    """One shard of a closed-loop scenario sweep (paper §3 simulation)."""
+
+    kind = "scenario"
+
+    def prepare(self, spec: JobSpec) -> ScenarioJobConfig:
+        cfg = coerce_config(spec.config, ScenarioJobConfig)
+        if not 0 <= cfg.shard_index < cfg.num_shards:
+            raise ValueError(
+                f"shard_index {cfg.shard_index} outside num_shards {cfg.num_shards}"
+            )
+        if cfg.policy not in scenario_policies():
+            raise ValueError(
+                f"unknown policy {cfg.policy!r}; known: {sorted(scenario_policies())}"
+            )
+        return cfg
+
+    def run(self, container: Container, cfg: ScenarioJobConfig) -> dict:
+        import jax
+
+        from repro.scenario.runner import slice_batch
+        from repro.scenario.world import rollout
+
+        batch, names = _cached_build_batch(
+            tuple(cfg.families) if cfg.families else None,
+            cfg.per_family,
+            cfg.seed,
+        )
+        S = batch.num_scenarios
+        bounds = np.linspace(0, S, cfg.num_shards + 1, dtype=int)
+        lo, hi = int(bounds[cfg.shard_index]), int(bounds[cfg.shard_index + 1])
+        shard = slice_batch(batch, lo, hi)
+        t0 = time.perf_counter()
+        m, _ = rollout(
+            shard, scenario_policies()[cfg.policy],
+            steps=cfg.steps, dt=cfg.dt, use_pallas=cfg.use_pallas,
+        )
+        m = jax.block_until_ready(m)
+        wall = time.perf_counter() - t0
+        collided = np.asarray(m.collided).astype(bool)
+        return {
+            "scenarios": hi - lo,
+            "steps": cfg.steps,
+            "collision_rate": float(collided.mean()) if hi > lo else 0.0,
+            "scenarios_per_sec": (hi - lo) / max(wall, 1e-9),
+            "shard": f"{cfg.shard_index}/{cfg.num_shards}",
+            # raw per-scenario metrics for cross-shard aggregation
+            "_family_id": np.asarray(batch.family_id[lo:hi]),
+            "_family_names": list(names),
+            "_rollout": m,
+        }
+
+
+def scenario_policies() -> dict:
+    """Name -> policy registry; the single source for driver validation and
+    the CLI's ``--policy`` choices."""
+    from repro.scenario.world import aeb_policy, baseline_policy
+
+    return {"baseline": baseline_policy, "aeb": aeb_policy}
+
+
+@functools.lru_cache(maxsize=8)
+def _cached_build_batch(families_key, per_family: int, seed: int):
+    """Sweeps are pure functions of (families, per_family, seed); shard jobs
+    of one sweep share the compiled batch instead of rebuilding it."""
+    import jax
+
+    from repro.scenario.dsl import build_batch
+
+    return build_batch(
+        list(families_key) if families_key else None,
+        per_family,
+        jax.random.PRNGKey(seed),
+    )
+
+
+def aggregate_scenario_metrics(metric_dicts: Sequence[dict], wall_time_s: float):
+    """Merge per-shard scenario job metrics into one ScenarioReport."""
+    from repro.scenario import metrics as M
+
+    return M.merge_rollouts(
+        [m["_family_id"] for m in metric_dicts],
+        metric_dicts[0]["_family_names"],
+        [m["_rollout"] for m in metric_dicts],
+        steps=int(metric_dicts[0]["steps"]),
+        wall_time_s=wall_time_s,
+    )
+
+
+# ---------------------------------------------------------------------------
+# mapgen
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class MapGenJobConfig:
+    partitions: int = 4
+    frames: int = 16
+    lidar_points: int = 512
+    fused: bool = True  # False: per-stage host I/O (baseline)
+    icp_refine: bool = True
+
+
+@register_driver
+class MapGenDriver:
+    """HD-map generation pipeline over drive logs (paper §5)."""
+
+    kind = "mapgen"
+
+    def prepare(self, spec: JobSpec) -> MapGenJobConfig:
+        return coerce_config(spec.config, MapGenJobConfig)
+
+    def run(self, container: Container, cfg: MapGenJobConfig) -> dict:
+        from repro.data.synthetic import drive_log_dataset
+        from repro.mapgen.pipeline import MapGenConfig, MapGenPipeline
+
+        ds = drive_log_dataset(
+            num_partitions=cfg.partitions, frames_per_partition=cfg.frames,
+            lidar_points=cfg.lidar_points,
+        )
+        pipe = MapGenPipeline(MapGenConfig(icp_refine=cfg.icp_refine))
+        gm, out = pipe.run(ds, fused=cfg.fused)
+        occ = int(np.asarray(gm.counts > 0).sum())
+        lanes = int((np.asarray(gm.labels) == 2).sum())
+        pose_err = float(pipe.pose_error(out))
+        print(
+            f"[mapgen] mode={'fused' if cfg.fused else 'staged'} "
+            f"pose_err={pose_err:.3f}m occupied={occ} lane_cells={lanes}"
+        )
+        return {
+            "mode": "fused" if cfg.fused else "staged",
+            "pose_error_m": pose_err,
+            "occupied_cells": occ,
+            "lane_cells": lanes,
+        }
+
+
+# ---------------------------------------------------------------------------
+# serve
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ServeJobConfig:
+    arch: str = "qwen2-0.5b"
+    scale: str = "smoke"
+    batch: int = 4
+    prompt_len: int = 64
+    gen: int = 32
+    temperature: float = 0.0
+    seed: int = 0
+    engine: str = "static"  # static | continuous
+    page_size: int = 16
+    slots: int = 0  # continuous decode slots (0 = batch)
+    vocab: int = 512  # smoke-scale vocab (must match a ckpt's train job)
+    seq: int = 512  # smoke-scale max_seq_len (match the train job's --seq
+    #                 when restoring from ckpt_dir; params depend on it)
+    ckpt_dir: Optional[str] = None  # serve params from this train checkpoint
+
+
+@register_driver
+class ServeDriver:
+    """Static-batch or continuous-batching LM serving (paper §4.3)."""
+
+    kind = "serve"
+
+    def prepare(self, spec: JobSpec) -> ServeJobConfig:
+        cfg = coerce_config(spec.config, ServeJobConfig)
+        if cfg.engine not in ("static", "continuous"):
+            raise ValueError(f"engine must be static|continuous, got {cfg.engine!r}")
+        return cfg
+
+    def _params(self, cfg: ServeJobConfig, mcfg):
+        """Fresh random params, or the newest checkpoint from a train job's
+        ``ckpt_dir`` — how a serve tenant picks up a co-scheduled train
+        tenant's output through the tiered store."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.models import model_zoo
+
+        if cfg.ckpt_dir is None:
+            return model_zoo.init_params(model_zoo.build_model(mcfg),
+                                         jax.random.PRNGKey(cfg.seed))
+        from repro.config import ParallelConfig, TrainConfig
+        from repro.core.tiered_store import TieredStore
+        from repro.distributed.mesh import single_device_mesh
+        from repro.training.checkpoint import CheckpointManager
+        from repro.training.train_loop import make_train_step
+
+        bundle = make_train_step(
+            mcfg, TrainConfig(), ParallelConfig(), single_device_mesh()
+        )
+        state_like = jax.eval_shape(
+            bundle.init_fn, jax.ShapeDtypeStruct((2,), jnp.uint32)
+        )
+        store = TieredStore(cfg.ckpt_dir, mem_capacity=1 << 30)
+        try:
+            state, step = CheckpointManager(store).restore(state_like)
+        finally:
+            store.close()
+        print(f"[serve] restored params from checkpoint step {step}")
+        return state["params"]
+
+    def run(self, container: Container, cfg: ServeJobConfig) -> dict:
+        import jax
+        import jax.numpy as jnp
+
+        mcfg = _smoke_cfg(cfg.arch, cfg.scale, cfg.vocab,
+                          max(cfg.seq, cfg.prompt_len + cfg.gen))
+        params = self._params(cfg, mcfg)
+
+        key = jax.random.PRNGKey(cfg.seed + 1)
+        B, S = cfg.batch, cfg.prompt_len
+        prompt = {
+            "tokens": jax.random.randint(key, (B, S), 0, mcfg.vocab_size, jnp.int32)
+        }
+        if mcfg.family == "vlm":
+            F = mcfg.frontend_tokens
+            prompt["patches"] = jax.random.normal(
+                key, (B, F, mcfg.frontend_dim), jnp.float32
+            )
+            prompt["positions3"] = jnp.broadcast_to(
+                jnp.arange(S + F, dtype=jnp.int32), (3, B, S + F)
+            )
+        if mcfg.family == "encdec":
+            prompt["src_emb"] = jax.random.normal(
+                key, (B, S, mcfg.frontend_dim), jnp.float32
+            )
+
+        if cfg.engine == "continuous":
+            from repro.serving.continuous import ContinuousBatchingEngine
+            from repro.serving.scheduler import Request, token_latencies
+
+            engine = ContinuousBatchingEngine(
+                mcfg, params,
+                num_slots=cfg.slots or B,
+                page_size=cfg.page_size,
+                max_len=S + cfg.gen,
+                seed=cfg.seed,
+            )
+            reqs = [
+                Request(
+                    rid=i, tokens=np.asarray(prompt["tokens"][i]),
+                    max_new_tokens=cfg.gen, temperature=cfg.temperature,
+                )
+                for i in range(B)
+            ]
+            t0 = time.perf_counter()
+            outs = engine.run(reqs)
+            dt = time.perf_counter() - t0
+            toks = sum(len(o.tokens) for o in outs)
+            lat = token_latencies(outs)
+            p50, p99 = np.percentile(lat, 50) * 1e3, np.percentile(lat, 99) * 1e3
+            print(
+                f"[serve/continuous] {toks} tokens in {dt:.2f}s "
+                f"({toks/dt:,.1f} tok/s) p50/p99 token latency "
+                f"{p50:.1f}/{p99:.1f} ms"
+            )
+            first = min(outs, key=lambda o: o.rid)
+            print("[serve/continuous] first sequence:", first.tokens[:16])
+            return {
+                "engine": "continuous",
+                "tokens": toks,
+                "tokens_per_s": toks / max(dt, 1e-9),
+                "p50_token_ms": float(p50),
+                "p99_token_ms": float(p99),
+            }
+
+        from repro.serving.engine import ServeEngine
+
+        engine = ServeEngine(
+            mcfg, params, max_len=S + cfg.gen + (mcfg.frontend_tokens or 0)
+        )
+        t0 = time.perf_counter()
+        out = engine.generate(
+            prompt, cfg.gen, temperature=cfg.temperature, seed=cfg.seed
+        )
+        dt = time.perf_counter() - t0
+        toks = B * cfg.gen
+        print(
+            f"[serve] generated {out.shape} tokens in {dt:.2f}s "
+            f"({toks/dt:,.1f} tok/s)"
+        )
+        print("[serve] first sequence:", jax.device_get(out[0])[:16].tolist())
+        return {
+            "engine": "static",
+            "tokens": toks,
+            "tokens_per_s": toks / max(dt, 1e-9),
+        }

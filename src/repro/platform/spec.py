@@ -1,0 +1,83 @@
+"""Declarative job specification + unified report schema.
+
+The paper's platform promise is that every autonomous-driving workload —
+training, replay simulation, closed-loop scenario sweeps, HD-map generation,
+model serving — is *one kind of thing* to the infrastructure: a job with
+resource requirements submitted to a shared pool.  :class:`JobSpec` is that
+declaration (service kind, device/priority/elasticity requirements, typed
+per-service config payload) and :class:`JobReport` is the uniform result
+record every service emits (wall time, devices used, preemption/resume
+counts, plus service-specific metrics).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+
+@dataclasses.dataclass
+class JobSpec:
+    """What a tenant asks the platform for.
+
+    ``config`` is the per-service payload: either the service's typed
+    ``*JobConfig`` dataclass (see :mod:`repro.platform.services`) or a plain
+    dict coerced — with unknown-key validation — by the driver's ``prepare``.
+    """
+
+    kind: str  # must name a registered ServiceDriver
+    config: Any = None
+    name: Optional[str] = None  # default: kind; auto-uniquified at submit
+    devices: int = 1  # desired container size
+    min_devices: Optional[int] = None  # floor for elastic shrink
+    priority: int = 0  # higher wins; may preempt lower
+    elastic: bool = True  # may run shrunk to min_devices under pressure
+    max_retries: int = 1  # container-failure resubmissions before FAILED
+
+    def resolved_min_devices(self) -> int:
+        if not self.elastic:
+            if self.min_devices is not None and self.min_devices != self.devices:
+                raise ValueError(
+                    f"elastic=False requires the full container: "
+                    f"min_devices={self.min_devices} contradicts "
+                    f"devices={self.devices}"
+                )
+            return self.devices
+        if self.min_devices is not None:
+            return max(1, self.min_devices)
+        return 1
+
+
+@dataclasses.dataclass
+class JobReport:
+    """Uniform per-job result record — the schema every service reports in."""
+
+    name: str
+    kind: str
+    state: str  # DONE | FAILED | CANCELLED (or a live state for snapshots)
+    devices_used: int  # container size when the driver ran (0 = never ran)
+    queue_time_s: float  # submit -> first execution
+    run_time_s: float  # driver execution wall time (sum over retries)
+    wall_time_s: float  # submit -> terminal
+    preemptions: int
+    resumes: int
+    retries: int  # container-failure resubmissions
+    metrics: dict  # service-specific (loss, tok/s, collision_rate, ...)
+    events: list[str]  # lifecycle trace, "+<t>s <what>" per transition
+    error: Optional[str] = None
+
+    def summary(self) -> str:
+        m = " ".join(
+            f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+            for k, v in self.metrics.items()
+            if isinstance(v, (int, float, str))
+        )
+        line = (
+            f"[{self.kind}/{self.name}] {self.state} "
+            f"devices={self.devices_used} queue={self.queue_time_s:.2f}s "
+            f"run={self.run_time_s:.2f}s preempt={self.preemptions} "
+            f"resume={self.resumes} retries={self.retries}"
+        )
+        if self.error:
+            line += f" error={self.error!r}"
+        return line + (f"\n  {m}" if m else "")

@@ -110,6 +110,31 @@ def aggregate(
 # ---------------------------------------------------------------------------
 
 
+def merge_rollouts(
+    family_ids,
+    family_names: list[str],
+    chunks,
+    *,
+    steps: int,
+    wall_time_s: float,
+) -> ScenarioReport:
+    """Concatenate per-shard :class:`~repro.scenario.world.RolloutMetrics`
+    (in shard order, matching the concatenation of ``family_ids``) and
+    aggregate into one report — shared by ``FleetRunner`` and the platform's
+    scenario driver so sweep aggregation has a single implementation."""
+    cat = lambda f: np.concatenate([np.asarray(getattr(m, f)) for m in chunks])
+    return aggregate(
+        np.concatenate([np.asarray(ids) for ids in family_ids]),
+        list(family_names),
+        cat("collided"),
+        cat("min_ttc"),
+        cat("min_dist"),
+        cat("violations"),
+        steps=steps,
+        wall_time_s=wall_time_s,
+    )
+
+
 @dataclasses.dataclass
 class QualificationResult:
     passed: bool

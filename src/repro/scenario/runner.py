@@ -27,7 +27,8 @@ from repro.scenario import metrics as M
 from repro.scenario.world import Policy, RolloutMetrics, ScenarioBatch, rollout
 
 
-def _slice_batch(batch: ScenarioBatch, lo: int, hi: int) -> ScenarioBatch:
+def slice_batch(batch: ScenarioBatch, lo: int, hi: int) -> ScenarioBatch:
+    """A contiguous shard of a compiled scenario batch (every field sliced)."""
     return jax.tree_util.tree_map(lambda x: x[lo:hi], batch)
 
 
@@ -97,14 +98,10 @@ class FleetRunner:
                     self.rm.complete(name)
         wall = time.perf_counter() - t0
 
-        cat = lambda f: np.concatenate([np.asarray(getattr(done[i], f)) for i in range(n_shards)])
-        return M.aggregate(
-            np.asarray(batch.family_id),
+        return M.merge_rollouts(
+            [batch.family_id],
             list(family_names),
-            cat("collided"),
-            cat("min_ttc"),
-            cat("min_dist"),
-            cat("violations"),
+            [done[i] for i in range(n_shards)],
             steps=self.steps,
             wall_time_s=wall,
         )
@@ -127,7 +124,7 @@ class FleetRunner:
                     continue
                 ts = time.perf_counter()
                 done[i] = self._run_shard(
-                    _slice_batch(batch, int(bounds[i]), int(bounds[i + 1])), policy
+                    slice_batch(batch, int(bounds[i]), int(bounds[i + 1])), policy
                 )
                 self.shard_times_s[i] = time.perf_counter() - ts
                 self.rm.complete(name)  # frees the container, reschedules queue
@@ -135,10 +132,7 @@ class FleetRunner:
             if not ran_any:
                 # pool held by foreign train/serve jobs: wait for their
                 # containers to free up (another thread drives rm.complete)
-                foreign = [
-                    j.name for j in self.rm.jobs.values()
-                    if j.state == JOB_RUNNING and j.name not in names
-                ]
+                foreign = self.rm.running_jobs(exclude=names)
                 if foreign and time.perf_counter() - t0 < self.schedule_timeout_s:
                     # the completing thread's rm.complete() reschedules the
                     # queue; just poll job states here

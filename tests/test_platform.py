@@ -1,0 +1,297 @@
+"""Unified platform API: JobSpec validation, lifecycle state machine,
+preempt/resume bridging, container-failure resubmission, driver dispatch."""
+
+import pytest
+
+from repro.core.scheduler import ResourceManager
+from repro.platform import (
+    CANCELLED,
+    DONE,
+    FAILED,
+    ContainerFailure,
+    JobSpec,
+    Platform,
+    UnknownServiceKind,
+    available_kinds,
+    get_driver,
+    register_driver,
+    unregister_driver,
+)
+
+SERVICE_KINDS = ("train", "simulate", "scenario", "mapgen", "serve")
+
+
+@pytest.fixture
+def stub(request):
+    """Register a throwaway driver kind; unregister on teardown."""
+
+    registered = []
+
+    def make(kind="stub", run_fn=None, prepare_fn=None):
+        class Stub:
+            def prepare(self, spec):
+                return prepare_fn(spec) if prepare_fn else spec.config
+
+            def run(self, container, cfg):
+                return run_fn(container, cfg) if run_fn else {"ok": 1}
+
+        Stub.kind = kind
+        Stub.__name__ = f"Stub_{kind}"
+        register_driver(Stub)
+        registered.append(kind)
+        return Stub
+
+    yield make
+    for kind in registered:
+        unregister_driver(kind)
+
+
+# ---------------------------------------------------------------------------
+# registry + submit-time validation
+# ---------------------------------------------------------------------------
+
+
+def test_five_service_kinds_registered():
+    kinds = available_kinds()
+    assert set(SERVICE_KINDS) <= set(kinds)
+    drivers = {k: get_driver(k) for k in SERVICE_KINDS}
+    assert all(d.kind == k for k, d in drivers.items())
+    # per-kind dispatch: five distinct driver implementations
+    assert len({type(d) for d in drivers.values()}) == len(SERVICE_KINDS)
+
+
+def test_unknown_kind_rejected_at_submit():
+    p = Platform(total_devices=4)
+    with pytest.raises(UnknownServiceKind):
+        p.submit(JobSpec(kind="no-such-service"))
+    with pytest.raises(UnknownServiceKind, match="did you mean 'train'"):
+        p.submit(JobSpec(kind="trian"))
+    assert not p.rm.jobs  # nothing queued
+
+
+def test_bad_config_payload_fails_at_submit_not_in_queue():
+    p = Platform(total_devices=4)
+    with pytest.raises(ValueError, match="partitons"):
+        p.submit(JobSpec(kind="mapgen", config={"partitons": 2}))
+    with pytest.raises(TypeError):
+        p.submit(JobSpec(kind="mapgen", config=42))
+    assert not p.rm.jobs
+
+
+def test_rigid_spec_rejects_contradictory_min_devices(stub):
+    stub("stub")
+    p = Platform(total_devices=8)
+    with pytest.raises(ValueError, match="elastic=False"):
+        p.submit(JobSpec(kind="stub", devices=8, min_devices=2, elastic=False))
+    assert not p.rm.jobs
+    # rigid without min_devices pins the floor to the full container
+    assert JobSpec(kind="stub", devices=8, elastic=False).resolved_min_devices() == 8
+
+
+def test_auto_uniquified_job_names(stub):
+    stub("stub")
+    p = Platform(total_devices=4)
+    names = [p.submit(JobSpec(kind="stub", name="job", devices=1)) for _ in range(3)]
+    assert len(set(names)) == 3
+    assert names[0] == "job"
+    reports = p.wait(names)
+    assert all(r.state == DONE for r in reports.values())
+
+
+# ---------------------------------------------------------------------------
+# lifecycle: submit / status / wait / cancel / results
+# ---------------------------------------------------------------------------
+
+
+def test_submit_wait_done_report(stub):
+    seen = {}
+
+    def run_fn(container, cfg):
+        seen["devices"] = container.size
+        return {"answer": cfg["x"] * 2}
+
+    stub("stub", run_fn=run_fn)
+    p = Platform(total_devices=8)
+    name = p.submit(JobSpec(kind="stub", config={"x": 21}, devices=4))
+    report = p.wait(name)
+    assert report.state == DONE
+    assert report.metrics == {"answer": 42}
+    assert report.devices_used == seen["devices"] == 4
+    assert report.run_time_s >= 0 and report.wall_time_s >= report.run_time_s
+    assert report.preemptions == 0 and report.retries == 0
+    evs = " ".join(report.events)
+    assert "submitted" in evs and "scheduled" in evs and "done" in evs
+
+
+def test_status_tracks_queueing(stub):
+    stub("stub")
+    p = Platform(total_devices=2)
+    a = p.submit(JobSpec(kind="stub", devices=2, elastic=False))
+    b = p.submit(JobSpec(kind="stub", devices=2, elastic=False))
+    assert p.status(a) == "RUNNING"  # holds the pool, not yet executed
+    assert p.status(b) == "PENDING"
+    p.wait([a, b])
+    assert p.status(a) == DONE and p.status(b) == DONE
+
+
+def test_cancel_queued_job(stub):
+    ran = []
+    stub("stub", run_fn=lambda c, cfg: ran.append(cfg) or {})
+    p = Platform(total_devices=2)
+    a = p.submit(JobSpec(kind="stub", config={"id": "a"}, devices=2, elastic=False))
+    b = p.submit(JobSpec(kind="stub", config={"id": "b"}, devices=2, elastic=False))
+    assert p.cancel(b)
+    assert p.status(b) == CANCELLED
+    p.wait(a)
+    assert ran == [{"id": "a"}]  # the cancelled job never executed
+    assert p.results(b).state == CANCELLED
+    assert not p.cancel(b)  # already terminal
+
+
+def test_preempt_resume_roundtrip(stub):
+    stub("stub")
+    p = Platform(total_devices=4)
+    low = p.submit(JobSpec(kind="stub", name="low", devices=4, min_devices=1,
+                           priority=0))
+    high = p.submit(JobSpec(kind="stub", name="high", devices=4, elastic=False,
+                            priority=10))
+    # the high-priority submit reclaimed the low job's devices
+    assert p.status(low) in ("PREEMPTED", "RUNNING")
+    reports = p.wait([low, high])
+    assert reports[high].state == DONE and reports[high].preemptions == 0
+    assert reports[low].state == DONE
+    assert reports[low].preemptions >= 1 and reports[low].resumes >= 1
+    evs = " ".join(reports[low].events)
+    assert "preempted" in evs and "resumed" in evs
+
+
+def test_failed_container_resubmission(stub):
+    attempts = []
+
+    def flaky(container, cfg):
+        attempts.append(container.device_ids)
+        if len(attempts) == 1:
+            raise ContainerFailure("node died", dead_devices=1)
+        return {"attempt": len(attempts)}
+
+    stub("flaky", run_fn=flaky)
+    p = Platform(total_devices=4)
+    name = p.submit(JobSpec(kind="flaky", devices=2, max_retries=1))
+    report = p.wait(name)
+    assert report.state == DONE
+    assert report.retries == 1 and report.metrics == {"attempt": 2}
+    assert len(p.rm.quarantined) == 1  # the dead device is out of the pool
+    assert not (set(attempts[1]) & p.rm.quarantined)  # retry avoided it
+
+
+def test_retry_exhaustion_marks_failed(stub):
+    def always_dies(container, cfg):
+        raise ContainerFailure("node died", dead_devices=1)
+
+    stub("doomed", run_fn=always_dies)
+    p = Platform(total_devices=8)
+    name = p.submit(JobSpec(kind="doomed", devices=2, max_retries=1))
+    report = p.wait(name)
+    assert report.state == FAILED
+    assert report.retries == 1  # one resubmission, then abandoned
+    assert report.error and "node died" in report.error
+    # the scheduler records the real outcome for co-tenants, not "done"
+    assert p.rm.jobs[name].state == "FAILED"
+    # every reported-dead device left the pool, including the final attempt's
+    assert len(p.rm.quarantined) == 2
+    assert not (p.rm.free & p.rm.quarantined)
+
+
+def test_driver_exception_fails_job_but_frees_pool(stub):
+    def boom(container, cfg):
+        raise ValueError("bad workload")
+
+    stub("boom", run_fn=boom)
+    stub("stub")
+    p = Platform(total_devices=2)
+    bad = p.submit(JobSpec(kind="boom", devices=2, elastic=False))
+    good = p.submit(JobSpec(kind="stub", devices=2, elastic=False))
+    reports = p.wait([bad, good])
+    assert reports[bad].state == FAILED
+    assert "bad workload" in reports[bad].error
+    assert reports[good].state == DONE  # the pool was released for it
+
+
+def test_wait_raises_when_job_can_never_fit(stub):
+    stub("stub")
+    p = Platform(total_devices=2)
+    p.submit(JobSpec(kind="stub", devices=16, elastic=False))
+    with pytest.raises(RuntimeError, match="platform stalled"):
+        p.wait(timeout_s=0.2)
+
+
+# ---------------------------------------------------------------------------
+# real services end to end (small configs)
+# ---------------------------------------------------------------------------
+
+
+def test_simulate_job_end_to_end():
+    p = Platform(total_devices=4)
+    name = p.submit(JobSpec(
+        kind="simulate",
+        config={"partitions": 2, "frames": 4, "lidar_points": 64,
+                "channels": (8,)},
+        devices=2,
+    ))
+    report = p.wait(name)
+    assert report.state == DONE
+    assert report.metrics["frames"] == 8 and report.metrics["partitions"] == 2
+
+
+def test_scenario_shards_aggregate_to_full_sweep():
+    from repro.platform import ScenarioJobConfig, aggregate_scenario_metrics
+
+    p = Platform(total_devices=4)
+    specs = [
+        JobSpec(
+            kind="scenario",
+            config=ScenarioJobConfig(per_family=4, steps=10, shard_index=i,
+                                     num_shards=2),
+            devices=2,
+        )
+        for i in range(2)
+    ]
+    reports = p.run_batch(specs)
+    assert all(r.state == DONE for r in reports.values())
+    rep = aggregate_scenario_metrics([r.metrics for r in reports.values()], 1.0)
+    assert rep.scenarios == 4 * 5  # per_family x five families, no overlap
+    assert set(rep.families) == {
+        "cut_in", "hard_brake_lead", "merge", "pedestrian_crossing",
+        "occluded_intersection",
+    }
+
+
+def test_heterogeneous_batch_shares_one_pool():
+    rm = ResourceManager(4)
+    p = Platform(rm=rm)
+    reports = p.run_batch([
+        JobSpec(kind="mapgen",
+                config={"partitions": 2, "frames": 4, "lidar_points": 64},
+                devices=2, priority=5),
+        JobSpec(kind="simulate",
+                config={"partitions": 2, "frames": 2, "lidar_points": 64,
+                        "channels": (8,)},
+                devices=2),
+        JobSpec(kind="scenario", config={"per_family": 2, "steps": 5},
+                devices=4, min_devices=1),
+    ])
+    assert len(reports) == 3
+    assert all(r.state == DONE for r in reports.values())
+    kinds = sorted(r.kind for r in reports.values())
+    assert kinds == ["mapgen", "scenario", "simulate"]
+    assert len(rm.free) == 4  # everything released back to the shared pool
+
+
+def test_scenario_bad_policy_and_shard_validation():
+    p = Platform(total_devices=4)
+    with pytest.raises(ValueError, match="policy"):
+        p.submit(JobSpec(kind="scenario", config={"policy": "yolo"}))
+    with pytest.raises(ValueError, match="shard_index"):
+        p.submit(JobSpec(kind="scenario",
+                         config={"shard_index": 3, "num_shards": 2}))
+    assert not p.rm.jobs

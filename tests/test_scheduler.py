@@ -138,6 +138,18 @@ def test_no_wasted_preemption_when_fragmentation_blocks_allocation():
     assert rm.jobs["d"].state == JOB_RUNNING  # d was never a useful victim
 
 
+def test_duplicate_names_auto_uniquified():
+    """submit() renames colliding jobs instead of raising; the returned
+    name is the handle."""
+    rm = ResourceManager(8)
+    assert rm.submit(Job("job", "train", devices=2)) == "job"
+    second = rm.submit(Job("job", "train", devices=2))
+    third = rm.submit(Job("job", "train", devices=2))
+    assert second == "job-2" and third == "job-3"
+    assert {"job", "job-2", "job-3"} <= set(rm.jobs)
+    assert rm.jobs[second].state == JOB_RUNNING
+
+
 def test_speculative_execution():
     calls = []
 
