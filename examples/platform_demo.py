@@ -1,14 +1,20 @@
-"""Heterogeneous three-tenant demo: priority preemption + elastic resume.
+"""Heterogeneous three-tenant demo: concurrent executor, priority
+preemption + elastic resume, multi-replica serving.
 
 One 8-device pool, three tenants submitted through the unified platform API:
 
-1. a low-priority closed-loop scenario sweep that grabs the whole pool,
+1. a low-priority closed-loop scenario sweep that grabs the whole pool
+   (chunked, so a mid-run preemption would resume without rerunning
+   completed chunks),
 2. a high-priority train job that preempts it,
-3. a mid-priority serve job that squeezes in beside the train job —
-   forcing the sweep to *resume shrunk* to its elastic floor.
+3. a mid-priority serve tenant — two continuous-batching engine replicas
+   behind the join-shortest-queue router — that squeezes in beside the
+   train job, forcing the sweep to *resume shrunk* to its elastic floor.
 
-The unified JobReport surfaces the whole story per tenant: devices used,
-queue time, preemption/resume counts, and service metrics.
+Under the concurrent executor all three run on worker threads at once,
+overlapping on wall clock; the unified JobReport surfaces the whole story
+per tenant: devices used, queue time, preemption/resume counts, and
+service metrics (including per-replica routing).
 
     PYTHONPATH=src python examples/platform_demo.py
 """
@@ -29,7 +35,7 @@ def main():
     with tempfile.TemporaryDirectory() as ckpt_dir:
         sweep = platform.submit(JobSpec(
             kind="scenario", name="sweep",
-            config=ScenarioJobConfig(per_family=16, steps=40),
+            config=ScenarioJobConfig(per_family=16, steps=40, chunks=4),
             devices=8, min_devices=2, priority=0,  # elastic batch tenant
         ))
         # submitted while the sweep holds all 8 devices -> preempts it
@@ -43,7 +49,11 @@ def main():
         ))
         serve = platform.submit(JobSpec(
             kind="serve", name="frontend",
-            config=ServeJobConfig(arch="qwen2-0.5b", batch=2, prompt_len=16, gen=8),
+            config=ServeJobConfig(
+                arch="qwen2-0.5b", batch=4, prompt_len=16, gen=8,
+                engine="continuous", page_size=8, slots=2,
+                replicas=2,  # JSQ-routed engine replicas
+            ),
             devices=2, priority=5,  # latency tenant fills the gap
         ))
 

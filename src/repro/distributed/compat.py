@@ -1,0 +1,63 @@
+"""Version-compat shims for jax APIs that moved between releases.
+
+The repo targets current jax but must also run on 0.4.x-era CPU installs
+(where this container sits).  Two surfaces moved:
+
+* ``shard_map`` — top-level ``jax.shard_map`` with a ``check_vma`` kwarg on
+  new jax; ``jax.experimental.shard_map.shard_map`` with ``check_rep`` on
+  old jax.
+* ``jax.make_mesh`` — grew an ``axis_types`` kwarg (and
+  ``jax.sharding.AxisType``) on new jax; older versions accept neither.
+
+Everything that shard-maps or builds meshes goes through here so the
+difference lives in exactly one module.
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Optional, Sequence
+
+import jax
+
+try:  # new jax: top-level export
+    from jax import shard_map as _shard_map
+except ImportError:  # old jax: experimental module
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# the replication-check kwarg renamed check_rep -> check_vma independently of
+# where shard_map is exported, so probe the signature rather than inferring
+# from the import location
+try:
+    _params = inspect.signature(_shard_map).parameters
+    _CHECK_KW = next(
+        (k for k in ("check_vma", "check_rep") if k in _params), None
+    )
+except (TypeError, ValueError):  # unintrospectable: rely on the default
+    _CHECK_KW = None
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` with the replication-check kwarg normalized."""
+    kwargs = {_CHECK_KW: check} if _CHECK_KW else {}
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+    )
+
+
+def make_mesh(
+    axis_shapes: Sequence[int],
+    axis_names: Sequence[str],
+    *,
+    devices: Optional[Sequence] = None,
+):
+    """``jax.make_mesh`` with every axis Auto, on any jax version."""
+    kwargs = {} if devices is None else {"devices": devices}
+    try:
+        return jax.make_mesh(
+            axis_shapes, axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names),
+            **kwargs,
+        )
+    except (AttributeError, TypeError):  # no AxisType / no axis_types kwarg
+        return jax.make_mesh(axis_shapes, axis_names, **kwargs)

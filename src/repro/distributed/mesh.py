@@ -30,12 +30,9 @@ def make_mesh(cfg: MeshConfig) -> Mesh:
             "(dry-run scripts must set XLA_FLAGS=--xla_force_host_platform_device_count "
             "before importing jax)"
         )
-    return jax.make_mesh(
-        cfg.shape,
-        cfg.axis_names,
-        devices=devices[:n],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(cfg.axis_names),
-    )
+    from repro.distributed.compat import make_mesh as compat_make_mesh
+
+    return compat_make_mesh(cfg.shape, cfg.axis_names, devices=devices[:n])
 
 
 def local_mesh(data: int = 1, model: int = 1, pod: int = 1) -> Mesh:

@@ -5,9 +5,11 @@
 
 ``--engine continuous`` serves the batch as individual requests through the
 paged-KV continuous-batching engine (transformer families only) and reports
-per-token latency percentiles next to throughput.  ``--ckpt-dir`` serves the
-params of a previous ``launch.train`` run instead of random init.  The
-engines live in :class:`repro.platform.services.ServeDriver`.
+per-token latency percentiles next to throughput.  ``--replicas N`` fans the
+tenant out over N engine replicas behind the join-shortest-queue router
+(``repro.serving.router``).  ``--ckpt-dir`` serves the params of a previous
+``launch.train`` run instead of random init.  The engines live in
+:class:`repro.platform.services.ServeDriver`.
 """
 
 from __future__ import annotations
@@ -29,7 +31,10 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--engine", choices=["static", "continuous"], default="static")
     ap.add_argument("--page-size", type=int, default=16)
-    ap.add_argument("--slots", type=int, default=0, help="decode slots (0 = batch)")
+    ap.add_argument("--slots", type=int, default=0,
+                    help="decode slots per replica (0 = batch)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="continuous engine replicas behind the JSQ router")
     ap.add_argument("--vocab", type=int, default=512, help="smoke-scale vocab")
     ap.add_argument("--seq", type=int, default=512,
                     help="smoke-scale max_seq_len (match the train job's "
@@ -47,8 +52,8 @@ def main(argv=None):
             arch=args.arch, scale=args.scale, batch=args.batch,
             prompt_len=args.prompt_len, gen=args.gen,
             temperature=args.temperature, seed=args.seed, engine=args.engine,
-            page_size=args.page_size, slots=args.slots, vocab=args.vocab,
-            seq=args.seq, ckpt_dir=args.ckpt_dir,
+            page_size=args.page_size, slots=args.slots, replicas=args.replicas,
+            vocab=args.vocab, seq=args.seq, ckpt_dir=args.ckpt_dir,
         ),
         devices=args.job_devices,
         priority=args.priority,

@@ -19,9 +19,20 @@ wrappers that parse flags into a JobSpec and submit here.
 """
 
 from repro.platform import services  # noqa: F401 — registers built-in drivers
-from repro.platform.client import CANCELLED, DONE, FAILED, TERMINAL, Platform
+from repro.platform.client import (
+    CANCELLED,
+    DONE,
+    FAILED,
+    TERMINAL,
+    ExecutorHooks,
+    Platform,
+)
 from repro.platform.driver import (
+    CANCEL,
+    PREEMPT,
+    CheckpointToken,
     ContainerFailure,
+    JobInterrupted,
     ServiceDriver,
     UnknownServiceKind,
     available_kinds,
@@ -40,9 +51,14 @@ from repro.platform.services import (
 from repro.platform.spec import JobReport, JobSpec
 
 __all__ = [
+    "CANCEL",
     "CANCELLED",
+    "CheckpointToken",
     "DONE",
+    "ExecutorHooks",
     "FAILED",
+    "JobInterrupted",
+    "PREEMPT",
     "TERMINAL",
     "ContainerFailure",
     "JobReport",

@@ -4,10 +4,22 @@ The one front door to the paper's unified infrastructure.  ``submit``
 validates the spec's kind against the driver registry, uniquifies the job
 name, coerces the config payload (fail-fast), and queues the job on the
 shared :class:`~repro.core.scheduler.ResourceManager` pool.  ``wait`` drives
-an in-process executor loop — the single-host stand-in for cluster
-executors, like ``scenario.runner.FleetRunner`` — that runs scheduled jobs
-highest-priority-first and feeds completions back to the scheduler so queued
-tenants make progress.
+the executor until the named jobs are terminal.
+
+Two executors share one lifecycle state machine:
+
+* **Concurrent (default)** — every granted container gets a worker thread
+  running its driver, so co-scheduled tenants overlap on wall clock.  A
+  worker holds a *device claim* for its container: a newly scheduled job
+  whose container overlaps a still-running worker (e.g. the preemption
+  victim hasn't yielded yet) waits until that worker exits, preserving the
+  one-worker-per-device isolation story.  Drivers that accept a
+  :class:`~repro.platform.driver.CheckpointToken` are interruptible
+  *between checkpoints*: preemption and cancel stop a running driver at its
+  next ``token.checkpoint()`` instead of only between jobs.
+* **Serial** (``concurrent=False``) — the PR-3 in-process loop, retained as
+  the benchmark baseline: one scheduled job at a time, highest priority
+  first, preemption only between jobs.
 
 Job lifecycle (bridged from the ResourceManager's container states, with
 per-job events surfaced):
@@ -15,9 +27,9 @@ per-job events surfaced):
     PENDING -> RUNNING -> DONE
        ^          |   \\-> FAILED (driver error, or retries exhausted)
        |          v
-       +---- PREEMPTED          (higher-priority tenant took the devices)
-       |          |
-       |          v
+       +---- PREEMPTED          (higher-priority tenant took the devices;
+       |          |              a running driver yields at its next
+       |          v              checkpoint)
        +--    (resumed)         RUNNING again, possibly shrunk (elastic)
     any non-terminal -> CANCELLED
 
@@ -25,13 +37,21 @@ A :class:`~repro.platform.driver.ContainerFailure` raised by a driver
 quarantines the dead devices and resubmits the job (up to
 ``JobSpec.max_retries``) — the paper's node-failure story, now uniform
 across all five services.
+
+Determinism hooks: ``ExecutorHooks`` lets tests inject barriers/gates at
+worker start/exit and at every driver checkpoint, and ``clock`` swaps the
+event-timestamp clock for a virtual one — the concurrency test harness
+drives preempt-mid-run, cancel-mid-run and racing submit/complete paths
+without sleeps.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import inspect
+import threading
 import time
-from typing import Any, Optional, Sequence, Union
+from typing import Any, Callable, Optional, Sequence, Union
 
 from repro.core.scheduler import (
     JOB_DONE,
@@ -42,7 +62,15 @@ from repro.core.scheduler import (
     Job,
     ResourceManager,
 )
-from repro.platform.driver import ContainerFailure, ServiceDriver, get_driver
+from repro.platform.driver import (
+    CANCEL,
+    PREEMPT,
+    CheckpointToken,
+    ContainerFailure,
+    JobInterrupted,
+    ServiceDriver,
+    get_driver,
+)
 from repro.platform.spec import JobReport, JobSpec
 
 # platform-level job states: the scheduler's, plus CANCELLED
@@ -52,11 +80,37 @@ CANCELLED = "CANCELLED"
 TERMINAL = (DONE, FAILED, CANCELLED)
 
 
+def _noop(*args: Any) -> None:
+    return None
+
+
+@dataclasses.dataclass
+class ExecutorHooks:
+    """Executor observation points for the deterministic test harness.
+
+    All hooks run on the worker thread (never under the platform lock), so
+    blocking inside one stalls exactly that worker — which is the point:
+    tests park a driver at a checkpoint, change the world, then release it.
+    """
+
+    worker_start: Callable[[str], None] = _noop  # name — before driver.run
+    checkpoint: Callable[[str, CheckpointToken], None] = _noop  # each checkpoint()
+    worker_exit: Callable[[str, str], None] = _noop  # name, platform state
+
+
+@dataclasses.dataclass
+class _Worker:
+    token: CheckpointToken
+    devices: frozenset[int]  # claim held until the thread exits
+    thread: Optional[threading.Thread] = None
+
+
 @dataclasses.dataclass
 class _JobRecord:
     spec: JobSpec
     driver: ServiceDriver
     ctx: Any  # driver.prepare() output
+    accepts_token: bool = False
     state: str = JOB_PENDING
     last_rm_state: str = JOB_PENDING
     submitted_at: float = 0.0
@@ -65,40 +119,72 @@ class _JobRecord:
     run_time_s: float = 0.0
     devices_used: int = 0
     retries: int = 0
+    checkpoints: int = 0  # cancellation points passed (all attempts)
+    cancel_requested: bool = False
+    driver_state: dict = dataclasses.field(default_factory=dict)
     metrics: dict = dataclasses.field(default_factory=dict)
     events: list[str] = dataclasses.field(default_factory=list)
     error: Optional[str] = None
 
-    def log(self, msg: str) -> None:
-        self.events.append(f"+{time.monotonic() - self.submitted_at:.2f}s {msg}")
+    def log(self, msg: str, now: float) -> None:
+        self.events.append(f"+{now - self.submitted_at:.2f}s {msg}")
+
+
+def _wants_token(driver: ServiceDriver) -> bool:
+    try:
+        return "token" in inspect.signature(driver.run).parameters
+    except (TypeError, ValueError):  # builtins / exotic callables: assume not
+        return False
 
 
 class Platform:
     """Unified client over the shared device pool: every service is a job."""
 
-    def __init__(self, rm: Optional[ResourceManager] = None, total_devices: int = 8):
+    def __init__(
+        self,
+        rm: Optional[ResourceManager] = None,
+        total_devices: int = 8,
+        *,
+        concurrent: bool = True,
+        hooks: Optional[ExecutorHooks] = None,
+        clock: Callable[[], float] = time.monotonic,
+    ):
         self.rm = rm if rm is not None else ResourceManager(total_devices)
+        self.concurrent = concurrent
+        self.hooks = hooks if hooks is not None else ExecutorHooks()
+        self._clock = clock
         self._records: dict[str, _JobRecord] = {}
+        self._active: dict[str, _Worker] = {}
+        # guards _records/_active/record fields; workers notify on exit.
+        # lock order is always platform -> ResourceManager, never reversed.
+        self._lock = threading.RLock()
+        self._cond = threading.Condition(self._lock)
 
     # -- submission ----------------------------------------------------
     def submit(self, spec: JobSpec) -> str:
         """Validate, uniquify, queue; returns the (possibly renamed) job name."""
         driver = get_driver(spec.kind)  # raises UnknownServiceKind on typos
         ctx = driver.prepare(spec)  # bad config payloads fail here, not in queue
-        rec = _JobRecord(spec=spec, driver=driver, ctx=ctx,
-                         submitted_at=time.monotonic())
-        job = Job(
-            spec.name or spec.kind,
-            spec.kind,
-            devices=spec.devices,
-            min_devices=spec.resolved_min_devices(),
-            priority=spec.priority,
-        )
-        name = self.rm.submit(job)  # auto-uniquifies duplicate names
-        self._records[name] = rec
-        rec.log(f"submitted kind={spec.kind} want={spec.devices} "
-                f"priority={spec.priority}")
-        self._observe()
+        with self._cond:
+            rec = _JobRecord(
+                spec=spec, driver=driver, ctx=ctx,
+                accepts_token=_wants_token(driver),
+                submitted_at=self._clock(),
+            )
+            job = Job(
+                spec.name or spec.kind,
+                spec.kind,
+                devices=spec.devices,
+                min_devices=spec.resolved_min_devices(),
+                priority=spec.priority,
+            )
+            name = self.rm.submit(job)  # auto-uniquifies duplicate names
+            self._records[name] = rec
+            rec.log(f"submitted kind={spec.kind} want={spec.devices} "
+                    f"priority={spec.priority}", self._clock())
+            # the submit may have preempted running tenants: flag their tokens
+            self._observe()
+            self._cond.notify_all()
         return name
 
     def submit_batch(self, specs: Sequence[JobSpec]) -> list[str]:
@@ -107,7 +193,12 @@ class Platform:
 
     # -- lifecycle bridging --------------------------------------------
     def _observe(self) -> None:
-        """Diff ResourceManager job states into per-job lifecycle events."""
+        """Diff ResourceManager job states into per-job lifecycle events.
+
+        Must hold the platform lock.  A RUNNING->PREEMPTED transition with a
+        live worker also requests a cooperative stop, so the driver yields at
+        its next checkpoint.
+        """
         for name, rec in self._records.items():
             if rec.state in TERMINAL:
                 continue
@@ -115,122 +206,364 @@ class Platform:
             prev, cur = rec.last_rm_state, job.state
             if cur == prev:
                 continue
+            now = self._clock()
             if cur == JOB_RUNNING:
                 c = job.container
                 verb = "resumed" if prev == JOB_PREEMPTED else "scheduled"
-                rec.log(f"{verb} on container {c.cid} ({c.size} devices)")
+                rec.log(f"{verb} on container {c.cid} ({c.size} devices)", now)
             elif cur == JOB_PREEMPTED:
-                rec.log("preempted (devices reclaimed by higher priority)")
+                rec.log("preempted (devices reclaimed by higher priority)", now)
+                worker = self._active.get(name)
+                if worker is not None:
+                    worker.token.request_stop(PREEMPT)
             elif cur == JOB_PENDING:
-                rec.log("requeued")
+                rec.log("requeued", now)
             rec.last_rm_state = cur
             rec.state = cur
 
-    # -- execution -----------------------------------------------------
+    # -- shared completion paths ---------------------------------------
+    def _finish(self, name: str, state: str, error: Optional[str] = None) -> None:
+        """Terminal transition (platform lock held)."""
+        rec = self._records[name]
+        now = self._clock()
+        rec.state = state
+        rec.error = error
+        rec.finished_at = now
+        rec.log(state.lower() if not error else f"failed: {error}", now)
+        # frees the container, reschedules the queue; co-tenants sharing the
+        # ResourceManager see the real outcome, not a blanket "done"
+        self.rm.complete(name, state=JOB_FAILED if state == FAILED else JOB_DONE)
+        # rescheduling can preempt lower-priority tenants mid-run: flag them
+        self._observe()
+        self._cond.notify_all()
+
+    def _handle_container_failure(
+        self, name: str, container, e: ContainerFailure
+    ) -> None:
+        """ContainerFailure from a driver (platform lock held).  ``container``
+        is the one the driver actually ran on — the job may have been
+        preempted (and even rescheduled onto a fresh container) since."""
+        rec = self._records[name]
+        rec.log(f"container failure: {e}", self._clock())
+        if rec.state in TERMINAL:
+            # cancelled while dying: no retry, but the dead devices still
+            # must leave the pool
+            self.rm.quarantine_devices(container.device_ids[: e.dead_devices])
+            return
+        if rec.retries >= rec.spec.max_retries:
+            # abandoned, but its dead devices still leave the pool
+            self.rm.quarantine_devices(container.device_ids[: e.dead_devices])
+            self._finish(name, FAILED, error=str(e))
+            return
+        rec.retries += 1
+        rec.log(f"resubmitting (retry {rec.retries}/{rec.spec.max_retries})",
+                self._clock())
+        job = self.rm.jobs[name]
+        if job.container is container:
+            self.rm.fail_container(name, dead_devices=e.dead_devices)
+        else:
+            # preempted while dying (maybe already rescheduled elsewhere):
+            # quarantine the devices of the container that actually died,
+            # not whatever the job holds now
+            self.rm.quarantine_devices(container.device_ids[: e.dead_devices])
+        # fail_container reschedules synchronously, so the requeued job may
+        # already hold a fresh container — _observe would see the stale
+        # RUNNING->RUNNING as no transition; log it here
+        job = self.rm.jobs[name]
+        rec.state = rec.last_rm_state = job.state
+        if job.state == JOB_RUNNING:
+            rec.log(f"rescheduled on container {job.container.cid} "
+                    f"({job.container.size} devices)", self._clock())
+        self._observe()
+        self._cond.notify_all()
+
+    # -- concurrent executor -------------------------------------------
+    def _dispatch(self) -> int:
+        """Spawn workers for scheduled jobs whose devices are unclaimed.
+
+        Platform lock held.  Returns how many workers were started.  A job
+        whose container overlaps a live worker's claim (a preemption victim
+        that hasn't reached a checkpoint yet) is skipped until that worker
+        exits — one worker per device at all times.
+        """
+        claimed: set[int] = set()
+        for w in self._active.values():
+            claimed |= w.devices
+        runnable = [
+            name
+            for name, rec in self._records.items()
+            if rec.state not in TERMINAL
+            and name not in self._active
+            and self.rm.jobs[name].state == JOB_RUNNING
+            and self.rm.jobs[name].container is not None
+        ]
+        runnable.sort(
+            key=lambda n: (-self.rm.jobs[n].priority, self.rm.jobs[n].submitted_at)
+        )
+        started = 0
+        for name in runnable:
+            rec = self._records[name]
+            container = self.rm.jobs[name].container
+            devices = frozenset(container.device_ids)
+            if devices & claimed:
+                continue
+            token = CheckpointToken(
+                name, state=rec.driver_state, on_checkpoint=self.hooks.checkpoint
+            )
+            if rec.cancel_requested:
+                token.request_stop(CANCEL)
+            rec.devices_used = container.size
+            if rec.first_run_at is None:
+                rec.first_run_at = self._clock()
+            worker = _Worker(token=token, devices=devices)
+            self._active[name] = worker
+            worker.thread = threading.Thread(
+                target=self._worker_main,
+                args=(name, rec, container, token),
+                name=f"platform-{name}",
+                daemon=True,
+            )
+            worker.thread.start()
+            claimed |= devices
+            started += 1
+        return started
+
+    def _execute(
+        self, name: str, rec: _JobRecord, container, token: CheckpointToken
+    ) -> None:
+        """Run the driver once and settle the outcome — the shared body of
+        both executors (a worker thread, or the serial step).  Settling is
+        terminal-state-aware (defense in depth): a job that somehow reached
+        a terminal state while the driver ran keeps it instead of being
+        overwritten."""
+        t0 = time.perf_counter()
+        try:
+            if rec.accepts_token:
+                metrics = rec.driver.run(container, rec.ctx, token=token)
+            else:
+                metrics = rec.driver.run(container, rec.ctx)
+        except JobInterrupted as e:
+            with self._cond:
+                rec.run_time_s += time.perf_counter() - t0
+                rec.checkpoints += token.checkpoints
+                if rec.state in TERMINAL:
+                    pass  # already settled (serial immediate cancel)
+                elif e.reason == CANCEL or rec.cancel_requested:
+                    rec.log(f"cancelled at checkpoint {token.checkpoints}",
+                            self._clock())
+                    self._finish(name, CANCELLED)
+                else:
+                    rec.log(
+                        f"yielded at checkpoint {token.checkpoints} "
+                        "(preempted mid-run)", self._clock())
+                    # the job stays PREEMPTED/RUNNING in the scheduler and is
+                    # redispatched once devices (and any worker claim) free
+                    self._observe()
+        except ContainerFailure as e:
+            with self._cond:
+                rec.run_time_s += time.perf_counter() - t0
+                rec.checkpoints += token.checkpoints
+                self._handle_container_failure(name, container, e)
+        except Exception as e:  # driver bug / bad workload: job fails, pool survives
+            with self._cond:
+                rec.run_time_s += time.perf_counter() - t0
+                rec.checkpoints += token.checkpoints
+                if rec.state not in TERMINAL:
+                    self._finish(name, FAILED, error=f"{type(e).__name__}: {e}")
+        else:
+            with self._cond:
+                rec.run_time_s += time.perf_counter() - t0
+                rec.checkpoints += token.checkpoints
+                rec.metrics = metrics or {}
+                if rec.state in TERMINAL:
+                    pass  # cancelled mid-run in serial mode; keep its state
+                elif rec.cancel_requested:
+                    # the driver outran the cancel; record the withdrawal but
+                    # keep whatever it computed
+                    rec.log("cancel requested; run had already completed",
+                            self._clock())
+                    self._finish(name, CANCELLED)
+                else:
+                    self._finish(name, DONE)
+
+    def _worker_main(
+        self, name: str, rec: _JobRecord, container, token: CheckpointToken
+    ) -> None:
+        """Thread body: run the driver once, feed the outcome back."""
+        self.hooks.worker_start(name)
+        try:
+            self._execute(name, rec, container, token)
+        finally:
+            with self._cond:
+                self._active.pop(name, None)
+                self._cond.notify_all()
+            self.hooks.worker_exit(name, rec.state)
+
+    # -- serial executor (benchmark baseline) --------------------------
     def _runnable(self) -> list[str]:
         return [
             name
             for name, rec in self._records.items()
-            if rec.state not in TERMINAL and self.rm.jobs[name].state == JOB_RUNNING
+            if rec.state not in TERMINAL
+            and name not in self._active  # in-flight on another thread
+            and self.rm.jobs[name].state == JOB_RUNNING
         ]
 
     def step(self) -> bool:
-        """Execute the highest-priority scheduled job in-process; True if any ran."""
-        self._observe()
-        runnable = self._runnable()
-        if not runnable:
-            return False
-        name = min(
-            runnable,
-            key=lambda n: (-self.rm.jobs[n].priority, self.rm.jobs[n].submitted_at),
-        )
-        rec = self._records[name]
-        job = self.rm.jobs[name]
-        rec.devices_used = job.container.size
-        if rec.first_run_at is None:
-            rec.first_run_at = time.monotonic()
-        t0 = time.perf_counter()
+        """Serial mode: execute the highest-priority scheduled job in-process
+        (to completion); True if any ran."""
+        with self._cond:
+            self._observe()
+            runnable = self._runnable()
+            if not runnable:
+                return False
+            name = min(
+                runnable,
+                key=lambda n: (-self.rm.jobs[n].priority,
+                               self.rm.jobs[n].submitted_at),
+            )
+            rec = self._records[name]
+            job = self.rm.jobs[name]
+            container = job.container
+            rec.devices_used = container.size
+            if rec.first_run_at is None:
+                rec.first_run_at = self._clock()
+            token = CheckpointToken(
+                name, state=rec.driver_state, on_checkpoint=self.hooks.checkpoint
+            )
+            # the in-flight claim: a second thread stepping the same platform
+            # must not pick this job up, and cancel() goes cooperative
+            self._active[name] = _Worker(
+                token=token, devices=frozenset(container.device_ids)
+            )
         try:
-            metrics = rec.driver.run(job.container, rec.ctx)
-        except ContainerFailure as e:
-            rec.run_time_s += time.perf_counter() - t0
-            rec.log(f"container failure: {e}")
-            if rec.retries >= rec.spec.max_retries:
-                # abandoned, but its dead devices still leave the pool
-                self.rm.quarantine_devices(job.container.device_ids[: e.dead_devices])
-                self._finish(name, FAILED, error=str(e))
-            else:
-                rec.retries += 1
-                rec.log(f"resubmitting (retry {rec.retries}/{rec.spec.max_retries})")
-                self.rm.fail_container(name, dead_devices=e.dead_devices)
-                # fail_container reschedules synchronously, so the requeued
-                # job may already hold a fresh container — _observe would see
-                # RUNNING->RUNNING and drop the transition; log it here
-                job = self.rm.jobs[name]
-                rec.state = rec.last_rm_state = job.state
-                if job.state == JOB_RUNNING:
-                    rec.log(f"rescheduled on container {job.container.cid} "
-                            f"({job.container.size} devices)")
-        except Exception as e:  # driver bug / bad workload: job fails, pool survives
-            rec.run_time_s += time.perf_counter() - t0
-            self._finish(name, FAILED, error=f"{type(e).__name__}: {e}")
-        else:
-            rec.run_time_s += time.perf_counter() - t0
-            rec.metrics = metrics or {}
-            self._finish(name, DONE)
-        self._observe()
+            # the driver runs outside the lock; serial mode never preempts
+            # mid-run, and a cross-thread cancel flags the token
+            self._execute(name, rec, container, token)
+        finally:
+            with self._cond:
+                self._active.pop(name, None)
+                self._observe()
+                self._cond.notify_all()
         return True
-
-    def _finish(self, name: str, state: str, error: Optional[str] = None) -> None:
-        rec = self._records[name]
-        rec.state = state
-        rec.error = error
-        rec.finished_at = time.monotonic()
-        rec.log(state.lower() if not error else f"failed: {error}")
-        # frees the container, reschedules the queue; co-tenants sharing the
-        # ResourceManager see the real outcome, not a blanket "done"
-        self.rm.complete(name, state=JOB_FAILED if state == FAILED else JOB_DONE)
 
     # -- client surface ------------------------------------------------
     def status(self, name: str) -> str:
-        self._observe()
-        return self._records[name].state
+        with self._cond:
+            self._observe()
+            return self._records[name].state
 
     def events(self, name: str) -> list[str]:
-        self._observe()
-        return list(self._records[name].events)
+        with self._cond:
+            self._observe()
+            return list(self._records[name].events)
+
+    def active_workers(self) -> list[str]:
+        """Names of jobs a worker thread is currently executing."""
+        with self._cond:
+            return sorted(self._active)
 
     def cancel(self, name: str) -> bool:
-        """Withdraw a job (queued, preempted, or scheduled-but-not-started)."""
-        self._observe()
-        rec = self._records[name]
-        if rec.state in TERMINAL:
-            return False
-        rec.state = CANCELLED
-        rec.finished_at = time.monotonic()
-        rec.log("cancelled")
-        self.rm.complete(name)
-        return True
+        """Withdraw a job.  Queued/preempted/unstarted jobs cancel
+        immediately; a job mid-run on a worker stops at its next driver
+        checkpoint (cooperative), reaching CANCELLED when the worker yields.
+        """
+        with self._cond:
+            self._observe()
+            rec = self._records[name]
+            if rec.state in TERMINAL or rec.cancel_requested:
+                return False
+            now = self._clock()
+            worker = self._active.get(name)
+            if worker is not None:
+                rec.cancel_requested = True
+                worker.token.request_stop(CANCEL)
+                rec.log("cancel requested (stops at next checkpoint)", now)
+                self._cond.notify_all()
+                return True
+            rec.state = CANCELLED
+            rec.finished_at = now
+            rec.log("cancelled", now)
+            self.rm.complete(name)
+            self._observe()
+            self._cond.notify_all()
+            return True
 
     def wait(
         self,
         names: Union[str, Sequence[str], None] = None,
         timeout_s: float = 600.0,
     ) -> Union[JobReport, dict[str, JobReport]]:
-        """Drive the executor loop until the named jobs (default: all) reach a
-        terminal state; returns their JobReports (one, or name->report)."""
+        """Drive the executor until the named jobs (default: all submitted so
+        far) reach a terminal state; returns their JobReports (one, or
+        name->report).  ``timeout_s`` bounds *stall* detection (pool held by
+        foreign tenants), on the real clock even under an injected virtual
+        clock."""
         single = isinstance(names, str)
         if single:
             targets = [names]
+        elif names is None:
+            with self._cond:  # snapshot races concurrent submit() otherwise
+                targets = list(self._records)
         else:
-            targets = list(self._records) if names is None else list(names)
+            targets = list(names)
+        if self.concurrent:
+            self._wait_concurrent(targets, timeout_s)
+        else:
+            self._wait_serial(targets, timeout_s)
+        if single:
+            return self.results(targets[0])
+        return {n: self.results(n) for n in targets}
+
+    def _stall(self, targets: Sequence[str], foreign: Sequence[str]) -> RuntimeError:
+        stuck = [n for n in targets if self._records[n].state not in TERMINAL]
+        return RuntimeError(
+            f"platform stalled: {stuck} cannot be scheduled "
+            f"(pool={self.rm.total}, free={len(self.rm.free)}, "
+            f"quarantined={len(self.rm.quarantined)}"
+            + (f", held by {foreign})" if foreign else ")")
+        )
+
+    def _wait_concurrent(self, targets: Sequence[str], timeout_s: float) -> None:
+        t0 = time.monotonic()
+        with self._cond:
+            while True:
+                self._observe()
+                # a finishing worker flips the state terminal just before it
+                # leaves _active; wait for both so callers returning from
+                # wait() never see their jobs' worker threads still live
+                if all(self._records[n].state in TERMINAL for n in targets) \
+                        and not any(n in self._active for n in targets):
+                    return
+                if self._dispatch():
+                    continue
+                if self._active:
+                    # workers run; their exit (or a submit) notifies.  The
+                    # timeout is a safety net for foreign-tenant completions
+                    # the condition never hears about.
+                    self._cond.wait(timeout=0.05)
+                    continue
+                foreign = self.rm.running_jobs(exclude=self._records)
+                if foreign and time.monotonic() - t0 < timeout_s:
+                    self._cond.wait(timeout=0.01)
+                    continue
+                raise self._stall(targets, foreign)
+
+    def _wait_serial(self, targets: Sequence[str], timeout_s: float) -> None:
         t0 = time.monotonic()
         while True:
-            self._observe()
-            if all(self._records[n].state in TERMINAL for n in targets):
-                break
+            with self._cond:
+                self._observe()
+                if all(self._records[n].state in TERMINAL for n in targets):
+                    return
             if self.step():
                 continue
+            with self._cond:
+                if self._active:
+                    # another thread is mid-step on this platform: its job
+                    # wasn't runnable for us, so wait for it to settle
+                    self._cond.wait(timeout=0.05)
+                    continue
             # nothing of ours is scheduled: either a foreign tenant (e.g. a
             # FleetRunner on the same pool) holds the devices, or the queue
             # is genuinely stuck (job can never fit / pool quarantined)
@@ -238,16 +571,7 @@ class Platform:
             if foreign and time.monotonic() - t0 < timeout_s:
                 time.sleep(0.01)
                 continue
-            stuck = [n for n in targets if self._records[n].state not in TERMINAL]
-            raise RuntimeError(
-                f"platform stalled: {stuck} cannot be scheduled "
-                f"(pool={self.rm.total}, free={len(self.rm.free)}, "
-                f"quarantined={len(self.rm.quarantined)}"
-                + (f", held by {foreign})" if foreign else ")")
-            )
-        if single:
-            return self.results(targets[0])
-        return {n: self.results(n) for n in targets}
+            raise self._stall(targets, foreign)
 
     def run_batch(
         self, specs: Sequence[JobSpec], timeout_s: float = 600.0
@@ -260,25 +584,27 @@ class Platform:
 
     def results(self, name: str) -> JobReport:
         """JobReport for a job (a live snapshot if it isn't terminal yet)."""
-        self._observe()
-        rec = self._records[name]
-        job = self.rm.jobs[name]
-        now = time.monotonic()
-        end = rec.finished_at if rec.finished_at is not None else now
-        # a job that never executed queued until it finished (e.g. cancelled)
-        first_run = rec.first_run_at if rec.first_run_at is not None else end
-        return JobReport(
-            name=name,
-            kind=rec.spec.kind,
-            state=rec.state,
-            devices_used=rec.devices_used,
-            queue_time_s=max(first_run - rec.submitted_at, 0.0),
-            run_time_s=rec.run_time_s,
-            wall_time_s=max(end - rec.submitted_at, 0.0),
-            preemptions=job.preemptions,
-            resumes=job.resumes,
-            retries=rec.retries,
-            metrics=dict(rec.metrics),
-            events=list(rec.events),
-            error=rec.error,
-        )
+        with self._cond:
+            self._observe()
+            rec = self._records[name]
+            job = self.rm.jobs[name]
+            now = self._clock()
+            end = rec.finished_at if rec.finished_at is not None else now
+            # a job that never executed queued until it finished (e.g. cancelled)
+            first_run = rec.first_run_at if rec.first_run_at is not None else end
+            return JobReport(
+                name=name,
+                kind=rec.spec.kind,
+                state=rec.state,
+                devices_used=rec.devices_used,
+                queue_time_s=max(first_run - rec.submitted_at, 0.0),
+                run_time_s=rec.run_time_s,
+                wall_time_s=max(end - rec.submitted_at, 0.0),
+                preemptions=job.preemptions,
+                resumes=job.resumes,
+                retries=rec.retries,
+                checkpoints=rec.checkpoints,
+                metrics=dict(rec.metrics),
+                events=list(rec.events),
+                error=rec.error,
+            )

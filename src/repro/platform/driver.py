@@ -8,16 +8,87 @@ container and returns the service-metrics dict that lands in
 ``JobReport.metrics``.  ``Job.kind`` strings are validated against this
 registry at submit time, so a typo'd kind is an immediate error instead of a
 silently-unrunnable queue entry.
+
+Cooperative interruption: a driver that declares a ``token`` parameter on
+``run`` receives a :class:`CheckpointToken` from the executor.  Calling
+``token.checkpoint()`` between units of work (train steps, scenario chunks,
+serve batches) makes that point a *cancellation point*: when the platform has
+preempted the job's container or the client cancelled the job, the call
+raises :class:`JobInterrupted` and the worker yields the devices.
+``token.state`` is a dict persisted across the job's attempts, so a driver
+can stash resume progress there (the train driver instead persists through
+its checkpoint files).
 """
 
 from __future__ import annotations
 
 import difflib
-from typing import Any, Optional, Protocol, runtime_checkable
+import threading
+from typing import Any, Callable, Optional, Protocol, runtime_checkable
 
 from repro.core.scheduler import Container
 
 from repro.platform.spec import JobSpec
+
+# interruption reasons carried by CheckpointToken / JobInterrupted
+PREEMPT = "PREEMPT"
+CANCEL = "CANCEL"
+
+
+class JobInterrupted(Exception):
+    """Raised *inside a driver* by ``CheckpointToken.checkpoint()`` when the
+    executor wants the devices back (``reason`` is PREEMPT or CANCEL).  The
+    worker catches it; drivers only see it if they want a try/finally."""
+
+    def __init__(self, reason: str):
+        super().__init__(reason)
+        self.reason = reason
+
+
+class CheckpointToken:
+    """Cooperative cancellation point handed to interruptible drivers.
+
+    * ``checkpoint(save=None)`` — call between units of work.  If a stop has
+      been requested, runs ``save`` (a last-chance persistence hook, e.g.
+      "write the train checkpoint") and raises :class:`JobInterrupted`.
+    * ``should_stop()`` — poll without raising (to skip starting a unit).
+    * ``state`` — dict persisted across the job's run attempts; drivers
+      store resume progress here (completed chunks, drained requests, ...).
+
+    ``request_stop`` is called by the executor (from another thread); the
+    flag is an event so drivers never miss a stop that raced a checkpoint.
+    """
+
+    def __init__(
+        self,
+        job_name: str,
+        state: Optional[dict] = None,
+        on_checkpoint: Optional[Callable[[str, "CheckpointToken"], None]] = None,
+    ):
+        self.job_name = job_name
+        self.state = state if state is not None else {}
+        self.checkpoints = 0  # cancellation points passed this attempt
+        self._on_checkpoint = on_checkpoint
+        self._stop = threading.Event()
+        self.reason: Optional[str] = None
+
+    def request_stop(self, reason: str) -> None:
+        self.reason = reason  # write before set(): checkpoint reads after wait
+        self._stop.set()
+
+    def should_stop(self) -> bool:
+        return self._stop.is_set()
+
+    def checkpoint(self, save: Optional[Callable[[], None]] = None) -> None:
+        self.checkpoints += 1
+        if self._on_checkpoint is not None:
+            # test harness hook: barriers/gates injected here make preempt-
+            # mid-run interleavings deterministic (no sleeps)
+            self._on_checkpoint(self.job_name, self)
+        if self._stop.is_set():
+            if save is not None:
+                save()
+            raise JobInterrupted(self.reason or CANCEL)
 
 
 class UnknownServiceKind(ValueError):

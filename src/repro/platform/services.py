@@ -93,14 +93,19 @@ class TrainJobConfig:
 
 @register_driver
 class TrainDriver:
-    """End-to-end LM training with crash-restart fault tolerance (paper §4)."""
+    """End-to-end LM training with crash-restart fault tolerance (paper §4).
+
+    Interruptible between steps: on preemption the driver writes a durable
+    checkpoint before yielding, so the resumed attempt restores from exactly
+    the step it stopped at — the same path crash-restart already exercises.
+    """
 
     kind = "train"
 
     def prepare(self, spec: JobSpec) -> TrainJobConfig:
         return coerce_config(spec.config, TrainJobConfig)
 
-    def run(self, container: Container, cfg: TrainJobConfig) -> dict:
+    def run(self, container: Container, cfg: TrainJobConfig, token=None) -> dict:
         import jax
         import jax.numpy as jnp
 
@@ -149,29 +154,40 @@ class TrainDriver:
             tokens_done = 0
             step_i = start_step
             last = {}
-            for nb in loader.batches(epochs=1_000_000):
-                if step_i >= cfg.steps:
-                    break
-                batch = {k: jnp.asarray(v) for k, v in nb.items()}
-                state, metrics = step_fn(state, batch)
-                step_i += 1
-                tokens_done += cfg.batch * cfg.seq
-                if step_i % cfg.log_every == 0 or step_i == cfg.steps:
-                    last = {k: float(v) for k, v in jax.device_get(metrics).items()}
-                    dt = time.perf_counter() - t0
-                    print(
-                        f"[train] step {step_i:5d} loss={last['loss']:.4f} "
-                        f"acc={last['accuracy']:.3f} gnorm={last['grad_norm']:.2f} "
-                        f"tok/s={tokens_done/max(dt,1e-9):,.0f}"
-                    )
-                if step_i % cfg.ckpt_every == 0 or step_i == cfg.steps:
-                    ckpt.save(jax.device_get(state), step_i, durable=True)
-                if cfg.fail_at == step_i:
-                    print(f"[train] INJECTED FAILURE at step {step_i}", flush=True)
-                    os._exit(42)
-            loader.close()
-            store.flush()
-            store.close()
+            try:
+                for nb in loader.batches(epochs=1_000_000):
+                    if step_i >= cfg.steps:
+                        break
+                    if token is not None:
+                        # cancellation point between steps; a preempt saves a
+                        # durable checkpoint first so the resume loses no work
+                        token.checkpoint(save=lambda: ckpt.save(
+                            jax.device_get(state), step_i, durable=True
+                        ))
+                    batch = {k: jnp.asarray(v) for k, v in nb.items()}
+                    state, metrics = step_fn(state, batch)
+                    step_i += 1
+                    tokens_done += cfg.batch * cfg.seq
+                    if step_i % cfg.log_every == 0 or step_i == cfg.steps:
+                        last = {k: float(v)
+                                for k, v in jax.device_get(metrics).items()}
+                        dt = time.perf_counter() - t0
+                        print(
+                            f"[train] step {step_i:5d} loss={last['loss']:.4f} "
+                            f"acc={last['accuracy']:.3f} "
+                            f"gnorm={last['grad_norm']:.2f} "
+                            f"tok/s={tokens_done/max(dt,1e-9):,.0f}"
+                        )
+                    if step_i % cfg.ckpt_every == 0 or step_i == cfg.steps:
+                        ckpt.save(jax.device_get(state), step_i, durable=True)
+                    if cfg.fail_at == step_i:
+                        print(f"[train] INJECTED FAILURE at step {step_i}",
+                              flush=True)
+                        os._exit(42)
+            finally:
+                loader.close()
+                store.flush()
+                store.close()
             dt = time.perf_counter() - t0
             print(
                 f"[train] done at step {step_i}; "
@@ -273,6 +289,10 @@ class ScenarioJobConfig:
     # seed-deterministic batch, so the union over shards is the full sweep
     shard_index: int = 0
     num_shards: int = 1
+    # checkpoint granularity: the shard rolls out in `chunks` scenario
+    # slices with a cancellation point between them, and completed chunks
+    # survive preemption (scenarios are independent, so chunked == whole)
+    chunks: int = 1
 
 
 @register_driver
@@ -287,13 +307,15 @@ class ScenarioDriver:
             raise ValueError(
                 f"shard_index {cfg.shard_index} outside num_shards {cfg.num_shards}"
             )
+        if cfg.chunks < 1:
+            raise ValueError(f"chunks must be >= 1, got {cfg.chunks}")
         if cfg.policy not in scenario_policies():
             raise ValueError(
                 f"unknown policy {cfg.policy!r}; known: {sorted(scenario_policies())}"
             )
         return cfg
 
-    def run(self, container: Container, cfg: ScenarioJobConfig) -> dict:
+    def run(self, container: Container, cfg: ScenarioJobConfig, token=None) -> dict:
         import jax
 
         from repro.scenario.runner import slice_batch
@@ -308,19 +330,47 @@ class ScenarioDriver:
         bounds = np.linspace(0, S, cfg.num_shards + 1, dtype=int)
         lo, hi = int(bounds[cfg.shard_index]), int(bounds[cfg.shard_index + 1])
         shard = slice_batch(batch, lo, hi)
+        n = hi - lo
+        # completed chunks persist across preemptions in the token state;
+        # a resumed attempt rolls out only what is missing
+        state = token.state if token is not None else {}
+        done: dict = state.setdefault("chunks", {})
+        chunks = max(1, min(cfg.chunks, max(n, 1)))
+        cb = np.linspace(0, n, chunks + 1, dtype=int)
         t0 = time.perf_counter()
-        m, _ = rollout(
-            shard, scenario_policies()[cfg.policy],
-            steps=cfg.steps, dt=cfg.dt, use_pallas=cfg.use_pallas,
+        try:
+            for ci in range(chunks):
+                if ci in done:
+                    continue
+                if token is not None:
+                    token.checkpoint()  # cancellation point between chunks
+                clo, chi = int(cb[ci]), int(cb[ci + 1])
+                m, _ = rollout(
+                    slice_batch(shard, clo, chi),
+                    scenario_policies()[cfg.policy],
+                    steps=cfg.steps, dt=cfg.dt, use_pallas=cfg.use_pallas,
+                )
+                done[ci] = jax.device_get(jax.block_until_ready(m))
+        finally:
+            # interrupted attempts count too, or the resumed attempt's
+            # scenarios_per_sec would be inflated
+            state["wall_s"] = (
+                state.get("wall_s", 0.0) + time.perf_counter() - t0
+            )
+        wall = state["wall_s"]
+        parts = [done[ci] for ci in range(chunks)]
+        m = (
+            parts[0]
+            if len(parts) == 1
+            else jax.tree.map(lambda *xs: np.concatenate(xs), *parts)
         )
-        m = jax.block_until_ready(m)
-        wall = time.perf_counter() - t0
         collided = np.asarray(m.collided).astype(bool)
         return {
-            "scenarios": hi - lo,
+            "scenarios": n,
             "steps": cfg.steps,
+            "chunks": chunks,
             "collision_rate": float(collided.mean()) if hi > lo else 0.0,
-            "scenarios_per_sec": (hi - lo) / max(wall, 1e-9),
+            "scenarios_per_sec": n / max(wall, 1e-9),
             "shard": f"{cfg.shard_index}/{cfg.num_shards}",
             # raw per-scenario metrics for cross-shard aggregation
             "_family_id": np.asarray(batch.family_id[lo:hi]),
@@ -418,6 +468,24 @@ class MapGenDriver:
 # ---------------------------------------------------------------------------
 
 
+def _merge_router_stats(prev: Optional[dict], cur: dict) -> dict:
+    """Accumulate per-replica routing stats across a serve job's preempted/
+    resumed attempts (each attempt builds a fresh router); liveness fields
+    reflect the latest attempt."""
+    if not prev:
+        return cur
+    merged = dict(cur)
+    merged["routed"] = [a + b for a, b in zip(prev["routed"], cur["routed"])]
+    merged["routed_tokens"] = [
+        a + b for a, b in zip(prev["routed_tokens"], cur["routed_tokens"])
+    ]
+    merged["rerouted"] = prev["rerouted"] + cur["rerouted"]
+    merged["replica_failures"] = (
+        prev["replica_failures"] + cur["replica_failures"]
+    )
+    return merged
+
+
 @dataclasses.dataclass
 class ServeJobConfig:
     arch: str = "qwen2-0.5b"
@@ -429,7 +497,8 @@ class ServeJobConfig:
     seed: int = 0
     engine: str = "static"  # static | continuous
     page_size: int = 16
-    slots: int = 0  # continuous decode slots (0 = batch)
+    slots: int = 0  # continuous decode slots per replica (0 = batch)
+    replicas: int = 1  # continuous engine replicas behind a JSQ router
     vocab: int = 512  # smoke-scale vocab (must match a ckpt's train job)
     seq: int = 512  # smoke-scale max_seq_len (match the train job's --seq
     #                 when restoring from ckpt_dir; params depend on it)
@@ -438,7 +507,15 @@ class ServeJobConfig:
 
 @register_driver
 class ServeDriver:
-    """Static-batch or continuous-batching LM serving (paper §4.3)."""
+    """Static-batch or continuous-batching LM serving (paper §4.3).
+
+    ``replicas > 1`` (continuous only) fans the tenant out over N engine
+    replicas sharing the params, fronted by the join-shortest-queue
+    :class:`~repro.serving.router.ServeRouter`.  Interruptible between
+    engine steps: a preempt drains in-flight sequences into resumable
+    continuation requests stashed in the token state, so the resumed
+    attempt finishes them instead of starting over.
+    """
 
     kind = "serve"
 
@@ -446,6 +523,10 @@ class ServeDriver:
         cfg = coerce_config(spec.config, ServeJobConfig)
         if cfg.engine not in ("static", "continuous"):
             raise ValueError(f"engine must be static|continuous, got {cfg.engine!r}")
+        if cfg.replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {cfg.replicas}")
+        if cfg.replicas > 1 and cfg.engine != "continuous":
+            raise ValueError("replicas > 1 requires engine='continuous'")
         return cfg
 
     def _params(self, cfg: ServeJobConfig, mcfg):
@@ -480,7 +561,7 @@ class ServeDriver:
         print(f"[serve] restored params from checkpoint step {step}")
         return state["params"]
 
-    def run(self, container: Container, cfg: ServeJobConfig) -> dict:
+    def run(self, container: Container, cfg: ServeJobConfig, token=None) -> dict:
         import jax
         import jax.numpy as jnp
 
@@ -508,32 +589,73 @@ class ServeDriver:
 
         if cfg.engine == "continuous":
             from repro.serving.continuous import ContinuousBatchingEngine
+            from repro.serving.router import ServeRouter
             from repro.serving.scheduler import Request, token_latencies
 
-            engine = ContinuousBatchingEngine(
-                mcfg, params,
-                num_slots=cfg.slots or B,
-                page_size=cfg.page_size,
-                max_len=S + cfg.gen,
-                seed=cfg.seed,
-            )
-            reqs = [
-                Request(
-                    rid=i, tokens=np.asarray(prompt["tokens"][i]),
-                    max_new_tokens=cfg.gen, temperature=cfg.temperature,
+            engines = [
+                ContinuousBatchingEngine(
+                    mcfg, params,
+                    num_slots=cfg.slots or B,
+                    page_size=cfg.page_size,
+                    max_len=S + cfg.gen,
+                    seed=cfg.seed + r,
                 )
-                for i in range(B)
+                for r in range(cfg.replicas)
             ]
+            router = ServeRouter(engines)
+            # a preempted attempt left its unfinished work as continuation
+            # requests in the token state; completed outputs carry over too
+            state = token.state if token is not None else {}
+            outs = state.setdefault("outs", [])
+            reqs = state.pop("cont", None)
+            if reqs is None:
+                # fresh start or a ContainerFailure retry (which drains
+                # nothing): re-serve only the requests not already finished
+                done_rids = {o.rid for o in outs}
+                reqs = [
+                    Request(
+                        rid=i, tokens=np.asarray(prompt["tokens"][i]),
+                        max_new_tokens=cfg.gen, temperature=cfg.temperature,
+                    )
+                    for i in range(B)
+                    if i not in done_rids
+                ]
+            for r in reqs:
+                router.submit(r)
+            # the trace clock continues from prior attempts so carried
+            # token_times stay monotonic across a preempt/resume
+            base = state.get("wall_s", 0.0)
             t0 = time.perf_counter()
-            outs = engine.run(reqs)
-            dt = time.perf_counter() - t0
+
+            def preempt_save():
+                state["cont"] = router.drain_continuations()
+
+            try:
+                while router.has_work():
+                    if token is not None:
+                        # cancellation point between engine steps; a preempt
+                        # drains in-flight sequences into resumable requests
+                        token.checkpoint(save=preempt_save)
+                    outs.extend(router.step(base + time.perf_counter() - t0))
+            finally:
+                # interrupted attempts count toward wall time and routing
+                # stats too, or resumed jobs would report inflated rates
+                # and only their final attempt's routing
+                state["wall_s"] = (
+                    state.get("wall_s", 0.0) + time.perf_counter() - t0
+                )
+                state["router_stats"] = _merge_router_stats(
+                    state.get("router_stats"), router.stats()
+                )
+            dt = state["wall_s"]
             toks = sum(len(o.tokens) for o in outs)
             lat = token_latencies(outs)
             p50, p99 = np.percentile(lat, 50) * 1e3, np.percentile(lat, 99) * 1e3
             print(
                 f"[serve/continuous] {toks} tokens in {dt:.2f}s "
                 f"({toks/dt:,.1f} tok/s) p50/p99 token latency "
-                f"{p50:.1f}/{p99:.1f} ms"
+                f"{p50:.1f}/{p99:.1f} ms replicas={cfg.replicas} "
+                f"routed={router.routed}"
             )
             first = min(outs, key=lambda o: o.rid)
             print("[serve/continuous] first sequence:", first.tokens[:16])
@@ -543,6 +665,8 @@ class ServeDriver:
                 "tokens_per_s": toks / max(dt, 1e-9),
                 "p50_token_ms": float(p50),
                 "p99_token_ms": float(p99),
+                **{f"replica_{k}": v
+                   for k, v in state["router_stats"].items()},
             }
 
         from repro.serving.engine import ServeEngine

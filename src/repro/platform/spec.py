@@ -62,8 +62,10 @@ class JobReport:
     preemptions: int
     resumes: int
     retries: int  # container-failure resubmissions
-    metrics: dict  # service-specific (loss, tok/s, collision_rate, ...)
-    events: list[str]  # lifecycle trace, "+<t>s <what>" per transition
+    checkpoints: int = 0  # driver cancellation points passed (all attempts)
+    metrics: dict = dataclasses.field(default_factory=dict)  # service-specific
+    # lifecycle trace, "+<t>s <what>" per transition
+    events: list[str] = dataclasses.field(default_factory=list)
     error: Optional[str] = None
 
     def summary(self) -> str:
@@ -76,7 +78,8 @@ class JobReport:
             f"[{self.kind}/{self.name}] {self.state} "
             f"devices={self.devices_used} queue={self.queue_time_s:.2f}s "
             f"run={self.run_time_s:.2f}s preempt={self.preemptions} "
-            f"resume={self.resumes} retries={self.retries}"
+            f"resume={self.resumes} retries={self.retries} "
+            f"checkpoints={self.checkpoints}"
         )
         if self.error:
             line += f" error={self.error!r}"

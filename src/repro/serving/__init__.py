@@ -3,9 +3,12 @@
 ``ServeEngine`` is the static-batch baseline (one prefill + lockstep
 decode).  ``ContinuousBatchingEngine`` is the serving hot path:
 continuous batching over a block-table paged KV cache with a fused
-sampling decode step (see ``serving.continuous``).
+sampling decode step (see ``serving.continuous``).  ``ServeRouter``
+fans one serve tenant out over N engine replicas with join-shortest-
+queue admission on live-token count (see ``serving.router``).
 """
 
 from repro.serving.continuous import ContinuousBatchingEngine  # noqa: F401
 from repro.serving.engine import ServeEngine  # noqa: F401
+from repro.serving.router import NoReplicasAlive, ServeRouter  # noqa: F401
 from repro.serving.scheduler import Request, RequestOutput  # noqa: F401

@@ -34,7 +34,12 @@ from repro.config import ModelConfig
 from repro.models import layers, model_zoo
 from repro.models.transformer import PagedKVState, run_layers_prefill
 from repro.serving.paged_cache import BlockAllocator, pages_for
-from repro.serving.scheduler import AdmissionScheduler, Request, RequestOutput
+from repro.serving.scheduler import (
+    AdmissionScheduler,
+    Request,
+    RequestOutput,
+    remaining_new_tokens,
+)
 
 
 @dataclasses.dataclass
@@ -110,6 +115,9 @@ class ContinuousBatchingEngine:
         self._tokens = np.zeros((self.num_slots,), np.int32)
         self._temps = np.zeros((self.num_slots,), np.float32)
         self._counter = 0
+        # outputs finished inside a step() that later raised; survives the
+        # exception so a failing replica's router can still deliver them
+        self._pending_outputs: list[RequestOutput] = []
 
     # ------------------------------------------------------------------
     # jitted programs
@@ -167,16 +175,19 @@ class ContinuousBatchingEngine:
     # scheduling
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
-        if req.max_new_tokens < 1:
+        # a continuation's prompt already contains its generated prefix, so
+        # only the *remaining* budget counts against capacity
+        gen_left = remaining_new_tokens(req)
+        if gen_left < 1:
             raise ValueError(
-                f"request {req.rid}: max_new_tokens must be >= 1 "
-                "(prefill always samples the first token)"
+                f"request {req.rid}: max_new_tokens must leave >= 1 to "
+                "generate (prefill always samples the first token)"
             )
-        total = req.prompt_len + req.max_new_tokens
+        total = req.prompt_len + gen_left
         if total > self.max_len:
             raise ValueError(
                 f"request {req.rid}: prompt {req.prompt_len} + gen "
-                f"{req.max_new_tokens} exceeds max_len {self.max_len}"
+                f"{gen_left} exceeds max_len {self.max_len}"
             )
         # worst-case page need must fit the whole pool, or the request (or a
         # preempted continuation of it) could block the FCFS head forever
@@ -234,13 +245,13 @@ class ContinuousBatchingEngine:
             ):
                 self._finish(slot, finished)
 
-    def _preempt_one(self, stalled: list[int]) -> None:
-        """Pool exhausted and nothing can advance: evict the youngest stalled
-        sequence and requeue it as a continuation (its full prefix re-prefills
-        on readmission; the readmission prefill key folds in the generated
-        count, so its sampling stream does not repeat the first admission's)."""
-        victim = min(stalled, key=lambda i: int(self.alloc.seq_lens[i]))
-        s = self._slots[victim]
+    def _continuation(self, slot: int) -> Request:
+        """Evict ``slot`` into a continuation request: the full prefix
+        (prompt + generated so far) re-prefills on readmission, and the
+        carried host record keeps accumulating into the same output.  The
+        readmission prefill key folds in the generated count, so its sampling
+        stream does not repeat the first admission's."""
+        s = self._slots[slot]
         cont = Request(
             rid=s.req.rid,
             tokens=np.concatenate(
@@ -252,10 +263,37 @@ class ContinuousBatchingEngine:
             eos_id=s.req.eos_id,
         )
         cont._carry = s  # type: ignore[attr-defined]
-        self.alloc.release(victim)
-        self._slots[victim] = None
-        self._temps[victim] = 0.0
-        self.scheduler.pending.appendleft(cont)
+        self.alloc.release(slot)
+        self._slots[slot] = None
+        self._temps[slot] = 0.0
+        return cont
+
+    def _preempt_one(self, stalled: list[int]) -> None:
+        """Pool exhausted and nothing can advance: evict the youngest stalled
+        sequence and requeue it as a continuation."""
+        victim = min(stalled, key=lambda i: int(self.alloc.seq_lens[i]))
+        self.scheduler.pending.appendleft(self._continuation(victim))
+
+    def drain_continuations(self) -> list[Request]:
+        """Evict every in-flight sequence and drain the queue as resumable
+        requests — the hand-off hook the replica router (replica failure) and
+        the platform's preempt-mid-run path use to move work off this engine.
+        The engine is left idle with all pages free."""
+        conts = [
+            self._continuation(i)
+            for i, s in enumerate(self._slots)
+            if s is not None
+        ]
+        conts.extend(self.scheduler.pending)
+        self.scheduler.pending.clear()
+        return conts
+
+    def load_tokens(self) -> int:
+        """Live tokens in decode slots plus queued prompt tokens — the
+        join-shortest-queue admission signal the replica router balances on."""
+        return self.alloc.live_tokens() + sum(
+            r.prompt_len for r in self.scheduler.pending
+        )
 
     # ------------------------------------------------------------------
     # serving loop
@@ -263,10 +301,13 @@ class ContinuousBatchingEngine:
     def step(self, now: float = float("inf")) -> list[RequestOutput]:
         """Admit arrivals, advance every active slot one token, evict the
         finished.  Returns requests completed during this step."""
-        finished: list[RequestOutput] = []
+        # accumulate into the instance buffer: if decode raises mid-step,
+        # admission-time completions are retained for drain_finished()
+        finished = self._pending_outputs
         self._admit(now, finished)
         active = np.array([s is not None for s in self._slots])
         if not active.any():
+            self._pending_outputs = []
             return finished
         stalled = []
         for i, s in enumerate(self._slots):
@@ -279,6 +320,7 @@ class ContinuousBatchingEngine:
                 stalled.append(i)
         if not active.any():
             self._preempt_one(stalled)
+            self._pending_outputs = []
             return finished
         tok_dev, self.pages = self._decode(
             self.params,
@@ -305,12 +347,29 @@ class ContinuousBatchingEngine:
             )
             if done:
                 self._finish(int(i), finished)
+        self._pending_outputs = []
+        return finished
+
+    def drain_finished(self) -> list[RequestOutput]:
+        """Outputs completed by a step() that raised before returning —
+        the router collects these when failing a replica over."""
+        finished, self._pending_outputs = self._pending_outputs, []
         return finished
 
     def has_work(self) -> bool:
         return bool(len(self.scheduler)) or any(
             s is not None for s in self._slots
         )
+
+    def next_arrival(self) -> Optional[float]:
+        """Queue head's arrival time when the engine is fully idle; None if
+        it can make progress right now.  Lets a caller (engine.run, or the
+        replica router) sleep out a trace gap instead of busy-spinning."""
+        if any(s is not None for s in self._slots):
+            return None
+        if not self.scheduler.pending:
+            return None
+        return self.scheduler.pending[0].arrival_time
 
     def run(self, requests: Optional[list[Request]] = None) -> list[RequestOutput]:
         """Serve a trace to completion; ``arrival_time`` is honoured against

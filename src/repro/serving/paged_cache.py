@@ -37,6 +37,13 @@ class BlockAllocator:
         )
         self.seq_lens = np.zeros((num_slots,), np.int32)
 
+    def reset(self) -> None:
+        """Back to the freshly-constructed state: all slots and pages free."""
+        self.free_pages = list(range(self.num_pages - 1, -1, -1))
+        self.free_slots = list(range(self.num_slots - 1, -1, -1))
+        self.block_tables[:] = self.null_page
+        self.seq_lens[:] = 0
+
     # ------------------------------------------------------------------
     @property
     def free_page_count(self) -> int:

@@ -1,0 +1,168 @@
+"""Multi-replica serving front door: join-shortest-queue over N engines.
+
+One ``serve`` tenant fans out into N :class:`~repro.serving.continuous.
+ContinuousBatchingEngine` replicas sharing the same params; the router is
+the admission point in front of them:
+
+* **JSQ on live tokens** — a request goes to the alive replica with the
+  smallest ``load_tokens()`` (tokens live in decode slots + queued prompt
+  tokens), the signal that actually tracks decode-step cost in a paged
+  engine.  Ties break to the lowest replica index, which keeps routing
+  deterministic for the concurrency harness.
+* **Replica failure** — a replica whose ``step`` raises is marked dead and
+  its salvageable work (host-side continuations: prompt + generated so far)
+  is rerouted to the survivors, so a single bad replica degrades capacity
+  instead of dropping requests.  With no replica left alive the router
+  raises.
+
+The router is duck-typed over its replicas (``submit/step/has_work/
+load_tokens/drain_continuations``), so the deterministic routing tests run
+against lightweight fakes while the serve driver runs real engines.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional, Sequence
+
+from repro.serving.scheduler import Request, RequestOutput, remaining_new_tokens
+
+
+class NoReplicasAlive(RuntimeError):
+    """Every replica behind the router has failed."""
+
+
+class ServeRouter:
+    def __init__(self, replicas: Sequence):
+        if not replicas:
+            raise ValueError("router needs at least one replica")
+        self.replicas = list(replicas)
+        self.alive = [True] * len(self.replicas)
+        self.routed = [0] * len(self.replicas)  # requests admitted per replica
+        self.routed_tokens = [0] * len(self.replicas)  # prompt+gen budget routed
+        self.rerouted = 0  # continuations moved off dead replicas
+        self.failures: list[tuple[int, str]] = []  # (replica, error)
+
+    # ------------------------------------------------------------------
+    @property
+    def num_alive(self) -> int:
+        return sum(self.alive)
+
+    def load(self, i: int) -> int:
+        return int(self.replicas[i].load_tokens())
+
+    def pick(self) -> int:
+        """The JSQ choice: least-loaded alive replica, ties to lowest index."""
+        alive = [i for i, a in enumerate(self.alive) if a]
+        if not alive:
+            raise NoReplicasAlive(
+                f"all {len(self.replicas)} serve replicas have failed"
+            )
+        return min(alive, key=lambda i: (self.load(i), i))
+
+    def submit(self, req: Request) -> int:
+        """Route one request; returns the chosen replica index."""
+        i = self.pick()
+        self.replicas[i].submit(req)
+        self.routed[i] += 1
+        # remaining cost, not face value: a rerouted continuation's prompt
+        # already contains its generated prefix
+        self.routed_tokens[i] += req.prompt_len + remaining_new_tokens(req)
+        return i
+
+    # ------------------------------------------------------------------
+    def _fail_replica(self, i: int, err: Exception) -> list[RequestOutput]:
+        """Mark replica ``i`` dead; returns outputs its failing step had
+        already completed (e.g. at admission time, before decode raised)."""
+        self.alive[i] = False
+        self.failures.append((i, f"{type(err).__name__}: {err}"))
+        eng = self.replicas[i]
+        finished: list[RequestOutput] = []
+        drain_finished = getattr(eng, "drain_finished", None)
+        if drain_finished is not None:
+            try:
+                finished = drain_finished()
+            except Exception:
+                finished = []
+        try:
+            salvaged = eng.drain_continuations()
+        except Exception:  # host state corrupted too: those requests are lost
+            salvaged = []
+        for cont in salvaged:
+            try:
+                self.submit(cont)
+            except NoReplicasAlive:
+                # surface the root cause, not just the capacity exhaustion
+                raise NoReplicasAlive(
+                    f"all {len(self.replicas)} serve replicas have failed "
+                    f"(last, replica {i}: {type(err).__name__}: {err})"
+                ) from err
+            self.rerouted += 1
+        return finished
+
+    def step(self, now: float = float("inf")) -> list[RequestOutput]:
+        """Advance every alive replica one engine step; replicas that raise
+        are failed over.  Returns requests completed during this step."""
+        outs: list[RequestOutput] = []
+        for i, eng in enumerate(self.replicas):
+            if not self.alive[i] or not eng.has_work():
+                continue
+            try:
+                outs.extend(eng.step(now))
+            except Exception as e:  # noqa: BLE001 — a replica dying is the point
+                outs.extend(self._fail_replica(i, e))
+        return outs
+
+    def has_work(self) -> bool:
+        return any(
+            a and eng.has_work() for a, eng in zip(self.alive, self.replicas)
+        )
+
+    def drain_continuations(self) -> list[Request]:
+        """Evict all in-flight work from every alive replica as resumable
+        requests (the serve driver's preempt-mid-run hand-off)."""
+        conts: list[Request] = []
+        for a, eng in zip(self.alive, self.replicas):
+            if a:
+                conts.extend(eng.drain_continuations())
+        return conts
+
+    def _trace_gap(self, now: float) -> float:
+        """Seconds until the next replica can make progress, 0 if any can
+        now.  Best-effort over duck-typed replicas: one without
+        ``next_arrival`` is assumed always ready."""
+        waits = []
+        for a, eng in zip(self.alive, self.replicas):
+            if not a or not eng.has_work():
+                continue
+            next_arrival = getattr(eng, "next_arrival", None)
+            if next_arrival is None:
+                return 0.0
+            t = next_arrival()
+            if t is None:
+                return 0.0
+            waits.append(t)
+        return max(min(waits) - now, 0.0) if waits else 0.0
+
+    def run(self, requests: Optional[list[Request]] = None) -> list[RequestOutput]:
+        """Serve a trace to completion on a wall clock (cf. engine.run)."""
+        for r in requests or []:
+            self.submit(r)
+        outs: list[RequestOutput] = []
+        t0 = time.perf_counter()
+        while self.has_work():
+            gap = self._trace_gap(time.perf_counter() - t0)
+            if gap > 0:  # every replica idle until its head arrives
+                time.sleep(gap)
+            outs.extend(self.step(time.perf_counter() - t0))
+        return outs
+
+    def stats(self) -> dict:
+        return {
+            "replicas": len(self.replicas),
+            "replicas_alive": self.num_alive,
+            "routed": list(self.routed),
+            "routed_tokens": list(self.routed_tokens),
+            "rerouted": self.rerouted,
+            "replica_failures": len(self.failures),
+        }

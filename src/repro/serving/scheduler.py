@@ -34,6 +34,16 @@ class Request:
         return int(self.tokens.shape[0])
 
 
+def remaining_new_tokens(req: "Request") -> int:
+    """Generation budget a request still has to run.  A *continuation* (a
+    preempted/rerouted sequence whose prompt already contains its generated
+    prefix, carried via ``_carry``) only owes the unmet remainder — the one
+    rule the engine's admission check and the router's load accounting must
+    agree on."""
+    carry = getattr(req, "_carry", None)
+    return req.max_new_tokens - (len(carry.generated) if carry else 0)
+
+
 @dataclasses.dataclass
 class RequestOutput:
     """Finished request: generated tokens + per-token emission times."""

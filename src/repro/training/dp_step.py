@@ -16,9 +16,9 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
 
 from repro.config import ModelConfig, TrainConfig
+from repro.distributed.compat import shard_map
 from repro.distributed import collectives
 from repro.models import model_zoo
 from repro.training import optimizer as opt_lib
@@ -104,7 +104,7 @@ def make_dp_train_step(
             mesh=mesh,
             in_specs=(state_spec, batch_specs(batch)),
             out_specs=(state_spec, state_spec),
-            check_vma=False,
+            check=False,
         )
         return smapped(state, batch)
 

@@ -1,0 +1,164 @@
+"""Deterministic concurrency-harness helpers for the platform executor tests.
+
+No sleeps, no timing assumptions: tests coordinate worker threads with
+*gates* (events that fail loudly instead of deadlocking), force exact
+interleavings through the executor's ``ExecutorHooks``/``CheckpointToken``
+observation points, and pin event timestamps with a *virtual clock*.  The
+``-m concurrency`` CI tier runs these repeatedly to prove determinism.
+"""
+
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+
+# generous ceiling: only reached when an interleaving is genuinely wrong,
+# in which case the assertion names the gate instead of hanging the suite
+WAIT_S = 30.0
+
+
+class Gate:
+    """A named one-shot event whose wait asserts instead of deadlocking."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self._ev = threading.Event()
+
+    def open(self) -> None:
+        self._ev.set()
+
+    def is_open(self) -> bool:
+        return self._ev.is_set()
+
+    def wait(self, timeout: float = WAIT_S) -> None:
+        assert self._ev.wait(timeout), f"gate {self.name!r} never opened"
+
+
+class VirtualClock:
+    """Manually-advanced monotonic clock; inject as ``Platform(clock=...)``
+    so lifecycle timestamps are exact instead of wall-clock noise."""
+
+    def __init__(self, start: float = 0.0):
+        self._t = start
+        self._lock = threading.Lock()
+
+    def __call__(self) -> float:
+        with self._lock:
+            return self._t
+
+    def advance(self, dt: float) -> None:
+        with self._lock:
+            self._t += dt
+
+
+# ---------------------------------------------------------------------------
+# BlockAllocator model checker (shared by the hypothesis property tests and
+# the seeded fuzz twin that runs when hypothesis is absent)
+# ---------------------------------------------------------------------------
+
+
+def check_allocator_invariants(alloc, live: dict[int, int], page_size: int) -> None:
+    """``live`` is the model: slot -> pages it should hold."""
+    from repro.serving.paged_cache import pages_for
+
+    tables = alloc.block_tables
+    used = tables[tables != alloc.null_page]
+    # never double-allocate: every in-table page id appears exactly once
+    assert len(np.unique(used)) == used.size, "page double-allocated"
+    free = set(alloc.free_pages)
+    assert len(free) == len(alloc.free_pages), "free list has duplicates"
+    assert not (free & set(used.tolist())), "page both free and allocated"
+    # never leak: every page is exactly one of {free, in a block table}
+    assert len(free) + used.size == alloc.num_pages, "page leaked"
+    assert alloc.free_page_count == alloc.num_pages - alloc.pages_in_use()
+    # slot bookkeeping matches the model
+    assert set(live) == set(range(alloc.num_slots)) - set(alloc.free_slots)
+    for slot, n_pages in live.items():
+        row = tables[slot]
+        assert int((row != alloc.null_page).sum()) == n_pages
+        assert pages_for(int(alloc.seq_lens[slot]), page_size) == n_pages
+
+
+def exercise_allocator(alloc, ops, page_size: int = 8) -> dict[int, int]:
+    """Apply ``(op, arg)`` steps — op in alloc/extend/release/reset — to
+    ``alloc``, mirroring them in a model and checking invariants after each.
+    Returns the final model (slot -> held pages)."""
+    from repro.serving.paged_cache import pages_for
+
+    live: dict[int, int] = {}
+    for op, arg in ops:
+        if op == "alloc":
+            n_tokens = max(1, int(arg))
+            if alloc.can_admit(n_tokens, page_size):
+                slot, pages = alloc.allocate_slot(n_tokens, page_size)
+                assert slot not in live, "slot handed out twice"
+                assert len(pages) == pages_for(n_tokens, page_size)
+                live[slot] = len(pages)
+        elif op == "extend":
+            if live:
+                slot = sorted(live)[int(arg) % len(live)]
+                target = int(alloc.seq_lens[slot]) + page_size  # one more page
+                if alloc.extend(slot, target, page_size):
+                    alloc.seq_lens[slot] = target
+                    live[slot] = pages_for(target, page_size)
+        elif op == "release":
+            if live:
+                slot = sorted(live)[int(arg) % len(live)]
+                alloc.release(slot)
+                del live[slot]
+        elif op == "reset":
+            alloc.reset()
+            live.clear()
+        else:  # pragma: no cover — strategy/harness bug
+            raise ValueError(f"unknown op {op!r}")
+        check_allocator_invariants(alloc, live, page_size)
+    return live
+
+
+# ---------------------------------------------------------------------------
+# Fake serving replicas for deterministic router tests (duck-typed against
+# ContinuousBatchingEngine's router surface)
+# ---------------------------------------------------------------------------
+
+
+class FakeReplica:
+    """Processes one queued request per ``step``; optionally dies on its
+    ``fail_on_step``-th step (before completing anything that step)."""
+
+    def __init__(self, base_load: int = 0, fail_on_step: int = 0):
+        self.queue: list = []
+        self.base_load = base_load
+        self.fail_on_step = fail_on_step
+        self.steps = 0
+        self.completed: list = []
+
+    def submit(self, req) -> None:
+        self.queue.append(req)
+
+    def load_tokens(self) -> int:
+        return self.base_load + sum(
+            r.prompt_len + r.max_new_tokens for r in self.queue
+        )
+
+    def has_work(self) -> bool:
+        return bool(self.queue)
+
+    def step(self, now: float = float("inf")):
+        self.steps += 1
+        if self.fail_on_step and self.steps >= self.fail_on_step:
+            raise RuntimeError("injected replica death")
+        from repro.serving.scheduler import RequestOutput
+
+        req = self.queue.pop(0)
+        out = RequestOutput(
+            rid=req.rid, prompt_len=req.prompt_len,
+            tokens=list(range(req.max_new_tokens)),
+            arrival_time=req.arrival_time, token_times=[0.0],
+        )
+        self.completed.append(out)
+        return [out]
+
+    def drain_continuations(self):
+        drained, self.queue = self.queue, []
+        return drained

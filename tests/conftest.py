@@ -15,8 +15,19 @@ except ImportError:
         "test_attention_layers.py",
         "test_binpipe.py",
         "test_moe.py",
+        "test_paged_cache_props.py",
         "test_tiered_store.py",
     ]
+
+
+def pytest_configure(config):
+    for line in (
+        "concurrency: deterministic concurrency-harness tests "
+        "(fast, no jax models; CI runs this tier 20x)",
+        "subprocess: spawns a fresh python with fake XLA devices",
+        "slow: long-running integration tests",
+    ):
+        config.addinivalue_line("markers", line)
 
 
 @pytest.fixture

@@ -1,0 +1,464 @@
+"""Deterministic tests for the concurrent platform executor and the
+multi-replica serve router.
+
+Every interleaving here is *forced* — gates parked inside driver bodies or
+``ExecutorHooks``/``CheckpointToken`` observation points — so the suite
+passes identically across repeated runs (the ``-m concurrency`` CI tier
+runs it 20x).  No sleeps, no wall-clock assumptions; the one timing value
+is the loud-failure gate ceiling in ``concurrency_utils``.
+"""
+
+import random
+import threading
+
+import numpy as np
+import pytest
+
+from concurrency_utils import FakeReplica, Gate, VirtualClock, exercise_allocator
+from repro.platform import (
+    CANCELLED,
+    DONE,
+    FAILED,
+    TERMINAL,
+    ContainerFailure,
+    ExecutorHooks,
+    JobSpec,
+    Platform,
+    register_driver,
+    unregister_driver,
+)
+from repro.serving.paged_cache import BlockAllocator
+from repro.serving.router import NoReplicasAlive, ServeRouter
+from repro.serving.scheduler import Request
+
+pytestmark = pytest.mark.concurrency
+
+
+@pytest.fixture
+def stub(request):
+    """Register a throwaway driver kind; unregister on teardown."""
+
+    registered = []
+
+    def make(kind="stub", run_fn=None):
+        class Stub:
+            def prepare(self, spec):
+                return spec.config
+
+            def run(self, container, cfg, token=None):
+                if run_fn is None:
+                    return {"ok": 1}
+                return run_fn(container, cfg, token)
+
+        Stub.kind = kind
+        Stub.__name__ = f"Stub_{kind}"
+        register_driver(Stub)
+        registered.append(kind)
+        return Stub
+
+    yield make
+    for kind in registered:
+        unregister_driver(kind)
+
+
+def _unit_driver(units=4, on_unit=None):
+    """Driver body: run ``units`` units of work with a cancellation point
+    before each, skipping units completed by earlier (preempted) attempts.
+    ``on_unit(attempt, unit)`` is the test's coordination point."""
+
+    def run(container, cfg, token):
+        done = token.state.setdefault("done", [])
+        attempt = token.state["attempt"] = token.state.get("attempt", 0) + 1
+        for u in range(units):
+            if u in done:
+                continue
+            token.checkpoint()
+            done.append(u)
+            if on_unit is not None:
+                on_unit(attempt, u)
+        return {"units": list(done), "attempts": attempt}
+
+    return run
+
+
+def _bg_wait(platform, names, timeout_s=30.0):
+    """Drive platform.wait on a helper thread; returns (thread, box)."""
+    box = {}
+
+    def target():
+        try:
+            box["reports"] = platform.wait(names, timeout_s=timeout_s)
+        except BaseException as e:  # surfaced by the joining test
+            box["error"] = e
+
+    t = threading.Thread(target=target, daemon=True)
+    t.start()
+    return t, box
+
+
+def _join(t, box):
+    t.join(60.0)
+    assert not t.is_alive(), "background wait() never returned"
+    if "error" in box:
+        raise box["error"]
+    return box["reports"]
+
+
+# ---------------------------------------------------------------------------
+# overlap: the executor actually runs tenants concurrently
+# ---------------------------------------------------------------------------
+
+
+def test_co_scheduled_tenants_overlap_on_wall_clock(stub):
+    """Two drivers rendezvous at a barrier *inside* run() — reachable only
+    if both workers are on the clock at the same time."""
+    barrier = threading.Barrier(2, timeout=30.0)
+
+    def run(container, cfg, token):
+        barrier.wait()  # deadlocks (-> Broken) under a serial executor
+        return {"cell": container.device_ids}
+
+    stub("overlap", run_fn=run)
+    p = Platform(total_devices=8)
+    names = p.submit_batch([
+        JobSpec(kind="overlap", name=f"t{i}", devices=4, elastic=False)
+        for i in range(2)
+    ])
+    reports = p.wait(names, timeout_s=30.0)
+    assert all(r.state == DONE for r in reports.values())
+    # distinct containers: the isolation boundary held while overlapping
+    cells = [tuple(r.metrics["cell"]) for r in reports.values()]
+    assert not (set(cells[0]) & set(cells[1]))
+
+
+def test_serial_mode_rejects_overlap(stub):
+    """The benchmark baseline really is serial: the same rendezvous driver
+    breaks its barrier because the two runs never coexist."""
+    barrier = threading.Barrier(2, timeout=0.2)
+    hits = []
+
+    def run(container, cfg, token):
+        try:
+            barrier.wait()
+            hits.append("together")
+        except threading.BrokenBarrierError:
+            hits.append("alone")
+        return {}
+
+    stub("serialized", run_fn=run)
+    p = Platform(total_devices=8, concurrent=False)
+    names = p.submit_batch([
+        JobSpec(kind="serialized", name=f"t{i}", devices=4, elastic=False)
+        for i in range(2)
+    ])
+    reports = p.wait(names, timeout_s=30.0)
+    assert all(r.state == DONE for r in reports.values())
+    assert hits == ["alone", "alone"]
+
+
+# ---------------------------------------------------------------------------
+# preempt-mid-run / cancel-mid-run through the checkpoint protocol
+# ---------------------------------------------------------------------------
+
+
+def test_preempt_mid_run_yields_at_checkpoint_then_resumes(stub):
+    mid = Gate("low reached unit 0")
+    release = Gate("high submitted")
+    starts = []
+
+    def on_unit(attempt, u):
+        if attempt == 1 and u == 0:
+            mid.open()
+            release.wait()
+
+    stub("low", run_fn=_unit_driver(units=4, on_unit=on_unit))
+    stub("high")
+    hooks = ExecutorHooks(worker_start=lambda name: starts.append(name))
+    p = Platform(total_devices=4, hooks=hooks)
+    low = p.submit(JobSpec(kind="low", name="low", devices=4, min_devices=2,
+                           priority=0))
+    waiter, box = _bg_wait(p, [low])
+    mid.wait()  # the low tenant is mid-run on a worker
+    # preempts low's container at submit; its token is flagged to stop
+    high = p.submit(JobSpec(kind="high", name="high", devices=4, elastic=False,
+                            priority=10))
+    release.open()  # low's next checkpoint now raises JobInterrupted
+    reports = _join(waiter, box)
+    assert reports[low].state == DONE
+    p.wait(high, timeout_s=30.0)
+
+    rep_low, rep_high = p.results(low), p.results(high)
+    assert rep_high.state == DONE
+    assert rep_low.preemptions >= 1 and rep_low.resumes >= 1
+    evs = " ".join(rep_low.events)
+    assert "preempted" in evs and "yielded at checkpoint" in evs
+    assert "resumed" in evs
+    # the resumed attempt skipped completed units: each unit ran exactly once
+    assert rep_low.metrics["units"] == [0, 1, 2, 3]
+    assert rep_low.metrics["attempts"] == 2
+    # one worker per device: high's worker only started after low yielded
+    assert starts.index("high") > starts.index("low")
+    assert starts.count("low") == 2  # initial attempt + resumed attempt
+
+
+def test_cancel_mid_run_stops_at_checkpoint(stub):
+    mid = Gate("victim reached unit 0")
+    release = Gate("cancel issued")
+
+    def on_unit(attempt, u):
+        if u == 0:
+            mid.open()
+            release.wait()
+
+    stub("victim", run_fn=_unit_driver(units=4, on_unit=on_unit))
+    p = Platform(total_devices=2)
+    name = p.submit(JobSpec(kind="victim", devices=2))
+    waiter, box = _bg_wait(p, [name])
+    mid.wait()
+    assert p.cancel(name)  # cooperative: stops at the next checkpoint
+    release.open()
+    reports = _join(waiter, box)
+    rep = reports[name]
+    assert rep.state == CANCELLED
+    assert rep.metrics == {}  # never completed, nothing reported
+    assert "cancel requested" in " ".join(rep.events)
+    assert "cancelled at checkpoint" in " ".join(rep.events)
+    # the pool is whole again and nothing is still running
+    assert not p.active_workers()
+    assert len(p.rm.free) == 2
+    assert not p.cancel(name)  # already terminal
+
+
+def test_cancel_queued_job_is_immediate_while_pool_busy(stub):
+    hold = Gate("release the pool hog")
+
+    def run(container, cfg, token):
+        hold.wait()
+        return {}
+
+    stub("hog", run_fn=run)
+    stub("queued")
+    p = Platform(total_devices=2)
+    hog = p.submit(JobSpec(kind="hog", devices=2, elastic=False))
+    queued = p.submit(JobSpec(kind="queued", devices=2, elastic=False))
+    waiter, box = _bg_wait(p, [hog, queued])
+    assert p.cancel(queued)  # no worker yet: cancels synchronously
+    assert p.status(queued) == CANCELLED
+    hold.open()
+    reports = _join(waiter, box)
+    assert reports[hog].state == DONE and reports[queued].state == CANCELLED
+
+
+# ---------------------------------------------------------------------------
+# container failure racing the executor
+# ---------------------------------------------------------------------------
+
+
+def test_container_failure_mid_overlap_retries_without_disturbing_tenant(stub):
+    attempts = []
+
+    def flaky(container, cfg, token):
+        attempts.append(container.device_ids)
+        if len(attempts) == 1:
+            raise ContainerFailure("node died", dead_devices=1)
+        return {"attempt": len(attempts)}
+
+    stub("flaky", run_fn=flaky)
+    stub("steady")
+    p = Platform(total_devices=8)
+    reports = p.run_batch([
+        JobSpec(kind="flaky", devices=2, max_retries=1),
+        JobSpec(kind="steady", devices=4, elastic=False),
+    ], timeout_s=30.0)
+    by_kind = {r.kind: r for r in reports.values()}
+    assert by_kind["flaky"].state == DONE and by_kind["flaky"].retries == 1
+    assert by_kind["steady"].state == DONE
+    assert len(p.rm.quarantined) == 1
+    assert not (set(attempts[1]) & p.rm.quarantined)
+
+
+# ---------------------------------------------------------------------------
+# virtual clock: deterministic lifecycle timestamps
+# ---------------------------------------------------------------------------
+
+
+def test_virtual_clock_pins_lifecycle_timestamps(stub):
+    clock = VirtualClock()
+
+    def run(container, cfg, token):
+        clock.advance(3.5)  # the job "takes" exactly 3.5 virtual seconds
+        return {}
+
+    stub("timed", run_fn=run)
+    p = Platform(total_devices=2, clock=clock)
+    name = p.submit(JobSpec(kind="timed", devices=2))
+    rep = p.wait(name, timeout_s=30.0)
+    assert rep.state == DONE
+    assert rep.wall_time_s == pytest.approx(3.5)
+    assert rep.queue_time_s == pytest.approx(0.0)
+    assert rep.events[-1] == "+3.50s done"
+
+
+# ---------------------------------------------------------------------------
+# racing submit against worker completions
+# ---------------------------------------------------------------------------
+
+
+def test_racing_submit_while_workers_complete(stub):
+    stub("quick")
+    p = Platform(total_devices=8)
+    first = p.submit_batch(
+        [JobSpec(kind="quick", name=f"a{i}", devices=2) for i in range(4)]
+    )
+    waiter, box = _bg_wait(p, first)
+    # these submits race the first batch's completions (rm.submit/complete
+    # and record bookkeeping interleave across threads)
+    more = p.submit_batch(
+        [JobSpec(kind="quick", name=f"b{i}", devices=2) for i in range(12)]
+    )
+    _join(waiter, box)
+    reports = p.wait(first + more, timeout_s=30.0)
+    assert len(reports) == 16
+    assert all(r.state == DONE for r in reports.values())
+    assert not p.active_workers()
+    assert len(p.rm.free) == 8 and not p.rm.containers
+
+
+# ---------------------------------------------------------------------------
+# lifecycle fuzz: random interleavings always terminate cleanly
+# ---------------------------------------------------------------------------
+
+
+def test_lifecycle_fuzz_always_terminal_no_leaked_devices(stub):
+    def behave(container, cfg, token):
+        b = cfg["behavior"]
+        state = token.state
+        for _ in range(cfg["units"]):
+            token.checkpoint()
+        if b == "flaky" and not state.get("failed_once"):
+            state["failed_once"] = True
+            raise ContainerFailure("transient", dead_devices=1)
+        if b == "doomed":
+            raise ContainerFailure("fatal", dead_devices=1)
+        if b == "bug":
+            raise ValueError("driver bug")
+        return {"behavior": b}
+
+    stub("fuzz", run_fn=behave)
+    rng = random.Random(20260730)
+    for trial in range(4):
+        p = Platform(total_devices=8)
+        specs = []
+        behaviors = ["ok", "ok", "ok", "flaky", "bug", "ok", "ok", "doomed"]
+        rng.shuffle(behaviors)
+        for i, b in enumerate(behaviors):
+            specs.append(JobSpec(
+                kind="fuzz", name=f"j{trial}-{i}",
+                config={"behavior": b, "units": rng.randint(0, 3)},
+                devices=rng.choice([1, 2, 4]), min_devices=1,
+                priority=rng.randint(0, 10), max_retries=1,
+            ))
+        names = p.submit_batch(specs)
+        for n in rng.sample(names, 2):
+            p.cancel(n)
+        try:
+            reports = p.wait(names, timeout_s=60.0)
+        except RuntimeError:
+            # quarantine shrank the pool under an unluckily big tenant:
+            # withdraw the stragglers — cleanup must still be leak-free
+            for n in names:
+                if p.status(n) not in TERMINAL:
+                    p.cancel(n)
+            reports = p.wait(names, timeout_s=60.0)
+        # 1) no job stuck RUNNING: everything reached a terminal state
+        assert all(r.state in TERMINAL for r in reports.values())
+        assert not p.active_workers()
+        # 2) no device leaked: every device is free, quarantined, or nothing
+        assert not p.rm.containers, "containers leaked"
+        assert p.rm.free.isdisjoint(p.rm.quarantined)
+        assert len(p.rm.free) + len(p.rm.quarantined) == 8
+        # 3) event log is consistent: one submit first, one terminal last
+        for r in reports.values():
+            assert "submitted" in r.events[0]
+            last = r.events[-1]
+            assert any(w in last for w in ("done", "failed", "cancelled")), last
+
+
+# ---------------------------------------------------------------------------
+# JSQ router: deterministic balance and replica failure
+# ---------------------------------------------------------------------------
+
+
+def _req(rid, prompt=8, gen=8):
+    return Request(rid=rid, tokens=np.zeros((prompt,), np.int32),
+                   max_new_tokens=gen)
+
+
+def test_jsq_routes_to_least_loaded_replica():
+    router = ServeRouter([FakeReplica(base_load=100), FakeReplica(),
+                          FakeReplica(base_load=50)])
+    # 16-token requests against starting loads [100, 0, 50]: replica 1
+    # absorbs until it passes 50, replica 2 takes one, and the 100-load
+    # replica never hears from us
+    picks = [router.submit(_req(i)) for i in range(6)]
+    assert picks == [1, 1, 1, 1, 2, 1]
+    assert router.routed == [0, 5, 1]
+    # the two reachable replicas converged to within one request of each other
+    assert abs(router.load(1) - router.load(2)) <= 16
+
+
+def test_jsq_skewed_request_sizes_balance_tokens_not_counts():
+    router = ServeRouter([FakeReplica(), FakeReplica()])
+    sizes = [64, 8, 8, 8, 8, 8, 8, 8]  # one whale, seven minnows
+    for i, s in enumerate(sizes):
+        router.submit(_req(i, prompt=s, gen=s))
+    # the whale pinned replica 0 at 128 tokens; all seven minnows flowed to
+    # replica 1 (7 x 16 = 112 < 128) — balanced by tokens, not request count
+    assert router.routed == [1, 7]
+    assert abs(router.routed_tokens[0] - router.routed_tokens[1]) <= 16
+
+
+def test_replica_failure_reroutes_to_survivors():
+    bad = FakeReplica(fail_on_step=1)  # dies on its first step
+    good = FakeReplica()
+    router = ServeRouter([bad, good])
+    for i in range(6):
+        router.submit(_req(i))
+    outs = router.run()
+    # every request completed exactly once despite the death
+    assert sorted(o.rid for o in outs) == list(range(6))
+    assert router.alive == [False, True]
+    assert router.rerouted > 0 and len(router.failures) == 1
+    assert all(o.rid in {c.rid for c in good.completed} for o in outs)
+    # new work avoids the corpse
+    assert router.submit(_req(99)) == 1
+
+
+def test_all_replicas_dead_raises():
+    router = ServeRouter([FakeReplica(fail_on_step=1)])
+    router.submit(_req(0))
+    with pytest.raises(NoReplicasAlive):
+        router.run()
+
+
+# ---------------------------------------------------------------------------
+# BlockAllocator seeded fuzz (the hypothesis twin lives in
+# test_paged_cache_props.py and shares exercise_allocator)
+# ---------------------------------------------------------------------------
+
+
+def test_block_allocator_seeded_fuzz_invariants():
+    rng = np.random.default_rng(7)
+    for _ in range(20):
+        alloc = BlockAllocator(num_slots=4, max_pages_per_seq=6, num_pages=12)
+        ops = []
+        for _ in range(60):
+            op = rng.choice(["alloc", "alloc", "extend", "extend", "release",
+                             "reset"])
+            arg = int(rng.integers(1, 60))
+            ops.append((op, arg))
+        live = exercise_allocator(alloc, ops, page_size=8)
+        # full teardown returns every page
+        for slot in list(live):
+            alloc.release(slot)
+        assert alloc.free_page_count == 12 and alloc.free_slot_count == 4

@@ -1,0 +1,75 @@
+"""Property-based tests for the paged-KV ``BlockAllocator``.
+
+Random alloc/extend/release/reset sequences must never double-allocate a
+page, never leak one, and keep the free-count bookkeeping consistent — the
+invariants live in ``concurrency_utils.check_allocator_invariants`` and are
+checked after *every* operation.  A seeded non-hypothesis twin of this fuzz
+runs in ``test_concurrency.py`` so the invariants are exercised even where
+hypothesis is absent (``conftest.py`` soft-gates this file).
+"""
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from concurrency_utils import exercise_allocator
+from repro.serving.paged_cache import BlockAllocator, pages_for
+
+PAGE = 8
+
+_op = st.one_of(
+    st.tuples(st.just("alloc"), st.integers(min_value=1, max_value=80)),
+    st.tuples(st.just("extend"), st.integers(min_value=0, max_value=31)),
+    st.tuples(st.just("release"), st.integers(min_value=0, max_value=31)),
+    st.tuples(st.just("reset"), st.just(0)),
+)
+
+_geometry = st.tuples(
+    st.integers(min_value=1, max_value=6),   # num_slots
+    st.integers(min_value=1, max_value=8),   # max_pages_per_seq
+    st.integers(min_value=1, max_value=24),  # num_pages
+)
+
+
+@settings(max_examples=200, deadline=None)
+@given(geom=_geometry, ops=st.lists(_op, max_size=80))
+def test_random_op_sequences_never_double_allocate_or_leak(geom, ops):
+    num_slots, max_pages, num_pages = geom
+    alloc = BlockAllocator(num_slots, max_pages, num_pages)
+    live = exercise_allocator(alloc, ops, page_size=PAGE)
+    # full teardown returns the allocator to pristine state
+    for slot in sorted(live):
+        alloc.release(slot)
+    assert alloc.free_page_count == num_pages
+    assert alloc.free_slot_count == num_slots
+    assert (alloc.block_tables == alloc.null_page).all()
+    assert (alloc.seq_lens == 0).all()
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    n_tokens=st.integers(min_value=1, max_value=64),
+    num_pages=st.integers(min_value=1, max_value=16),
+)
+def test_can_admit_is_exact(n_tokens, num_pages):
+    """can_admit says yes iff allocate_slot would actually succeed."""
+    alloc = BlockAllocator(num_slots=2, max_pages_per_seq=4, num_pages=num_pages)
+    need = pages_for(n_tokens, PAGE)
+    expected = need <= min(num_pages, 4)
+    assert alloc.can_admit(n_tokens, PAGE) == expected
+    if expected:
+        slot, pages = alloc.allocate_slot(n_tokens, PAGE)
+        assert len(pages) == need
+        assert len(set(pages)) == need  # distinct pages
+        alloc.release(slot)
+        assert alloc.free_page_count == num_pages
+
+
+@settings(max_examples=100, deadline=None)
+@given(ops=st.lists(_op, max_size=40))
+def test_reset_always_restores_pristine_state(ops):
+    alloc = BlockAllocator(num_slots=3, max_pages_per_seq=4, num_pages=10)
+    exercise_allocator(alloc, ops, page_size=PAGE)
+    alloc.reset()
+    assert alloc.free_page_count == 10 and alloc.free_slot_count == 3
+    assert (alloc.block_tables == alloc.null_page).all()
+    assert sorted(alloc.free_pages) == list(range(10))

@@ -1,5 +1,8 @@
 """Unified platform API: JobSpec validation, lifecycle state machine,
-preempt/resume bridging, container-failure resubmission, driver dispatch."""
+preempt/resume bridging, container-failure resubmission, driver dispatch,
+and preempt-mid-run resume for the real service drivers."""
+
+import threading
 
 import pytest
 
@@ -9,6 +12,7 @@ from repro.platform import (
     DONE,
     FAILED,
     ContainerFailure,
+    ExecutorHooks,
     JobSpec,
     Platform,
     UnknownServiceKind,
@@ -285,6 +289,176 @@ def test_heterogeneous_batch_shares_one_pool():
     kinds = sorted(r.kind for r in reports.values())
     assert kinds == ["mapgen", "scenario", "simulate"]
     assert len(rm.free) == 4  # everything released back to the shared pool
+
+
+def _preempt_at_checkpoint(platform, victim_spec, high_spec, checkpoint_no):
+    """Harness: run ``victim_spec``, park its driver inside checkpoint
+    ``checkpoint_no`` via the executor hook, preempt it with ``high_spec``,
+    release, and wait everything out.  Returns (victim_report, high_report).
+    """
+    from concurrency_utils import Gate
+
+    mid = Gate("victim at checkpoint"), Gate("preemptor submitted")
+
+    def on_checkpoint(name, token):
+        if name == victim_spec.name and token.state.get("attempt_done") is None \
+                and token.checkpoints == checkpoint_no:
+            token.state["attempt_done"] = True
+            mid[0].open()
+            mid[1].wait()
+
+    platform.hooks = ExecutorHooks(checkpoint=on_checkpoint)
+    victim = platform.submit(victim_spec)
+    box = {}
+
+    def waiter():
+        box["rep"] = platform.wait(victim, timeout_s=120.0)
+
+    t = threading.Thread(target=waiter, daemon=True)
+    t.start()
+    mid[0].wait()
+    high = platform.submit(high_spec)
+    mid[1].open()
+    t.join(120.0)
+    assert not t.is_alive(), "victim job never finished"
+    high_rep = platform.wait(high, timeout_s=120.0)
+    return box["rep"], high_rep
+
+
+@pytest.fixture
+def blocker(request):
+    """A trivial high-priority driver used as the preemptor."""
+
+    class Blocker:
+        kind = "blocker"
+
+        def prepare(self, spec):
+            return spec.config
+
+        def run(self, container, cfg):
+            return {"blocked": container.size}
+
+    register_driver(Blocker)
+    yield
+    unregister_driver("blocker")
+
+
+def test_scenario_job_preempted_mid_run_resumes_completed_chunks(blocker):
+    from repro.platform import ScenarioJobConfig
+
+    cfg = ScenarioJobConfig(per_family=4, steps=10, chunks=4)
+    # ground truth: the same sweep, never preempted
+    p_ref = Platform(total_devices=4)
+    ref = p_ref.wait(p_ref.submit(
+        JobSpec(kind="scenario", name="ref", config=cfg, devices=4)
+    ), timeout_s=120.0)
+    assert ref.state == DONE
+
+    p = Platform(total_devices=4)
+    rep, high_rep = _preempt_at_checkpoint(
+        p,
+        JobSpec(kind="scenario", name="sweep", config=cfg, devices=4,
+                min_devices=1, priority=0),
+        JobSpec(kind="blocker", name="urgent", devices=4, elastic=False,
+                priority=10),
+        checkpoint_no=3,  # two chunks done, parked before the third
+    )
+    assert high_rep.state == DONE
+    assert rep.state == DONE
+    assert rep.preemptions >= 1 and rep.resumes >= 1
+    assert "yielded at checkpoint" in " ".join(rep.events)
+    assert rep.metrics["chunks"] == 4
+    # chunked + preempted + resumed sweep produces the identical rollout
+    assert rep.metrics["scenarios"] == ref.metrics["scenarios"] == 20
+    assert rep.metrics["collision_rate"] == ref.metrics["collision_rate"]
+    import numpy as np
+
+    np.testing.assert_array_equal(
+        np.asarray(rep.metrics["_rollout"].collided),
+        np.asarray(ref.metrics["_rollout"].collided),
+    )
+
+
+def test_serve_job_preempted_mid_run_resumes_continuations(blocker):
+    from repro.platform import ServeJobConfig
+
+    cfg = ServeJobConfig(arch="qwen2-0.5b", batch=3, prompt_len=12, gen=8,
+                         engine="continuous", page_size=8, seq=64)
+    p_ref = Platform(total_devices=4)
+    ref = p_ref.wait(p_ref.submit(
+        JobSpec(kind="serve", name="ref", config=cfg, devices=2)
+    ), timeout_s=300.0)
+    assert ref.state == DONE
+
+    p = Platform(total_devices=4)
+    rep, high_rep = _preempt_at_checkpoint(
+        p,
+        JobSpec(kind="serve", name="frontend", config=cfg, devices=4,
+                min_devices=1, priority=0),
+        JobSpec(kind="blocker", name="urgent", devices=4, elastic=False,
+                priority=10),
+        checkpoint_no=4,  # a few decode steps in, sequences mid-flight
+    )
+    assert high_rep.state == DONE
+    assert rep.state == DONE
+    assert rep.preemptions >= 1 and rep.resumes >= 1
+    # drained continuations resumed: every request finished every token,
+    # and greedy decode is deterministic across the preemption
+    assert rep.metrics["tokens"] == ref.metrics["tokens"] == 3 * 8
+    assert rep.metrics["replica_rerouted"] == 0
+
+
+def test_train_job_preempted_mid_run_resumes_from_checkpoint(blocker, tmp_path):
+    from repro.platform import TrainJobConfig
+
+    cfg = TrainJobConfig(arch="qwen2-0.5b", steps=4, batch=2, seq=32, vocab=64,
+                         ckpt_dir=str(tmp_path / "ckpt"), ckpt_every=100,
+                         log_every=2)
+    p = Platform(total_devices=4)
+    rep, high_rep = _preempt_at_checkpoint(
+        p,
+        JobSpec(kind="train", name="finetune", config=cfg, devices=4,
+                min_devices=1, priority=0),
+        JobSpec(kind="blocker", name="urgent", devices=4, elastic=False,
+                priority=10),
+        checkpoint_no=3,  # two steps done, parked before the third
+    )
+    assert high_rep.state == DONE
+    assert rep.state == DONE
+    assert rep.preemptions >= 1 and rep.resumes >= 1
+    assert "yielded at checkpoint" in " ".join(rep.events)
+    assert rep.metrics["steps"] == 4
+    # the preempt-save wrote step 2; the resumed attempt restored it instead
+    # of retraining from scratch
+    assert rep.metrics["resumed_from_step"] == 2
+
+
+def test_multi_replica_serve_job_routes_over_replicas():
+    from repro.platform import ServeJobConfig
+
+    p = Platform(total_devices=4)
+    rep = p.wait(p.submit(JobSpec(
+        kind="serve", name="fanout",
+        config=ServeJobConfig(arch="qwen2-0.5b", batch=4, prompt_len=12,
+                              gen=6, engine="continuous", page_size=8,
+                              seq=64, slots=2, replicas=2),
+        devices=4,
+    )), timeout_s=300.0)
+    assert rep.state == DONE
+    assert rep.metrics["replica_replicas"] == 2
+    assert rep.metrics["tokens"] == 4 * 6
+    # JSQ spread the four requests across both replicas
+    assert sorted(rep.metrics["replica_routed"]) == [2, 2]
+
+
+def test_replicas_validation_rejects_static_engine():
+    p = Platform(total_devices=4)
+    with pytest.raises(ValueError, match="replicas"):
+        p.submit(JobSpec(kind="serve", config={"replicas": 2}))
+    with pytest.raises(ValueError, match="replicas"):
+        p.submit(JobSpec(kind="serve",
+                         config={"replicas": 0, "engine": "continuous"}))
+    assert not p.rm.jobs
 
 
 def test_scenario_bad_policy_and_shard_validation():

@@ -127,6 +127,109 @@ def test_continuous_preemption_requeue(setup):
     np.testing.assert_array_equal(got, ref)
 
 
+# ---------------------------------------------------------------------------
+# multi-replica routing over real engines
+# ---------------------------------------------------------------------------
+
+
+def test_router_over_replicas_matches_static_greedy(setup):
+    """Requests JSQ-routed across two real engine replicas each reproduce
+    the static engine's greedy continuation."""
+    from repro.serving.router import ServeRouter
+
+    cfg, model, params = setup
+    B, S, G = 4, 12, 6
+    prompt = jax.random.randint(jax.random.PRNGKey(7), (B, S), 0, cfg.vocab_size)
+    ref = np.asarray(ServeEngine(cfg, params, max_len=S + G).generate(
+        {"tokens": prompt}, G
+    ))
+    engines = [
+        ContinuousBatchingEngine(cfg, params, num_slots=2, page_size=8,
+                                 max_len=64, seed=r)
+        for r in range(2)
+    ]
+    router = ServeRouter(engines)
+    outs = router.run([
+        Request(rid=i, tokens=np.asarray(prompt[i]), max_new_tokens=G)
+        for i in range(B)
+    ])
+    got = np.array([o.tokens for o in sorted(outs, key=lambda o: o.rid)])
+    np.testing.assert_array_equal(got, ref)
+    # both replicas saw work
+    assert sorted(router.routed) == [2, 2]
+
+
+def test_router_replica_death_reroutes_real_continuations(setup):
+    """A replica that dies mid-decode is failed over: its in-flight
+    sequences (prompt + generated so far) finish on the survivor with the
+    same greedy tokens."""
+    from repro.serving.router import ServeRouter
+
+    cfg, model, params = setup
+    B, S, G = 2, 12, 6
+    prompt = jax.random.randint(jax.random.PRNGKey(8), (B, S), 0, cfg.vocab_size)
+    ref = np.asarray(ServeEngine(cfg, params, max_len=S + G).generate(
+        {"tokens": prompt}, G
+    ))
+    engines = [
+        ContinuousBatchingEngine(cfg, params, num_slots=2, page_size=8,
+                                 max_len=64, seed=r)
+        for r in range(2)
+    ]
+    # replica 1 survives two decode steps, then the "node" dies
+    real_step, calls = engines[1].step, []
+
+    def dying_step(now=float("inf")):
+        calls.append(now)
+        if len(calls) > 2:
+            raise RuntimeError("injected device loss")
+        return real_step(now)
+
+    engines[1].step = dying_step
+    router = ServeRouter(engines)
+    outs = router.run([
+        Request(rid=i, tokens=np.asarray(prompt[i]), max_new_tokens=G)
+        for i in range(B)
+    ])
+    got = np.array([o.tokens for o in sorted(outs, key=lambda o: o.rid)])
+    np.testing.assert_array_equal(got, ref)
+    assert router.alive == [True, False]
+    assert router.rerouted >= 1
+
+
+def test_router_salvages_outputs_finished_inside_failing_step(setup):
+    """A request that completes at admission time (max_new_tokens=1) inside
+    the same engine step whose decode then raises must still be delivered,
+    not lost with the dead replica."""
+    from repro.serving.router import ServeRouter
+
+    cfg, model, params = setup
+    rng = np.random.default_rng(11)
+    engines = [
+        ContinuousBatchingEngine(cfg, params, num_slots=2, page_size=8,
+                                 max_len=64, seed=r)
+        for r in range(2)
+    ]
+
+    def boom(*args, **kwargs):
+        raise RuntimeError("injected decode death")
+
+    engines[1]._decode = boom  # admission still works; decode dies
+    router = ServeRouter(engines)
+    gens = [4, 1, 4, 4]  # rid 1 (one-token) and rid 3 land on replica 1
+    reqs = [
+        Request(rid=i, tokens=rng.integers(0, cfg.vocab_size, 12).astype(np.int32),
+                max_new_tokens=g)
+        for i, g in enumerate(gens)
+    ]
+    outs = router.run(list(reqs))
+    assert sorted(o.rid for o in outs) == [0, 1, 2, 3]
+    by_rid = {o.rid: o.tokens for o in outs}
+    assert [len(by_rid[i]) for i in range(4)] == gens
+    assert router.alive == [True, False]
+    assert router.rerouted >= 1  # rid 3 finished on the survivor
+
+
 def test_continuous_temperature_and_validation(setup):
     cfg, model, params = setup
     eng = ContinuousBatchingEngine(cfg, params, num_slots=2, page_size=8, max_len=32)
