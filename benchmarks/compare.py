@@ -1,0 +1,94 @@
+"""Per-PR perf-trajectory diff over benchmark ``--json`` snapshots.
+
+    PYTHONPATH=src python -m benchmarks.compare BENCH_5.json BENCH.json
+    PYTHONPATH=src python -m benchmarks.compare OLD NEW --fail-on-regression
+
+Compares rows shared by two ``benchmarks.run --json`` outputs — by default
+the ``hetero_`` wall-clock rows, the multi-tenant numbers this repo treats
+as its headline — and flags regressions beyond ``--threshold`` (default
+20%).  Warnings use the GitHub ``::warning::`` annotation syntax so they
+surface on the PR without failing the build; ``--fail-on-regression``
+turns them into a non-zero exit for branches that want a hard gate.
+
+The committed ``BENCH_<pr>.json`` snapshots are the trajectory: CI runs
+the suite fresh, diffs against the last committed snapshot, and uploads
+the new rows as an artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path: str) -> dict[str, float]:
+    with open(path) as f:
+        data = json.load(f)
+    return {r["name"]: float(r["us_per_call"]) for r in data.get("results", [])}
+
+
+def compare(
+    old: dict[str, float],
+    new: dict[str, float],
+    prefix: str,
+    threshold: float,
+) -> tuple[list[str], list[str]]:
+    """Returns (report lines, regression warning lines)."""
+    lines, warnings = [], []
+    shared = sorted(n for n in new if n.startswith(prefix) and n in old)
+    for name in shared:
+        ratio = new[name] / max(old[name], 1e-9)
+        verdict = "ok"
+        if ratio > 1.0 + threshold:
+            verdict = "REGRESSION"
+            warnings.append(
+                f"::warning title=perf regression::{name} wall clock "
+                f"{old[name] / 1e6:.2f}s -> {new[name] / 1e6:.2f}s "
+                f"({ratio:.2f}x, threshold {1.0 + threshold:.2f}x)"
+            )
+        elif ratio < 1.0 - threshold:
+            verdict = "improved"
+        lines.append(
+            f"{name}: {old[name] / 1e6:.2f}s -> {new[name] / 1e6:.2f}s "
+            f"({ratio:.2f}x) {verdict}"
+        )
+    missing = sorted(n for n in old if n.startswith(prefix) and n not in new)
+    for name in missing:
+        warnings.append(
+            f"::warning title=perf row vanished::{name} is in the previous "
+            "snapshot but not the new run"
+        )
+    if not shared:
+        lines.append(f"no shared rows with prefix {prefix!r}")
+    return lines, warnings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("old", help="previous snapshot (e.g. committed BENCH_5.json)")
+    ap.add_argument("new", help="fresh benchmarks.run --json output")
+    ap.add_argument("--prefix", default="hetero_",
+                    help="row-name prefix to diff (default: hetero_)")
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="relative wall-clock slowdown that counts as a "
+                         "regression (default: 0.2 = 20%%)")
+    ap.add_argument("--fail-on-regression", action="store_true",
+                    help="exit 1 on regression instead of only warning")
+    args = ap.parse_args(argv)
+
+    lines, warnings = compare(
+        load_rows(args.old), load_rows(args.new), args.prefix, args.threshold
+    )
+    print(f"# perf trajectory: {args.old} -> {args.new}")
+    for line in lines:
+        print(line)
+    for w in warnings:
+        print(w)
+    if warnings and args.fail_on_regression:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

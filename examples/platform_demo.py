@@ -1,7 +1,8 @@
-"""Heterogeneous three-tenant demo: concurrent executor, priority
-preemption + elastic resume, multi-replica serving.
+"""Heterogeneous multi-tenant demo: concurrent executor, priority
+preemption + elastic resume, multi-replica serving, and the elastic
+control plane's shrink-then-grow resize offers.
 
-One 8-device pool, three tenants submitted through the unified platform API:
+Scene 1 — one 8-device pool, three tenants through the unified platform API:
 
 1. a low-priority closed-loop scenario sweep that grabs the whole pool
    (chunked, so a mid-run preemption would resume without rerunning
@@ -11,10 +12,15 @@ One 8-device pool, three tenants submitted through the unified platform API:
    behind the join-shortest-queue router — that squeezes in beside the
    train job, forcing the sweep to *resume shrunk* to its elastic floor.
 
-Under the concurrent executor all three run on worker threads at once,
-overlapping on wall clock; the unified JobReport surfaces the whole story
-per tenant: devices used, queue time, preemption/resume counts, and
-service metrics (including per-replica routing).
+Scene 2 — the elastic control plane (no priorities involved): a sweep owns
+the whole pool when an equal-priority serve tenant arrives.  Nothing may
+preempt it, but the ElasticController sees the queue pressure and offers
+the sweep a *shrink*; the sweep accepts at its next chunk checkpoint,
+re-shards to the smaller grant, and the serve tenant starts on the freed
+devices immediately.  If the sweep still has chunks left when serving
+finishes, the next control step offers the *grow* back and it finishes
+full-width — either way its merged report is identical to an unresized
+run (the resize-equality proof in ``benchmarks/heterogeneous.py``).
 
     PYTHONPATH=src python examples/platform_demo.py
 """
@@ -28,6 +34,35 @@ from repro.platform import (
     ServeJobConfig,
     TrainJobConfig,
 )
+
+
+def elastic_scene():
+    """Scene 2: load-driven shrink-then-grow, no priorities involved."""
+    platform = Platform(total_devices=8, elastic_poll_s=0.02)
+    sweep = platform.submit(JobSpec(
+        kind="scenario", name="sweep",
+        config=ScenarioJobConfig(per_family=16, steps=40, chunks=8),
+        devices=8, min_devices=2,  # elastic: may shrink to 2 under pressure
+    ))
+    serve = platform.submit(JobSpec(
+        kind="serve", name="frontend",
+        config=ServeJobConfig(
+            arch="qwen2-0.5b", batch=4, prompt_len=16, gen=8,
+            engine="continuous", page_size=8, slots=2,
+        ),
+        devices=4,  # same priority: it queues until the sweep shrinks
+    ))
+    reports = platform.wait([sweep, serve])
+    print("\n=== scene 2: shrink-then-grow resize offers ===")
+    for name in (serve, sweep):
+        print(reports[name].summary())
+    print("\n=== sweep lifecycle (shrunk for the queue, grown back) ===")
+    for ev in reports[sweep].events:
+        print(" ", ev)
+    assert reports[sweep].resizes >= 1, "expected at least one accepted resize"
+    evs = " ".join(reports[sweep].events)
+    assert "shrink-for-queue" in evs, "expected a queue-pressure shrink offer"
+    assert reports[sweep].preemptions == 0, "elasticity, not preemption"
 
 
 def main():
@@ -67,6 +102,7 @@ def main():
         assert reports[sweep].preemptions >= 1, "expected the sweep to be preempted"
         assert reports[sweep].resumes >= 1, "expected the sweep to resume"
         assert reports[sweep].devices_used < 8, "expected an elastic shrunk resume"
+    elastic_scene()
 
 
 if __name__ == "__main__":

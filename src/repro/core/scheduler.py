@@ -37,6 +37,22 @@ def _locked(fn):
 
     return wrapper
 
+
+def _locked_notify(fn):
+    """Run under the pool lock, then wake registered listeners *after* the
+    lock is released.  Listeners (e.g. a Platform condition) may take their
+    own locks; notifying outside the pool lock keeps the global lock order
+    acyclic (platform -> ResourceManager, never the reverse)."""
+
+    @functools.wraps(fn)
+    def wrapper(self, *args, **kwargs):
+        with self._lock:
+            out = fn(self, *args, **kwargs)
+        self._notify_listeners()
+        return out
+
+    return wrapper
+
 JOB_PENDING = "PENDING"
 JOB_RUNNING = "RUNNING"
 JOB_PREEMPTED = "PREEMPTED"
@@ -57,6 +73,7 @@ class Job:
     submitted_at: float = dataclasses.field(default_factory=time.monotonic)
     preemptions: int = 0
     resumes: int = 0
+    resizes: int = 0  # accepted mid-run ResizeOffers (grow or shrink)
 
 
 @dataclasses.dataclass
@@ -85,12 +102,32 @@ class ResourceManager:
         # threads (e.g. a sweep runner waiting out a train job); RLock
         # because complete() -> schedule() re-enters
         self._lock = threading.RLock()
+        # completion/reschedule listeners: executors register a callback so
+        # a foreign tenant's complete() wakes their wait loop instead of the
+        # loop polling job states on a timer
+        self._listeners: list[Callable[[], None]] = []
 
     # ------------------------------------------------------------------
     def _log(self, msg: str) -> None:
         self.events.append(msg)
 
-    @_locked
+    def add_listener(self, fn: Callable[[], None]) -> None:
+        """Register a callback fired after any pool-state mutation (submit /
+        complete / failure / heal / resize).  Called *outside* the pool lock;
+        implementations must be cheap and non-reentrant into this manager."""
+        self._listeners.append(fn)
+
+    def remove_listener(self, fn: Callable[[], None]) -> None:
+        try:
+            self._listeners.remove(fn)
+        except ValueError:
+            pass
+
+    def _notify_listeners(self) -> None:
+        for fn in list(self._listeners):
+            fn()
+
+    @_locked_notify
     def submit(self, job: Job) -> str:
         if job.name in self.jobs:
             # multi-tenant pool: callers race on friendly names, so rename
@@ -123,6 +160,13 @@ class ResourceManager:
     @classmethod
     def _max_run(cls, ids: set[int]) -> int:
         return max((length for _, length in cls._runs(ids)), default=0)
+
+    @_locked
+    def free_runs(self) -> list[tuple[int, int]]:
+        """Maximal contiguous free-device runs as (start, length) — the pool
+        shape signal elasticity decisions (grow offers, ``--shards auto``)
+        are derived from."""
+        return self._runs(self.free)
 
     def _allocate(self, n: int) -> Optional[Container]:
         """Claim a *contiguous* block of n devices (the sub-mesh container
@@ -221,7 +265,43 @@ class ResourceManager:
         return self._allocate_shrinking(size, job.min_devices)
 
     # ------------------------------------------------------------------
-    @_locked
+    @_locked_notify
+    def resize(self, name: str, devices: int) -> Optional[Container]:
+        """Re-grant a RUNNING job's container at a new size — the commit half
+        of an accepted ResizeOffer.  The old container is released first (so
+        a grow can absorb the adjacent free run), then a fresh contiguous
+        block of ``devices`` (clamped to [min_devices, job.devices]) is
+        claimed, shrinking toward ``min_devices`` if the pool fragmented in
+        between.  Returns the new container, or None when the job was not
+        resizable (not RUNNING) or nothing could be granted — in which case
+        the job is requeued PENDING at its desired size.
+
+        Freed devices are offered to the queue immediately, which is the
+        whole point of a shrink offer: a queued tenant starts on them."""
+        job = self.jobs[name]
+        if job.state != JOB_RUNNING or job.container is None:
+            return None
+        devices = max(job.min_devices, min(devices, job.devices))
+        old = job.container
+        if devices == old.size:
+            return old
+        self._release(old)
+        job.container = None
+        c = self._allocate_shrinking(devices, job.min_devices)
+        if c is None:
+            # the pool churned underneath the offer: requeue at desired size
+            job.state = JOB_PENDING
+            self._log(f"resize {name} -> {devices} failed; requeued")
+            self.schedule()
+            return None
+        c.job = name
+        job.container = c
+        job.resizes += 1
+        self._log(f"resize {name}: {old.size} -> {c.size} devices")
+        self.schedule()  # a shrink's freed devices go to queued tenants now
+        return c
+
+    @_locked_notify
     def complete(self, name: str, state: str = JOB_DONE) -> None:
         """Terminate a job and free its container.  ``state`` records the
         outcome (JOB_DONE, or JOB_FAILED for driver errors) so co-tenants
@@ -244,7 +324,7 @@ class ResourceManager:
             if j.state == JOB_RUNNING and j.name not in exclude
         ]
 
-    @_locked
+    @_locked_notify
     def fail_container(self, name: str, dead_devices: int = 1) -> None:
         """A node in the job's container died: quarantine devices, resubmit."""
         job = self.jobs[name]
@@ -258,7 +338,7 @@ class ResourceManager:
         job.state = JOB_PENDING  # driver resumes from checkpoint on reschedule
         self.schedule()
 
-    @_locked
+    @_locked_notify
     def quarantine_devices(self, device_ids) -> None:
         """Mark devices dead without rescheduling their job — used when a
         failing job is abandoned (e.g. retries exhausted) but its devices
@@ -268,7 +348,7 @@ class ResourceManager:
         self.free.difference_update(dead)
         self._log(f"quarantine {sorted(dead)}")
 
-    @_locked
+    @_locked_notify
     def heal(self, device_ids: Optional[list[int]] = None) -> None:
         ids = set(device_ids) if device_ids else set(self.quarantined)
         self.quarantined.difference_update(ids)

@@ -1,9 +1,15 @@
-"""Cell enumeration + per-arch runtime policy for the dry-run matrix.
+"""Cell enumeration: the dry-run matrix's (arch x shape) cells, and the
+serving tier's pool-derived *serve cells*.
 
-A *cell* is (architecture x input shape).  The policy picks remat /
+A dry-run *cell* is (architecture x input shape); the policy picks remat /
 microbatching / weight-sharding settings by model size so every cell fits the
 16 GB/chip budget on the production mesh (verified by the dry-run's memory
-analysis; see EXPERIMENTS.md §Dry-run)."""
+analysis; see EXPERIMENTS.md §Dry-run).
+
+A *serve cell* is one serve deployment (a platform job: its engines behind a
+replica router) in the pool-level tier of ``repro.serving.cell_router``;
+:func:`serve_cell_plan` derives how many cells a pool's free shape supports
+— the planning half the ``launch.serve_cells`` CLI builds its tier from."""
 
 from __future__ import annotations
 
@@ -44,6 +50,28 @@ def all_cells(include_skipped: bool = False) -> list[tuple[Cell, bool, str]]:
             if ok or include_skipped:
                 out.append((Cell(arch, sname), ok, why))
     return out
+
+
+def serve_cell_plan(
+    rm, *, cells: int = 0, devices_per_cell: int = 2
+) -> list[int]:
+    """Container sizes for a pool-level serve-cell tier.
+
+    ``cells=0`` derives the cell count from the pool's free contiguous runs
+    (``ResourceManager.free_runs``): each run contributes
+    ``length // devices_per_cell`` cells, so the tier saturates the free
+    shape without fragmenting a run a bigger tenant could still use whole.
+    An explicit ``cells`` just requests that many ``devices_per_cell``-sized
+    containers (the scheduler queues what doesn't fit).  Always returns at
+    least one cell.
+    """
+    if devices_per_cell < 1:
+        raise ValueError(f"devices_per_cell must be >= 1, got {devices_per_cell}")
+    if cells <= 0:
+        cells = sum(
+            length // devices_per_cell for _, length in rm.free_runs()
+        )
+    return [devices_per_cell] * max(1, cells)
 
 
 def runtime_policy(cfg: ModelConfig, shape: ShapeConfig) -> tuple[ModelConfig, ParallelConfig]:

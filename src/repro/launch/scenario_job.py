@@ -1,13 +1,17 @@
 """Closed-loop scenario sweep CLI — thin wrapper over the platform API (§3).
 
     PYTHONPATH=src python -m repro.launch.scenario_job --per-family 64 --shards 4
+    PYTHONPATH=src python -m repro.launch.scenario_job --shards auto
     PYTHONPATH=src python -m repro.launch.scenario_job --ab-test --policy aeb
 
 A sweep is submitted as ``--shards`` independent ``scenario`` jobs (each
 rolling out its slice of the seed-deterministic batch on its own container)
 and the per-shard metrics are merged back into one
 :class:`~repro.scenario.metrics.ScenarioReport` — heterogeneous batch
-submission over the shared pool.  ``--ab-test`` runs the deployed and
+submission over the shared pool.  ``--shards auto`` derives the shard count
+from the pool's free contiguous device runs (one ``--devices-per-shard``
+container per run slice) instead of making the caller guess; the merged
+report is identical either way.  ``--ab-test`` runs the deployed and
 candidate sweeps through the same path and gates with
 :func:`repro.scenario.metrics.qualify`.
 """
@@ -24,9 +28,28 @@ from repro.scenario.dsl import FAMILIES
 POLICIES = tuple(scenario_policies())
 
 
+def resolve_shards(platform: Platform, shards, devices_per_shard: int) -> int:
+    """``--shards`` value -> shard count.  ``auto`` derives it from the
+    pool's free contiguous runs — one shard container per
+    ``devices_per_shard`` slice of each run, the same plan the serve-cell
+    tier uses (:func:`repro.launch.cells.serve_cell_plan`), so the two
+    pool-saturation policies can never drift apart."""
+    if isinstance(shards, str) and shards.strip().lower() == "auto":
+        from repro.launch.cells import serve_cell_plan
+
+        return len(serve_cell_plan(
+            platform.rm, devices_per_cell=devices_per_shard
+        ))
+    n = int(shards)
+    if n < 1:
+        raise ValueError(f"--shards must be >= 1 or 'auto', got {shards!r}")
+    return n
+
+
 def _sweep(platform: Platform, args, policy: str, prefix: str):
     """Submit one scenario job per shard, wait, merge into a ScenarioReport."""
     t0 = time.perf_counter()
+    num_shards = resolve_shards(platform, args.shards, args.devices_per_shard)
     specs = [
         JobSpec(
             kind="scenario",
@@ -35,11 +58,11 @@ def _sweep(platform: Platform, args, policy: str, prefix: str):
                 families=args.families, per_family=args.per_family,
                 steps=args.steps, dt=args.dt, seed=args.seed, policy=policy,
                 use_pallas=args.pallas_collision,
-                shard_index=i, num_shards=args.shards,
+                shard_index=i, num_shards=num_shards,
             ),
             devices=args.devices_per_shard,
         )
-        for i in range(args.shards)
+        for i in range(num_shards)
     ]
     reports = platform.run_batch(specs)
     bad = {n: r.error for n, r in reports.items() if r.state != "DONE"}
@@ -59,7 +82,9 @@ def main(argv=None):
     ap.add_argument("--dt", type=float, default=0.1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--policy", default="aeb", choices=sorted(POLICIES))
-    ap.add_argument("--shards", type=int, default=4)
+    ap.add_argument("--shards", default="4",
+                    help="shard count, or 'auto' to derive one shard per "
+                         "--devices-per-shard slice of the pool's free runs")
     ap.add_argument("--devices", type=int, default=8, help="scheduler pool size")
     ap.add_argument("--devices-per-shard", type=int, default=2)
     ap.add_argument("--pallas-collision", action="store_true",

@@ -35,6 +35,12 @@ def main(argv=None):
                     help="decode slots per replica (0 = batch)")
     ap.add_argument("--replicas", type=int, default=1,
                     help="continuous engine replicas behind the JSQ router")
+    ap.add_argument("--cells", type=int, default=1,
+                    help="serve cells (of --replicas engines each) behind "
+                         "the pool-level cell router")
+    ap.add_argument("--max-replicas", type=int, default=0,
+                    help="per-cell autoscale ceiling on sustained queue "
+                         "depth (0 disables)")
     ap.add_argument("--vocab", type=int, default=512, help="smoke-scale vocab")
     ap.add_argument("--seq", type=int, default=512,
                     help="smoke-scale max_seq_len (match the train job's "
@@ -53,6 +59,7 @@ def main(argv=None):
             prompt_len=args.prompt_len, gen=args.gen,
             temperature=args.temperature, seed=args.seed, engine=args.engine,
             page_size=args.page_size, slots=args.slots, replicas=args.replicas,
+            cells=args.cells, max_replicas=args.max_replicas,
             vocab=args.vocab, seq=args.seq, ckpt_dir=args.ckpt_dir,
         ),
         devices=args.job_devices,

@@ -25,14 +25,17 @@ from repro.platform.client import (
     FAILED,
     TERMINAL,
     ExecutorHooks,
+    JobTimeout,
     Platform,
 )
 from repro.platform.driver import (
     CANCEL,
     PREEMPT,
+    RESIZE,
     CheckpointToken,
     ContainerFailure,
     JobInterrupted,
+    ResizeOffer,
     ServiceDriver,
     UnknownServiceKind,
     available_kinds,
@@ -40,6 +43,7 @@ from repro.platform.driver import (
     register_driver,
     unregister_driver,
 )
+from repro.platform.elastic import ElasticController
 from repro.platform.services import (
     MapGenJobConfig,
     ScenarioJobConfig,
@@ -55,10 +59,14 @@ __all__ = [
     "CANCELLED",
     "CheckpointToken",
     "DONE",
+    "ElasticController",
     "ExecutorHooks",
     "FAILED",
     "JobInterrupted",
+    "JobTimeout",
     "PREEMPT",
+    "RESIZE",
+    "ResizeOffer",
     "TERMINAL",
     "ContainerFailure",
     "JobReport",

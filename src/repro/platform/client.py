@@ -25,8 +25,9 @@ Job lifecycle (bridged from the ResourceManager's container states, with
 per-job events surfaced):
 
     PENDING -> RUNNING -> DONE
-       ^          |   \\-> FAILED (driver error, or retries exhausted)
-       |          v
+       ^        |  | \\-> FAILED (driver error, or retries exhausted)
+       |        |  \\--> RUNNING (resized: an accepted ResizeOffer yields
+       |        v        at a checkpoint and is re-granted grown/shrunk)
        +---- PREEMPTED          (higher-priority tenant took the devices;
        |          |              a running driver yields at its next
        |          v              checkpoint)
@@ -43,6 +44,15 @@ worker start/exit and at every driver checkpoint, and ``clock`` swaps the
 event-timestamp clock for a virtual one — the concurrency test harness
 drives preempt-mid-run, cancel-mid-run and racing submit/complete paths
 without sleeps.
+
+Elastic control plane: ``platform.elastic`` (an
+:class:`~repro.platform.elastic.ElasticController`) issues load-driven
+``ResizeOffer``s onto running tokens; ``elastic_poll_s`` makes the wait
+loop step it.  Wait loops are event-driven — worker exits, submits, and
+*foreign-tenant* completions (via a ``ResourceManager`` listener) all
+notify the platform condition — and ``wait(deadline_s=...)`` adds a hard
+bound that raises :class:`JobTimeout` with each stuck job's last
+lifecycle event.
 """
 
 from __future__ import annotations
@@ -51,6 +61,7 @@ import dataclasses
 import inspect
 import threading
 import time
+import weakref
 from typing import Any, Callable, Optional, Sequence, Union
 
 from repro.core.scheduler import (
@@ -65,12 +76,15 @@ from repro.core.scheduler import (
 from repro.platform.driver import (
     CANCEL,
     PREEMPT,
+    RESIZE,
     CheckpointToken,
     ContainerFailure,
     JobInterrupted,
+    ResizeOffer,
     ServiceDriver,
     get_driver,
 )
+from repro.platform.elastic import ElasticController
 from repro.platform.spec import JobReport, JobSpec
 
 # platform-level job states: the scheduler's, plus CANCELLED
@@ -78,6 +92,19 @@ DONE = "DONE"
 FAILED = "FAILED"
 CANCELLED = "CANCELLED"
 TERMINAL = (DONE, FAILED, CANCELLED)
+
+
+class JobTimeout(RuntimeError):
+    """``wait(deadline_s=...)`` expired with jobs still live.  Carries each
+    unfinished job's last lifecycle event so the caller sees *where* it was
+    stuck instead of a bare timeout."""
+
+    def __init__(self, pending: dict[str, str], deadline_s: float):
+        self.pending = dict(pending)
+        detail = "; ".join(f"{n}: {ev}" for n, ev in self.pending.items())
+        super().__init__(
+            f"jobs not terminal after {deadline_s:.1f}s deadline: {detail}"
+        )
 
 
 def _noop(*args: Any) -> None:
@@ -148,6 +175,7 @@ class Platform:
         concurrent: bool = True,
         hooks: Optional[ExecutorHooks] = None,
         clock: Callable[[], float] = time.monotonic,
+        elastic_poll_s: Optional[float] = None,
     ):
         self.rm = rm if rm is not None else ResourceManager(total_devices)
         self.concurrent = concurrent
@@ -159,6 +187,38 @@ class Platform:
         # lock order is always platform -> ResourceManager, never reversed.
         self._lock = threading.RLock()
         self._cond = threading.Condition(self._lock)
+        # a foreign tenant completing on the shared pool (e.g. a FleetRunner
+        # calling rm.complete) wakes our wait loops through this listener.
+        # Registered through a weakref so a long-lived shared manager never
+        # pins finished Platform instances alive.
+        self_ref = weakref.ref(self)
+
+        def _pool_listener() -> None:
+            p = self_ref()
+            if p is not None:
+                p._pool_changed()
+
+        self.rm.add_listener(_pool_listener)
+        # the elastic control plane: load-driven ResizeOffers.  Always
+        # constructed (so tests/benchmarks can force offers); only stepped
+        # from the wait loops when ``elastic_poll_s`` is set.  Offers need a
+        # live worker to land on, so under the serial executor the policy
+        # only bites when another thread is mid-step (forced offers always
+        # work).
+        self.elastic = ElasticController(self, poll_s=elastic_poll_s)
+
+    def _pool_changed(self) -> None:
+        # Never block here: the notifying thread may hold *another*
+        # platform's lock (two Platforms sharing one ResourceManager), and a
+        # blocking acquire would close an A->B/B->A lock cycle.  If the lock
+        # is contended the holder is awake and will re-check its predicate;
+        # waiters are covered by the wait-timeout safety net.  The acquire
+        # still succeeds reentrantly for this platform's own mutations.
+        if self._lock.acquire(blocking=False):
+            try:
+                self._cond.notify_all()
+            finally:
+                self._lock.release()
 
     # -- submission ----------------------------------------------------
     def submit(self, spec: JobSpec) -> str:
@@ -352,6 +412,8 @@ class Platform:
                     rec.log(f"cancelled at checkpoint {token.checkpoints}",
                             self._clock())
                     self._finish(name, CANCELLED)
+                elif e.reason == RESIZE and e.offer is not None:
+                    self._apply_resize(name, rec, token, e.offer)
                 else:
                     rec.log(
                         f"yielded at checkpoint {token.checkpoints} "
@@ -385,6 +447,35 @@ class Platform:
                     self._finish(name, CANCELLED)
                 else:
                     self._finish(name, DONE)
+
+    def _apply_resize(
+        self, name: str, rec: _JobRecord, token: CheckpointToken,
+        offer: ResizeOffer,
+    ) -> None:
+        """Commit an accepted ResizeOffer (platform lock held): the driver
+        has yielded at a checkpoint with its progress persisted in
+        ``token.state``; re-grant the container at the offered size and keep
+        the job RUNNING so the dispatcher restarts the driver there — the
+        same resume path a preemption takes, minus the queueing."""
+        job = self.rm.jobs[name]
+        old = job.container.size if job.container is not None else 0
+        rec.log(
+            f"yielded at checkpoint {token.checkpoints} "
+            f"(accepted resize offer: {old} -> {offer.target_devices} "
+            f"devices, {offer.reason})", self._clock())
+        c = self.rm.resize(name, offer.target_devices)
+        if c is not None:
+            rec.log(f"re-granted container {c.cid} ({c.size} devices)",
+                    self._clock())
+            rec.state = rec.last_rm_state = JOB_RUNNING
+        else:
+            # the pool churned underneath the offer (or a preemption won the
+            # race): the scheduler requeued the job; bridge whatever state
+            # it left and let the normal resume path pick it back up
+            rec.state = rec.last_rm_state = self.rm.jobs[name].state
+            rec.log("resize not granted; awaiting reschedule", self._clock())
+        self._observe()
+        self._cond.notify_all()
 
     def _worker_main(
         self, name: str, rec: _JobRecord, container, token: CheckpointToken
@@ -493,12 +584,15 @@ class Platform:
         self,
         names: Union[str, Sequence[str], None] = None,
         timeout_s: float = 600.0,
+        deadline_s: Optional[float] = None,
     ) -> Union[JobReport, dict[str, JobReport]]:
         """Drive the executor until the named jobs (default: all submitted so
         far) reach a terminal state; returns their JobReports (one, or
         name->report).  ``timeout_s`` bounds *stall* detection (pool held by
-        foreign tenants), on the real clock even under an injected virtual
-        clock."""
+        foreign tenants) and ``deadline_s`` is a hard overall bound: on
+        expiry a :class:`JobTimeout` is raised carrying each unfinished
+        job's last lifecycle event.  Both run on the real clock even under
+        an injected virtual clock."""
         single = isinstance(names, str)
         if single:
             targets = [names]
@@ -507,10 +601,13 @@ class Platform:
                 targets = list(self._records)
         else:
             targets = list(names)
+        deadline = (
+            None if deadline_s is None else time.monotonic() + deadline_s
+        )
         if self.concurrent:
-            self._wait_concurrent(targets, timeout_s)
+            self._wait_concurrent(targets, timeout_s, deadline, deadline_s)
         else:
-            self._wait_serial(targets, timeout_s)
+            self._wait_serial(targets, timeout_s, deadline, deadline_s)
         if single:
             return self.results(targets[0])
         return {n: self.results(n) for n in targets}
@@ -524,7 +621,39 @@ class Platform:
             + (f", held by {foreign})" if foreign else ")")
         )
 
-    def _wait_concurrent(self, targets: Sequence[str], timeout_s: float) -> None:
+    def _check_deadline(
+        self, targets: Sequence[str], deadline: Optional[float],
+        deadline_s: Optional[float],
+    ) -> None:
+        """Raise JobTimeout when the hard deadline expired (lock held)."""
+        if deadline is None or time.monotonic() < deadline:
+            return
+        pending = {
+            n: (self._records[n].events[-1]
+                if self._records[n].events else "(no events)")
+            for n in targets
+            if self._records[n].state not in TERMINAL or n in self._active
+        }
+        if pending:
+            raise JobTimeout(pending, deadline_s or 0.0)
+
+    def _wait_timeout(self, deadline: Optional[float]) -> float:
+        """Condition-wait bound: waits are event-driven (worker exits,
+        submits, and foreign-tenant completions all notify through the
+        ResourceManager listener); this bound only exists so the elastic
+        controller gets its poll cadence and a hard deadline fires on time.
+        """
+        base = 0.5  # safety net, not a poll: notifications do the waking
+        if self.elastic.poll_s is not None:
+            base = min(base, max(self.elastic.poll_s, 0.02))
+        if deadline is not None:
+            base = min(base, max(deadline - time.monotonic(), 0.001))
+        return base
+
+    def _wait_concurrent(
+        self, targets: Sequence[str], timeout_s: float,
+        deadline: Optional[float] = None, deadline_s: Optional[float] = None,
+    ) -> None:
         t0 = time.monotonic()
         with self._cond:
             while True:
@@ -535,50 +664,65 @@ class Platform:
                 if all(self._records[n].state in TERMINAL for n in targets) \
                         and not any(n in self._active for n in targets):
                     return
+                self._check_deadline(targets, deadline, deadline_s)
                 if self._dispatch():
                     continue
+                self.elastic.maybe_step()
                 if self._active:
-                    # workers run; their exit (or a submit) notifies.  The
-                    # timeout is a safety net for foreign-tenant completions
-                    # the condition never hears about.
-                    self._cond.wait(timeout=0.05)
+                    # workers run; their exit (or a submit, or a pool-state
+                    # change) notifies the condition
+                    self._cond.wait(timeout=self._wait_timeout(deadline))
                     continue
                 foreign = self.rm.running_jobs(exclude=self._records)
                 if foreign and time.monotonic() - t0 < timeout_s:
-                    self._cond.wait(timeout=0.01)
+                    # event-driven: the foreign tenant's rm.complete() fires
+                    # the manager listener, which notifies this condition
+                    self._cond.wait(timeout=self._wait_timeout(deadline))
                     continue
                 raise self._stall(targets, foreign)
 
-    def _wait_serial(self, targets: Sequence[str], timeout_s: float) -> None:
+    def _wait_serial(
+        self, targets: Sequence[str], timeout_s: float,
+        deadline: Optional[float] = None, deadline_s: Optional[float] = None,
+    ) -> None:
         t0 = time.monotonic()
         while True:
             with self._cond:
                 self._observe()
                 if all(self._records[n].state in TERMINAL for n in targets):
                     return
+                self._check_deadline(targets, deadline, deadline_s)
             if self.step():
                 continue
             with self._cond:
+                # serial mode only has live workers when another thread is
+                # mid-step; the controller can still offer to those
+                self.elastic.maybe_step()
                 if self._active:
                     # another thread is mid-step on this platform: its job
                     # wasn't runnable for us, so wait for it to settle
-                    self._cond.wait(timeout=0.05)
+                    self._cond.wait(timeout=self._wait_timeout(deadline))
                     continue
-            # nothing of ours is scheduled: either a foreign tenant (e.g. a
-            # FleetRunner on the same pool) holds the devices, or the queue
-            # is genuinely stuck (job can never fit / pool quarantined)
-            foreign = self.rm.running_jobs(exclude=self._records)
-            if foreign and time.monotonic() - t0 < timeout_s:
-                time.sleep(0.01)
-                continue
-            raise self._stall(targets, foreign)
+                # nothing of ours is scheduled: either a foreign tenant
+                # (e.g. a FleetRunner on the same pool) holds the devices,
+                # or the queue is genuinely stuck (job can never fit / pool
+                # quarantined).  Foreign completions notify the condition
+                # through the ResourceManager listener.
+                foreign = self.rm.running_jobs(exclude=self._records)
+                if foreign and time.monotonic() - t0 < timeout_s:
+                    self._cond.wait(timeout=self._wait_timeout(deadline))
+                    continue
+                raise self._stall(targets, foreign)
 
     def run_batch(
-        self, specs: Sequence[JobSpec], timeout_s: float = 600.0
+        self,
+        specs: Sequence[JobSpec],
+        timeout_s: float = 600.0,
+        deadline_s: Optional[float] = None,
     ) -> dict[str, JobReport]:
         """submit_batch + wait: the heterogeneous multi-tenant entrypoint."""
         names = self.submit_batch(specs)
-        reports = self.wait(names, timeout_s=timeout_s)
+        reports = self.wait(names, timeout_s=timeout_s, deadline_s=deadline_s)
         assert isinstance(reports, dict)
         return reports
 
@@ -602,6 +746,7 @@ class Platform:
                 wall_time_s=max(end - rec.submitted_at, 0.0),
                 preemptions=job.preemptions,
                 resumes=job.resumes,
+                resizes=job.resizes,
                 retries=rec.retries,
                 checkpoints=rec.checkpoints,
                 metrics=dict(rec.metrics),

@@ -22,6 +22,7 @@ its checkpoint files).
 
 from __future__ import annotations
 
+import dataclasses
 import difflib
 import threading
 from typing import Any, Callable, Optional, Protocol, runtime_checkable
@@ -33,16 +34,34 @@ from repro.platform.spec import JobSpec
 # interruption reasons carried by CheckpointToken / JobInterrupted
 PREEMPT = "PREEMPT"
 CANCEL = "CANCEL"
+RESIZE = "RESIZE"
+
+
+@dataclasses.dataclass(frozen=True)
+class ResizeOffer:
+    """An elasticity proposal: re-grant ``job``'s container at
+    ``target_devices``.  Issued by the :class:`~repro.platform.elastic.
+    ElasticController` (or forced by a test/benchmark) onto a running
+    driver's CheckpointToken; the driver accepts it at its next
+    ``checkpoint()`` by yielding with reason ``RESIZE``, after which the
+    executor re-grants a resized container through the same resume
+    machinery preemption uses."""
+
+    job: str
+    target_devices: int
+    reason: str = "forced"  # shrink-for-queue | grow-to-free | forced | ...
 
 
 class JobInterrupted(Exception):
     """Raised *inside a driver* by ``CheckpointToken.checkpoint()`` when the
-    executor wants the devices back (``reason`` is PREEMPT or CANCEL).  The
-    worker catches it; drivers only see it if they want a try/finally."""
+    executor wants the devices back (``reason`` is PREEMPT, CANCEL or
+    RESIZE; a RESIZE carries the accepted ``offer``).  The worker catches
+    it; drivers only see it if they want a try/finally."""
 
-    def __init__(self, reason: str):
+    def __init__(self, reason: str, offer: Optional[ResizeOffer] = None):
         super().__init__(reason)
         self.reason = reason
+        self.offer = offer
 
 
 class CheckpointToken:
@@ -51,12 +70,19 @@ class CheckpointToken:
     * ``checkpoint(save=None)`` — call between units of work.  If a stop has
       been requested, runs ``save`` (a last-chance persistence hook, e.g.
       "write the train checkpoint") and raises :class:`JobInterrupted`.
+      A pending :class:`ResizeOffer` is accepted here the same way: ``save``
+      runs, then the driver yields with reason ``RESIZE`` and is re-granted
+      a resized container — resize rides the proven preempt/resume path
+      instead of adding a second interruption mechanism.
     * ``should_stop()`` — poll without raising (to skip starting a unit).
     * ``state`` — dict persisted across the job's run attempts; drivers
-      store resume progress here (completed chunks, drained requests, ...).
+      store resume progress here (completed chunks, drained requests, ...)
+      and publish load signals (``state["load"]``) the ElasticController
+      samples.
 
-    ``request_stop`` is called by the executor (from another thread); the
-    flag is an event so drivers never miss a stop that raced a checkpoint.
+    ``request_stop``/``request_resize`` are called by the executor/controller
+    (from another thread); the stop flag is an event so drivers never miss a
+    stop that raced a checkpoint, and a stop always outranks a resize.
     """
 
     def __init__(
@@ -71,13 +97,23 @@ class CheckpointToken:
         self._on_checkpoint = on_checkpoint
         self._stop = threading.Event()
         self.reason: Optional[str] = None
+        self._resize: Optional[ResizeOffer] = None
 
     def request_stop(self, reason: str) -> None:
         self.reason = reason  # write before set(): checkpoint reads after wait
         self._stop.set()
 
+    def request_resize(self, offer: ResizeOffer) -> None:
+        """Attach a resize offer; the driver accepts it at its next
+        checkpoint (unless a preempt/cancel stop wins the race)."""
+        self._resize = offer
+
     def should_stop(self) -> bool:
         return self._stop.is_set()
+
+    @property
+    def pending_resize(self) -> Optional[ResizeOffer]:
+        return self._resize
 
     def checkpoint(self, save: Optional[Callable[[], None]] = None) -> None:
         self.checkpoints += 1
@@ -86,9 +122,17 @@ class CheckpointToken:
             # mid-run interleavings deterministic (no sleeps)
             self._on_checkpoint(self.job_name, self)
         if self._stop.is_set():
+            # a preempt/cancel outranks any pending resize; the offer is
+            # dropped (the controller re-issues against live state)
+            self._resize = None
             if save is not None:
                 save()
             raise JobInterrupted(self.reason or CANCEL)
+        offer, self._resize = self._resize, None
+        if offer is not None:
+            if save is not None:
+                save()
+            raise JobInterrupted(RESIZE, offer=offer)
 
 
 class UnknownServiceKind(ValueError):

@@ -1,0 +1,246 @@
+"""Elastic control plane: load-driven ResizeOffers over the shared pool.
+
+The :class:`~repro.core.scheduler.ResourceManager` has always been able to
+shrink and grow *allocations* (elastic shrink at schedule time, shrunk
+resume after preemption) — but no running driver ever learned about it
+mid-run.  The :class:`ElasticController` closes that loop: it samples
+per-job load signals and the pool's free shape, decides which running
+tenant should change size, and issues a
+:class:`~repro.platform.driver.ResizeOffer` onto that tenant's live
+``CheckpointToken``.  The driver accepts the offer at its next
+``token.checkpoint()`` — yielding exactly like a preemption, except the
+executor immediately re-grants a resized container and the driver resumes
+from ``token.state``.  Resize therefore reuses the proven preempt/resume
+machinery instead of adding a second interruption path.
+
+Signals sampled (all read under the platform lock):
+
+* **pool shape** — ``ResourceManager.free_runs()`` (contiguous free runs)
+  and the pending queue: a queued tenant that no free run can fit is
+  *queue pressure*;
+* **driver load** — interruptible drivers publish
+  ``token.state["load"] = {"busy": 0..1, ...}`` at their checkpoints
+  (scenario: remaining-chunk fraction; serve: router ``load_tokens()`` and
+  queue depth), used to rank shrink victims (least busy first) and grow
+  beneficiaries (most busy first).
+
+Policy (deterministic, one offer per control step so every decision is
+observable in the job's event log):
+
+1. **Queue pressure -> shrink.**  While some pending job's ``min_devices``
+   exceeds the largest free run, offer the least-busy running elastic
+   tenant a shrink to ``max(size // 2, min_devices)``.  Its freed devices
+   go straight to the queue (``ResourceManager.resize`` reschedules).
+2. **Free pool -> grow.**  With no pressure, offer the busiest tenant
+   running below its requested ``devices`` a grow to the largest
+   contiguous size reachable (its own block plus adjacent free runs),
+   capped at ``JobSpec.devices``.
+
+Tests and benchmarks can bypass the policy with :meth:`offer` (a forced
+offer), which is how the deterministic 4->2->4 resize-equality proof is
+driven.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import TYPE_CHECKING, Optional
+
+from repro.core.scheduler import JOB_PENDING, JOB_PREEMPTED, JOB_RUNNING
+from repro.platform.driver import ResizeOffer
+
+if TYPE_CHECKING:  # pragma: no cover — import cycle: client builds us
+    from repro.platform.client import Platform
+
+_TERMINAL = ("DONE", "FAILED", "CANCELLED")
+
+
+class ElasticController:
+    """Samples load, issues ResizeOffers; owned by a :class:`Platform`."""
+
+    def __init__(self, platform: "Platform", poll_s: Optional[float] = None):
+        self.platform = platform
+        self.poll_s = poll_s  # None: never stepped by the wait loop
+        # policy switches: shrink-for-queue / grow-to-free.  A resize is a
+        # driver restart (yield + re-grant + resume), so callers measuring
+        # latency-sensitive mixes may run shrink-only
+        self.shrink_enabled = True
+        self.grow_enabled = True
+        self.offered: list[ResizeOffer] = []  # full offer history
+        self._last_step: Optional[float] = None
+
+    # -- signals --------------------------------------------------------
+    def sample(self) -> dict:
+        """Snapshot of every live job's load signal plus the pool shape."""
+        with self.platform._cond:
+            return self._sample_locked()
+
+    def _sample_locked(self) -> dict:
+        p = self.platform
+        rm = p.rm
+        with rm._lock:  # platform -> ResourceManager: the one legal order
+            return self._sample_pool_locked()
+
+    def _sample_pool_locked(self) -> dict:
+        p = self.platform
+        rm = p.rm
+        jobs = {}
+        for name, rec in p._records.items():
+            if rec.state in _TERMINAL:
+                continue
+            job = rm.jobs[name]
+            jobs[name] = {
+                "kind": rec.spec.kind,
+                "state": rec.state,
+                "devices": job.container.size if job.container else 0,
+                "wanted": rec.spec.devices,
+                "busy": self._busy(rec),
+                "load": dict(rec.driver_state.get("load") or {}),
+            }
+        return {
+            "jobs": jobs,
+            "free_runs": rm.free_runs(),
+            "pending": [
+                j.name for j in rm.jobs.values()
+                if j.state in (JOB_PENDING, JOB_PREEMPTED)
+                and j.name in p._records
+                and p._records[j.name].state not in _TERMINAL
+            ],
+        }
+
+    @staticmethod
+    def _busy(rec) -> float:
+        """Normalized 0..1 load published by the driver (0.5 when silent)."""
+        load = rec.driver_state.get("load") or {}
+        try:
+            return max(0.0, min(1.0, float(load.get("busy", 0.5))))
+        except (TypeError, ValueError):
+            return 0.5
+
+    # -- offers ---------------------------------------------------------
+    def offer(
+        self, name: str, target_devices: int, reason: str = "forced"
+    ) -> Optional[ResizeOffer]:
+        """Force a resize offer onto a running job's token.  Returns the
+        offer, or None when the job isn't offerable right now (no live
+        worker, non-elastic spec, driver without checkpoints, a stop already
+        racing in, or a no-op target)."""
+        with self.platform._cond:
+            return self._offer_locked(name, target_devices, reason)
+
+    def _offer_locked(
+        self, name: str, target_devices: int, reason: str
+    ) -> Optional[ResizeOffer]:
+        p = self.platform
+        rec = p._records.get(name)
+        worker = p._active.get(name)
+        if rec is None or worker is None or rec.state in _TERMINAL:
+            return None
+        if not (rec.accepts_token and rec.spec.elastic):
+            return None
+        token = worker.token
+        if token.should_stop() or token.pending_resize is not None:
+            return None
+        job = p.rm.jobs[name]
+        container = job.container  # snapshot: a foreign preempt may race
+        if job.state != JOB_RUNNING or container is None:
+            return None
+        target = max(rec.spec.resolved_min_devices(),
+                     min(int(target_devices), rec.spec.devices))
+        if target == container.size:
+            return None
+        offer = ResizeOffer(job=name, target_devices=target, reason=reason)
+        token.request_resize(offer)
+        rec.log(
+            f"resize offered: {container.size} -> {target} devices "
+            f"({reason})", p._clock(),
+        )
+        self.offered.append(offer)
+        return offer
+
+    # -- control loop ---------------------------------------------------
+    def maybe_step(self) -> list[ResizeOffer]:
+        """Rate-limited :meth:`step`, driven from the executor's wait loop
+        when the platform was built with ``elastic_poll_s``."""
+        if self.poll_s is None:
+            return []
+        now = time.monotonic()
+        if self._last_step is not None and now - self._last_step < self.poll_s:
+            return []
+        self._last_step = now
+        return self.step()
+
+    def step(self) -> list[ResizeOffer]:
+        """One control decision: shrink under queue pressure, else grow into
+        free space.  At most one offer per step (observability beats
+        convergence speed; the next poll continues the adjustment)."""
+        p = self.platform
+        issued: list[ResizeOffer] = []
+        with p._cond, p.rm._lock:  # platform -> ResourceManager order
+            rm = p.rm
+            candidates = []  # (busy, name) — offerable running tenants
+            for name, rec in p._records.items():
+                if rec.state in _TERMINAL or not (
+                    rec.accepts_token and rec.spec.elastic
+                ):
+                    continue
+                worker = p._active.get(name)
+                if worker is None or worker.token.should_stop() \
+                        or worker.token.pending_resize is not None:
+                    continue
+                job = rm.jobs[name]
+                if job.state != JOB_RUNNING or job.container is None:
+                    continue
+                candidates.append((self._busy(rec), name))
+            if not candidates:
+                return issued
+            free_runs = rm.free_runs()
+            max_free = max((length for _, length in free_runs), default=0)
+            unmet = [
+                j for j in rm.jobs.values()
+                if j.state in (JOB_PENDING, JOB_PREEMPTED)
+                and j.name in p._records
+                and p._records[j.name].state not in _TERMINAL
+                and j.min_devices > max_free
+            ]
+            if unmet:
+                if not self.shrink_enabled:
+                    return issued
+                # shrink: least busy first, then largest container, then name
+                for _, name in sorted(
+                    candidates,
+                    key=lambda bn: (bn[0], -rm.jobs[bn[1]].container.size,
+                                    bn[1]),
+                ):
+                    job = rm.jobs[name]
+                    target = max(job.min_devices, job.container.size // 2)
+                    if target >= job.container.size:
+                        continue  # already at its floor
+                    off = self._offer_locked(name, target, "shrink-for-queue")
+                    if off is not None:
+                        issued.append(off)
+                        break
+                return issued
+            # grow: busiest first, then name, into the adjacent free space
+            if not self.grow_enabled:
+                return issued
+            for busy, name in sorted(candidates, key=lambda bn: (-bn[0], bn[1])):
+                job = rm.jobs[name]
+                rec = p._records[name]
+                cur = job.container.size
+                if cur >= rec.spec.devices:
+                    continue
+                hypo = set(rm.free) | set(job.container.device_ids)
+                target = min(rec.spec.devices, rm._max_run(hypo))
+                if target <= cur:
+                    continue
+                # a resize costs a yield + re-grant; don't churn on
+                # half-step grows — wait until the grant at least doubles
+                # (or reaches the full request)
+                if target < min(rec.spec.devices, 2 * cur):
+                    continue
+                off = self._offer_locked(name, target, "grow-to-free")
+                if off is not None:
+                    issued.append(off)
+                    break
+        return issued

@@ -159,8 +159,14 @@ class TrainDriver:
                     if step_i >= cfg.steps:
                         break
                     if token is not None:
+                        # load signal for the elastic controller, then the
                         # cancellation point between steps; a preempt saves a
                         # durable checkpoint first so the resume loses no work
+                        token.state["load"] = {
+                            "kind": "train",
+                            "busy": 1.0 - step_i / max(cfg.steps, 1),
+                            "remaining_steps": cfg.steps - step_i,
+                        }
                         token.checkpoint(save=lambda: ckpt.save(
                             jax.device_get(state), step_i, durable=True
                         ))
@@ -291,17 +297,57 @@ class ScenarioJobConfig:
     num_shards: int = 1
     # checkpoint granularity: the shard rolls out in `chunks` scenario
     # slices with a cancellation point between them, and completed chunks
-    # survive preemption (scenarios are independent, so chunked == whole)
+    # survive preemption (scenarios are independent, so chunked == whole).
+    # `chunks` sets the slice size at the *requested* device count; an
+    # attempt on a resized container re-shards proportionally (see
+    # ScenarioDriver.run)
     chunks: int = 1
+
+
+@dataclasses.dataclass
+class _ScenarioCtx:
+    """Run context: the coerced config plus the spec's requested devices
+    (the baseline a resized grant's chunk size is scaled against)."""
+
+    cfg: ScenarioJobConfig
+    requested_devices: int
+
+
+def _scenario_gaps(n: int, done: dict) -> list[tuple[int, int]]:
+    """Scenario index ranges of [0, n) not covered by completed chunks.
+
+    ``done`` maps (lo, hi) offset ranges to their rollout metrics; ranges
+    never overlap (each attempt only rolls out gaps), so the uncovered
+    remainder is a simple sorted walk.
+    """
+    gaps: list[tuple[int, int]] = []
+    pos = 0
+    for lo, hi in sorted(done):
+        if lo > pos:
+            gaps.append((pos, lo))
+        pos = max(pos, hi)
+    if pos < n:
+        gaps.append((pos, n))
+    return gaps
 
 
 @register_driver
 class ScenarioDriver:
-    """One shard of a closed-loop scenario sweep (paper §3 simulation)."""
+    """One shard of a closed-loop scenario sweep (paper §3 simulation).
+
+    **Elastic re-sharding**: completed chunks are stored in ``token.state``
+    keyed by the *scenario index range* they cover, not by a chunk number —
+    so every resumed attempt is free to recompute its chunk boundaries from
+    the devices it was actually granted (a shrunk container takes
+    proportionally smaller bites, a re-grown one goes back to full-size
+    slices).  Scenarios are independent and ranges always partition the
+    shard, so the merged result is bitwise-identical however many resizes
+    happened along the way.
+    """
 
     kind = "scenario"
 
-    def prepare(self, spec: JobSpec) -> ScenarioJobConfig:
+    def prepare(self, spec: JobSpec) -> _ScenarioCtx:
         cfg = coerce_config(spec.config, ScenarioJobConfig)
         if not 0 <= cfg.shard_index < cfg.num_shards:
             raise ValueError(
@@ -313,14 +359,15 @@ class ScenarioDriver:
             raise ValueError(
                 f"unknown policy {cfg.policy!r}; known: {sorted(scenario_policies())}"
             )
-        return cfg
+        return _ScenarioCtx(cfg, max(1, spec.devices))
 
-    def run(self, container: Container, cfg: ScenarioJobConfig, token=None) -> dict:
+    def run(self, container: Container, ctx: _ScenarioCtx, token=None) -> dict:
         import jax
 
         from repro.scenario.runner import slice_batch
         from repro.scenario.world import rollout
 
+        cfg = ctx.cfg
         batch, names = _cached_build_batch(
             tuple(cfg.families) if cfg.families else None,
             cfg.per_family,
@@ -331,26 +378,38 @@ class ScenarioDriver:
         lo, hi = int(bounds[cfg.shard_index]), int(bounds[cfg.shard_index + 1])
         shard = slice_batch(batch, lo, hi)
         n = hi - lo
-        # completed chunks persist across preemptions in the token state;
-        # a resumed attempt rolls out only what is missing
+        # completed chunks persist across preemptions/resizes in the token
+        # state as (lo, hi) -> metrics; an attempt rolls out only the gaps
         state = token.state if token is not None else {}
-        done: dict = state.setdefault("chunks", {})
-        chunks = max(1, min(cfg.chunks, max(n, 1)))
-        cb = np.linspace(0, n, chunks + 1, dtype=int)
+        done: dict = state.setdefault("done", {})
+        # re-shard to the granted container: `chunks` slices at the full
+        # request, proportionally smaller ones on a shrunk grant (ceil, so a
+        # tiny grant still makes progress one scenario at a time)
+        base = -(-n // max(1, cfg.chunks))
+        per_chunk = max(1, -(-base * max(1, container.size)
+                             // ctx.requested_devices))
         t0 = time.perf_counter()
         try:
-            for ci in range(chunks):
-                if ci in done:
-                    continue
-                if token is not None:
-                    token.checkpoint()  # cancellation point between chunks
-                clo, chi = int(cb[ci]), int(cb[ci + 1])
-                m, _ = rollout(
-                    slice_batch(shard, clo, chi),
-                    scenario_policies()[cfg.policy],
-                    steps=cfg.steps, dt=cfg.dt, use_pallas=cfg.use_pallas,
-                )
-                done[ci] = jax.device_get(jax.block_until_ready(m))
+            for gap_lo, gap_hi in _scenario_gaps(n, done) or ([] if n else [(0, 0)]):
+                for clo in range(gap_lo, gap_hi, per_chunk) or [gap_lo]:
+                    chi = min(clo + per_chunk, gap_hi)
+                    if (clo, chi) in done:  # the synthetic empty-shard chunk
+                        continue
+                    if token is not None:
+                        remaining = n - sum(h - l for l, h in done)
+                        state["load"] = {
+                            "kind": "scenario",
+                            "busy": remaining / n if n else 0.0,
+                            "remaining": remaining,
+                            "total": n,
+                        }
+                        token.checkpoint()  # cancellation/resize point
+                    m, _ = rollout(
+                        slice_batch(shard, clo, chi),
+                        scenario_policies()[cfg.policy],
+                        steps=cfg.steps, dt=cfg.dt, use_pallas=cfg.use_pallas,
+                    )
+                    done[(clo, chi)] = jax.device_get(jax.block_until_ready(m))
         finally:
             # interrupted attempts count too, or the resumed attempt's
             # scenarios_per_sec would be inflated
@@ -358,7 +417,7 @@ class ScenarioDriver:
                 state.get("wall_s", 0.0) + time.perf_counter() - t0
             )
         wall = state["wall_s"]
-        parts = [done[ci] for ci in range(chunks)]
+        parts = [done[r] for r in sorted(done)]
         m = (
             parts[0]
             if len(parts) == 1
@@ -368,7 +427,7 @@ class ScenarioDriver:
         return {
             "scenarios": n,
             "steps": cfg.steps,
-            "chunks": chunks,
+            "chunks": len(done),
             "collision_rate": float(collided.mean()) if hi > lo else 0.0,
             "scenarios_per_sec": n / max(wall, 1e-9),
             "shard": f"{cfg.shard_index}/{cfg.num_shards}",
@@ -468,21 +527,32 @@ class MapGenDriver:
 # ---------------------------------------------------------------------------
 
 
+# gauges reflect the latest attempt; everything else accumulates
+_STAT_GAUGES = ("replicas", "replicas_alive", "cells", "cells_alive",
+                "replicas_per_cell")
+
+
 def _merge_router_stats(prev: Optional[dict], cur: dict) -> dict:
-    """Accumulate per-replica routing stats across a serve job's preempted/
-    resumed attempts (each attempt builds a fresh router); liveness fields
-    reflect the latest attempt."""
+    """Accumulate routing stats across a serve job's preempted/resumed
+    attempts (each attempt builds a fresh router/cell tier).  Counter lists
+    are padded to the longer shape — replica counts can differ between
+    attempts when autoscaling added/retired replicas mid-run."""
     if not prev:
         return cur
     merged = dict(cur)
-    merged["routed"] = [a + b for a, b in zip(prev["routed"], cur["routed"])]
-    merged["routed_tokens"] = [
-        a + b for a, b in zip(prev["routed_tokens"], cur["routed_tokens"])
-    ]
-    merged["rerouted"] = prev["rerouted"] + cur["rerouted"]
-    merged["replica_failures"] = (
-        prev["replica_failures"] + cur["replica_failures"]
-    )
+    for k, v in cur.items():
+        pv = prev.get(k)
+        if pv is None or k in _STAT_GAUGES:
+            continue
+        if isinstance(v, list):
+            if any(isinstance(x, (list, tuple)) for x in list(v) + list(pv)):
+                merged[k] = list(pv) + list(v)  # event lists concatenate
+            else:
+                width = max(len(pv), len(v))
+                pad = lambda xs: list(xs) + [0] * (width - len(xs))  # noqa: E731
+                merged[k] = [a + b for a, b in zip(pad(pv), pad(v))]
+        elif isinstance(v, (int, float)):
+            merged[k] = pv + v
     return merged
 
 
@@ -499,6 +569,17 @@ class ServeJobConfig:
     page_size: int = 16
     slots: int = 0  # continuous decode slots per replica (0 = batch)
     replicas: int = 1  # continuous engine replicas behind a JSQ router
+    # pool-level cell tier (continuous only): > 1 fans the tenant out over
+    # `cells` serve cells of `replicas` engines each behind a CellRouter
+    # (JSQ across cells, whole-cell failover)
+    cells: int = 1
+    # elastic replica scaling: sustained queue depth above/below the water
+    # marks adds/retires engine replicas mid-stream (per cell, hysteresis
+    # in serving.cell_router.advise_replicas); 0 disables
+    max_replicas: int = 0
+    scale_high_water: int = 32
+    scale_low_water: int = 0
+    scale_window: int = 3
     vocab: int = 512  # smoke-scale vocab (must match a ckpt's train job)
     seq: int = 512  # smoke-scale max_seq_len (match the train job's --seq
     #                 when restoring from ckpt_dir; params depend on it)
@@ -511,10 +592,16 @@ class ServeDriver:
 
     ``replicas > 1`` (continuous only) fans the tenant out over N engine
     replicas sharing the params, fronted by the join-shortest-queue
-    :class:`~repro.serving.router.ServeRouter`.  Interruptible between
-    engine steps: a preempt drains in-flight sequences into resumable
-    continuation requests stashed in the token state, so the resumed
-    attempt finishes them instead of starting over.
+    :class:`~repro.serving.router.ServeRouter`.  ``cells > 1`` adds the
+    pool-level tier: ``cells`` serve cells of ``replicas`` engines each
+    behind a :class:`~repro.serving.cell_router.CellRouter` (JSQ across
+    cells, whole-cell failover), and ``max_replicas > replicas`` turns on
+    sustained-queue-depth replica autoscaling inside each cell.
+    Interruptible between engine steps: a preempt drains in-flight
+    sequences into resumable continuation requests stashed in the token
+    state, so the resumed attempt finishes them instead of starting over,
+    and each checkpoint publishes the router's queue depth / live tokens
+    as the load signal the ElasticController samples.
     """
 
     kind = "serve"
@@ -527,6 +614,14 @@ class ServeDriver:
             raise ValueError(f"replicas must be >= 1, got {cfg.replicas}")
         if cfg.replicas > 1 and cfg.engine != "continuous":
             raise ValueError("replicas > 1 requires engine='continuous'")
+        if cfg.cells < 1:
+            raise ValueError(f"cells must be >= 1, got {cfg.cells}")
+        if cfg.cells > 1 and cfg.engine != "continuous":
+            raise ValueError("cells > 1 requires engine='continuous'")
+        if cfg.max_replicas and cfg.max_replicas < cfg.replicas:
+            raise ValueError(
+                f"max_replicas {cfg.max_replicas} below replicas {cfg.replicas}"
+            )
         return cfg
 
     def _params(self, cfg: ServeJobConfig, mcfg):
@@ -588,21 +683,49 @@ class ServeDriver:
             )
 
         if cfg.engine == "continuous":
+            import itertools
+
+            from repro.serving.cell_router import CellRouter, InProcessCell
             from repro.serving.continuous import ContinuousBatchingEngine
             from repro.serving.router import ServeRouter
             from repro.serving.scheduler import Request, token_latencies
 
-            engines = [
-                ContinuousBatchingEngine(
+            seeds = itertools.count(cfg.seed)
+
+            def make_engine():
+                # unique sampling seed per engine, including autoscaled ones
+                return ContinuousBatchingEngine(
                     mcfg, params,
                     num_slots=cfg.slots or B,
                     page_size=cfg.page_size,
                     max_len=S + cfg.gen,
-                    seed=cfg.seed + r,
+                    seed=next(seeds),
                 )
-                for r in range(cfg.replicas)
-            ]
-            router = ServeRouter(engines)
+
+            if cfg.cells > 1 or cfg.max_replicas > cfg.replicas:
+                # the pool-level tier: JSQ across cells, whole-cell
+                # failover, sustained-queue-depth replica autoscaling
+                cap = cfg.max_replicas or cfg.replicas
+                cells = [
+                    InProcessCell(
+                        f"cell{c}", make_engine,
+                        replicas=cfg.replicas, max_replicas=cap,
+                    )
+                    for c in range(cfg.cells)
+                ]
+                router = CellRouter(
+                    cells,
+                    autoscale=cfg.max_replicas > cfg.replicas,
+                    high_water=cfg.scale_high_water,
+                    low_water=cfg.scale_low_water,
+                    window=cfg.scale_window,
+                    min_replicas=cfg.replicas,  # never below the baseline
+                    max_replicas=cap,
+                )
+            else:
+                router = ServeRouter(
+                    [make_engine() for _ in range(cfg.replicas)]
+                )
             # a preempted attempt left its unfinished work as continuation
             # requests in the token state; completed outputs carry over too
             state = token.state if token is not None else {}
@@ -633,6 +756,14 @@ class ServeDriver:
             try:
                 while router.has_work():
                     if token is not None:
+                        # load signal the ElasticController samples: queued
+                        # depth + live tokens, and a normalized busy fraction
+                        state["load"] = {
+                            "kind": "serve",
+                            "busy": 1.0 - len(outs) / max(B, 1),
+                            "queue_depth": router.queue_depth(),
+                            "load_tokens": router.load_tokens(),
+                        }
                         # cancellation point between engine steps; a preempt
                         # drains in-flight sequences into resumable requests
                         token.checkpoint(save=preempt_save)

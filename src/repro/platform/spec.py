@@ -62,6 +62,7 @@ class JobReport:
     preemptions: int
     resumes: int
     retries: int  # container-failure resubmissions
+    resizes: int = 0  # accepted mid-run ResizeOffers (grow or shrink)
     checkpoints: int = 0  # driver cancellation points passed (all attempts)
     metrics: dict = dataclasses.field(default_factory=dict)  # service-specific
     # lifecycle trace, "+<t>s <what>" per transition
@@ -78,8 +79,8 @@ class JobReport:
             f"[{self.kind}/{self.name}] {self.state} "
             f"devices={self.devices_used} queue={self.queue_time_s:.2f}s "
             f"run={self.run_time_s:.2f}s preempt={self.preemptions} "
-            f"resume={self.resumes} retries={self.retries} "
-            f"checkpoints={self.checkpoints}"
+            f"resume={self.resumes} resizes={self.resizes} "
+            f"retries={self.retries} checkpoints={self.checkpoints}"
         )
         if self.error:
             line += f" error={self.error!r}"

@@ -1,0 +1,302 @@
+"""Pool-level serving tier: join-shortest-queue across serve *cells*.
+
+The per-job :class:`~repro.serving.router.ServeRouter` balances replicas
+inside one serve tenant; this module adds the tier above it.  A *cell* is a
+whole serve deployment (in the platform: one serve job — its engines, its
+replica router), and the :class:`CellRouter` is the pool's front door over
+N of them:
+
+* **JSQ on cell load** — a request goes to the alive cell with the
+  smallest ``load_tokens()`` (the cell's aggregate live+queued tokens),
+  ties to the lowest cell index so routing is deterministic for the
+  concurrency harness.
+* **Elastic replica scaling** — the router samples each cell's
+  ``queue_depth()`` every step; :func:`advise_replicas` (the same
+  hysteresis policy the platform's ElasticController applies) turns a
+  sustained high/low queue into a ``cell.scale_to(n)`` call, which adds or
+  retires engine replicas *mid-stream* (``ServeRouter.add_replica`` /
+  ``retire_replica`` keep surviving replica indices — and therefore JSQ
+  tie-breaks — stable through the churn).
+* **Whole-cell salvage** — a cell whose step raises (its last replica
+  died, its container was lost) is failed over: finished-but-undelivered
+  outputs are collected and its in-flight work (continuation requests:
+  prompt + generated so far) is rerouted across the surviving cells.
+  :meth:`salvage` is the same hook for work stranded by a cell *job*
+  preempted off the pool entirely.
+
+Cells are duck-typed (``submit / step / has_work / load_tokens /
+queue_depth / drain_continuations / scale_to / replicas``), so the
+deterministic tier tests run against fakes while
+:class:`InProcessCell` wraps real continuous engines for the serve driver
+and the ``launch.serve_cells`` CLI.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+from repro.serving.router import ServeRouter
+from repro.serving.scheduler import Request, RequestOutput, remaining_new_tokens
+
+
+class NoCellsAlive(RuntimeError):
+    """Every cell behind the pool router has failed."""
+
+
+def advise_replicas(
+    history: Sequence[int],
+    current: int,
+    *,
+    high_water: int = 32,
+    low_water: int = 0,
+    window: int = 3,
+    min_replicas: int = 1,
+    max_replicas: int = 4,
+) -> int:
+    """Hysteresis scale decision from a queue-depth history.
+
+    Only a *sustained* signal moves the replica count: depth above
+    ``high_water`` for the last ``window`` samples asks for one more
+    replica, depth at/below ``low_water`` for ``window`` samples asks for
+    one fewer — single-sample spikes change nothing, so the cell never
+    thrashes engines on bursty arrivals.
+    """
+    if window < 1 or len(history) < window:
+        return current
+    recent = list(history[-window:])
+    if all(d > high_water for d in recent) and current < max_replicas:
+        return current + 1
+    if all(d <= low_water for d in recent) and current > min_replicas:
+        return current - 1
+    return current
+
+
+class InProcessCell:
+    """One serve cell: a ServeRouter over engine replicas plus the factory
+    the autoscaler uses to build new ones."""
+
+    def __init__(
+        self,
+        name: str,
+        engine_factory: Callable[[], object],
+        *,
+        replicas: int = 1,
+        max_replicas: int = 4,
+    ):
+        if replicas < 1:
+            raise ValueError(f"cell needs >= 1 replica, got {replicas}")
+        self.name = name
+        self._factory = engine_factory
+        self.max_replicas = max(max_replicas, replicas)
+        self.router = ServeRouter([engine_factory() for _ in range(replicas)])
+
+    # -- elastic surface ------------------------------------------------
+    @property
+    def replicas(self) -> int:
+        return self.router.num_alive
+
+    def scale_to(self, n: int) -> int:
+        """Add or retire replicas until ``n`` are alive (clamped to
+        [1, max_replicas]); returns the resulting count."""
+        n = max(1, min(int(n), self.max_replicas))
+        while self.router.num_alive < n:
+            self.router.add_replica(self._factory())
+        while self.router.num_alive > n:
+            # retire the highest-indexed alive replica: earlier (longest-
+            # lived) replicas keep their tie-break rank
+            idx = max(i for i, a in enumerate(self.router.alive) if a)
+            self.router.retire_replica(idx)
+        return self.router.num_alive
+
+    # -- routing surface (delegated) ------------------------------------
+    def submit(self, req: Request) -> None:
+        self.router.submit(req)
+
+    def step(self, now: float = float("inf")) -> list[RequestOutput]:
+        return self.router.step(now)
+
+    def has_work(self) -> bool:
+        return self.router.has_work()
+
+    def load_tokens(self) -> int:
+        return self.router.load_tokens()
+
+    def queue_depth(self) -> int:
+        return self.router.queue_depth()
+
+    def drain_continuations(self) -> list[Request]:
+        return self.router.drain_continuations()
+
+    def drain_finished(self) -> list[RequestOutput]:
+        return self.router.drain_finished()
+
+    def stats(self) -> dict:
+        return self.router.stats()
+
+
+class CellRouter:
+    """JSQ + autoscale + salvage across N serve cells."""
+
+    def __init__(
+        self,
+        cells: Sequence,
+        *,
+        autoscale: bool = False,
+        high_water: int = 32,
+        low_water: int = 0,
+        window: int = 3,
+        min_replicas: int = 1,
+        max_replicas: int = 4,
+    ):
+        if not cells:
+            raise ValueError("cell router needs at least one cell")
+        self.cells = list(cells)
+        self.autoscale_enabled = autoscale
+        self.high_water = high_water
+        self.low_water = low_water
+        self.window = window
+        # the scale-down floor: a cell never retires below its configured
+        # baseline, so an idle window can't strip capacity the tenant asked
+        # for (retiring drains mid-decode sequences to survivors)
+        self.min_replicas = min_replicas
+        self.max_replicas = max_replicas
+        self.alive = [True] * len(self.cells)
+        self.routed = [0] * len(self.cells)
+        self.routed_tokens = [0] * len(self.cells)
+        self.salvaged = 0  # continuations moved off dead/preempted cells
+        self.failures: list[tuple[int, str]] = []  # (cell, error)
+        self.scale_events: list[tuple[int, int, int]] = []  # (cell, from, to)
+        self._depth_hist: list[list[int]] = [[] for _ in self.cells]
+
+    # ------------------------------------------------------------------
+    @property
+    def num_alive(self) -> int:
+        return sum(self.alive)
+
+    def load(self, i: int) -> int:
+        return int(self.cells[i].load_tokens())
+
+    def pick(self) -> int:
+        """Least-loaded alive cell; ties to the lowest index (cells keep
+        their indices for life, so the tie-break is stable under scaling
+        and failover)."""
+        alive = [i for i, a in enumerate(self.alive) if a]
+        if not alive:
+            raise NoCellsAlive(f"all {len(self.cells)} serve cells have failed")
+        return min(alive, key=lambda i: (self.load(i), i))
+
+    def submit(self, req: Request) -> int:
+        i = self.pick()
+        self.cells[i].submit(req)
+        self.routed[i] += 1
+        self.routed_tokens[i] += req.prompt_len + remaining_new_tokens(req)
+        return i
+
+    # ------------------------------------------------------------------
+    def salvage(self, conts: Sequence[Request]) -> int:
+        """Reroute continuations stranded on a lost cell (a dead cell here,
+        or a whole serve *job* preempted off the pool) across the
+        survivors; returns how many were replaced."""
+        for cont in conts:
+            self.submit(cont)  # raises NoCellsAlive when nothing is left
+            self.salvaged += 1
+        return len(conts)
+
+    def _fail_cell(self, i: int, err: Exception) -> list[RequestOutput]:
+        self.alive[i] = False
+        self.failures.append((i, f"{type(err).__name__}: {err}"))
+        cell = self.cells[i]
+        finished: list[RequestOutput] = []
+        drain_finished = getattr(cell, "drain_finished", None)
+        if drain_finished is not None:
+            try:
+                finished = drain_finished()
+            except Exception:
+                finished = []
+        try:
+            conts = cell.drain_continuations()
+        except Exception:  # cell host state gone too: its requests are lost
+            conts = []
+        try:
+            self.salvage(conts)
+        except NoCellsAlive:
+            raise NoCellsAlive(
+                f"all {len(self.cells)} serve cells have failed "
+                f"(last, cell {i}: {type(err).__name__}: {err})"
+            ) from err
+        return finished
+
+    def step(self, now: float = float("inf")) -> list[RequestOutput]:
+        """Advance every alive cell one step (scaling first when enabled);
+        cells that raise are failed over.  Returns completed requests."""
+        if self.autoscale_enabled:
+            self.autoscale()
+        outs: list[RequestOutput] = []
+        for i, cell in enumerate(self.cells):
+            if not self.alive[i] or not cell.has_work():
+                continue
+            try:
+                outs.extend(cell.step(now))
+            except Exception as e:  # noqa: BLE001 — whole-cell loss is the point
+                outs.extend(self._fail_cell(i, e))
+        return outs
+
+    def autoscale(self) -> list[tuple[int, int, int]]:
+        """Sample queue depth per cell and apply the hysteresis policy;
+        returns the (cell, from, to) scale events this pass produced."""
+        events = []
+        for i, cell in enumerate(self.cells):
+            if not self.alive[i]:
+                continue
+            self._depth_hist[i].append(int(cell.queue_depth()))
+            cur = int(cell.replicas)
+            want = advise_replicas(
+                self._depth_hist[i], cur,
+                high_water=self.high_water, low_water=self.low_water,
+                window=self.window, min_replicas=self.min_replicas,
+                max_replicas=self.max_replicas,
+            )
+            if want != cur:
+                cell.scale_to(want)
+                self._depth_hist[i].clear()  # new capacity: fresh window
+                events.append((i, cur, want))
+        self.scale_events.extend(events)
+        return events
+
+    # ------------------------------------------------------------------
+    def has_work(self) -> bool:
+        return any(
+            a and c.has_work() for a, c in zip(self.alive, self.cells)
+        )
+
+    def queue_depth(self) -> int:
+        return sum(
+            int(c.queue_depth()) for a, c in zip(self.alive, self.cells) if a
+        )
+
+    def load_tokens(self) -> int:
+        return sum(self.load(i) for i, a in enumerate(self.alive) if a)
+
+    def drain_continuations(self) -> list[Request]:
+        """Evict all in-flight work from every alive cell — the serve
+        driver's preempt-mid-run hand-off, one tier up."""
+        conts: list[Request] = []
+        for a, cell in zip(self.alive, self.cells):
+            if a:
+                conts.extend(cell.drain_continuations())
+        return conts
+
+    def stats(self) -> dict:
+        return {
+            "cells": len(self.cells),
+            "cells_alive": self.num_alive,
+            "routed": list(self.routed),
+            "routed_tokens": list(self.routed_tokens),
+            "salvaged": self.salvaged,
+            "cell_failures": len(self.failures),
+            "scale_events": [list(e) for e in self.scale_events],
+            "replicas_per_cell": [
+                int(getattr(c, "replicas", 1)) if a else 0
+                for a, c in zip(self.alive, self.cells)
+            ],
+        }

@@ -295,6 +295,11 @@ class ContinuousBatchingEngine:
             r.prompt_len for r in self.scheduler.pending
         )
 
+    def queue_depth(self) -> int:
+        """Requests waiting for a slot — the sustained-pressure signal
+        replica/cell autoscaling watches."""
+        return len(self.scheduler.pending)
+
     # ------------------------------------------------------------------
     # serving loop
     # ------------------------------------------------------------------

@@ -15,6 +15,12 @@ the admission point in front of them:
   instead of dropping requests.  With no replica left alive the router
   raises.
 
+* **Replica churn** — ``add_replica`` appends and ``retire_replica`` marks
+  a slot dead after draining it, so surviving replicas keep their indices:
+  the JSQ tie-break order for untouched replicas is unchanged through an
+  elastic scale up/down mid-stream (the cell tier in
+  ``serving.cell_router`` scales cells this way on sustained queue depth).
+
 The router is duck-typed over its replicas (``submit/step/has_work/
 load_tokens/drain_continuations``), so the deterministic routing tests run
 against lightweight fakes while the serve driver runs real engines.
@@ -41,12 +47,50 @@ class ServeRouter:
         self.routed = [0] * len(self.replicas)  # requests admitted per replica
         self.routed_tokens = [0] * len(self.replicas)  # prompt+gen budget routed
         self.rerouted = 0  # continuations moved off dead replicas
+        self.retired = 0  # replicas removed by a scale-down
+        self.rebalanced = 0  # continuations moved off retired replicas
         self.failures: list[tuple[int, str]] = []  # (replica, error)
+        # continuations that could not be rerouted because every replica was
+        # already dead: kept for a cell-level tier to salvage
+        self.stranded: list[Request] = []
+        # outputs finished inside a step() that then raised (failover):
+        # survive the exception so they can still be delivered
+        self._pending_outputs: list[RequestOutput] = []
 
     # ------------------------------------------------------------------
     @property
     def num_alive(self) -> int:
         return sum(self.alive)
+
+    # -- replica churn (elastic scale up/down) --------------------------
+    def add_replica(self, engine) -> int:
+        """Scale up mid-stream: the new replica is *appended*, so existing
+        replica indices — and therefore :meth:`pick`'s deterministic
+        tie-break ordering for untouched replicas — are unchanged.  Returns
+        the new replica's index."""
+        self.replicas.append(engine)
+        self.alive.append(True)
+        self.routed.append(0)
+        self.routed_tokens.append(0)
+        return len(self.replicas) - 1
+
+    def retire_replica(self, i: int) -> list[Request]:
+        """Scale down mid-stream: drain replica ``i``'s in-flight work and
+        reroute it to the survivors.  The slot stays in place (marked not
+        alive) rather than being popped, so the remaining replicas keep
+        their indices and JSQ tie-breaks stay deterministic through churn.
+        Returns the rebalanced continuations."""
+        if not self.alive[i]:
+            return []
+        if self.num_alive <= 1:
+            raise ValueError("cannot retire the last alive replica")
+        self.alive[i] = False
+        self.retired += 1
+        conts = self.replicas[i].drain_continuations()
+        for cont in conts:
+            self.submit(cont)
+            self.rebalanced += 1
+        return conts
 
     def load(self, i: int) -> int:
         return int(self.replicas[i].load_tokens())
@@ -88,11 +132,14 @@ class ServeRouter:
             salvaged = eng.drain_continuations()
         except Exception:  # host state corrupted too: those requests are lost
             salvaged = []
-        for cont in salvaged:
+        for k, cont in enumerate(salvaged):
             try:
                 self.submit(cont)
             except NoReplicasAlive:
-                # surface the root cause, not just the capacity exhaustion
+                # nowhere to put the rest of the salvage: strand it for a
+                # cell-level tier, and surface the root cause rather than
+                # just the capacity exhaustion
+                self.stranded.extend(salvaged[k:])
                 raise NoReplicasAlive(
                     f"all {len(self.replicas)} serve replicas have failed "
                     f"(last, replica {i}: {type(err).__name__}: {err})"
@@ -103,7 +150,10 @@ class ServeRouter:
     def step(self, now: float = float("inf")) -> list[RequestOutput]:
         """Advance every alive replica one engine step; replicas that raise
         are failed over.  Returns requests completed during this step."""
-        outs: list[RequestOutput] = []
+        # accumulate into the instance buffer so completions survive a
+        # failover that itself raises (all replicas dead): a cell tier can
+        # still drain_finished() them off this router
+        outs = self._pending_outputs
         for i, eng in enumerate(self.replicas):
             if not self.alive[i] or not eng.has_work():
                 continue
@@ -111,20 +161,48 @@ class ServeRouter:
                 outs.extend(eng.step(now))
             except Exception as e:  # noqa: BLE001 — a replica dying is the point
                 outs.extend(self._fail_replica(i, e))
+        self._pending_outputs = []
         return outs
+
+    def drain_finished(self) -> list[RequestOutput]:
+        """Outputs completed by a step() that raised before returning — a
+        cell tier collects these when failing a whole cell over."""
+        finished, self._pending_outputs = self._pending_outputs, []
+        return finished
 
     def has_work(self) -> bool:
         return any(
             a and eng.has_work() for a, eng in zip(self.alive, self.replicas)
         )
 
+    def queue_depth(self) -> int:
+        """Requests queued (not yet in a decode slot) across alive replicas
+        — the sustained-pressure signal cell-level autoscaling watches."""
+        depth = 0
+        for a, eng in zip(self.alive, self.replicas):
+            qd = getattr(eng, "queue_depth", None)
+            if a and qd is not None:
+                depth += int(qd())
+        return depth
+
+    def load_tokens(self) -> int:
+        """Aggregate live-token load across alive replicas — this router's
+        own JSQ signal when it sits behind a pool-level cell router."""
+        return sum(
+            self.load(i) for i, a in enumerate(self.alive) if a
+        )
+
     def drain_continuations(self) -> list[Request]:
-        """Evict all in-flight work from every alive replica as resumable
-        requests (the serve driver's preempt-mid-run hand-off)."""
+        """Evict all in-flight work from every alive replica (plus anything
+        stranded by a total failure) as resumable requests — the hand-off
+        the serve driver's preempt-mid-run path and whole-cell salvage use.
+        """
         conts: list[Request] = []
         for a, eng in zip(self.alive, self.replicas):
             if a:
                 conts.extend(eng.drain_continuations())
+        conts.extend(self.stranded)
+        self.stranded = []
         return conts
 
     def _trace_gap(self, now: float) -> float:
@@ -164,5 +242,7 @@ class ServeRouter:
             "routed": list(self.routed),
             "routed_tokens": list(self.routed_tokens),
             "rerouted": self.rerouted,
+            "retired": self.retired,
+            "rebalanced": self.rebalanced,
             "replica_failures": len(self.failures),
         }

@@ -117,6 +117,103 @@ def exercise_allocator(alloc, ops, page_size: int = 8) -> dict[int, int]:
 
 
 # ---------------------------------------------------------------------------
+# ResourceManager model checker (shared by the hypothesis property tests in
+# test_pool_props.py and the seeded fuzz twin in test_concurrency.py):
+# random submit/complete/fail/resize/heal sequences must never claim a
+# device twice and must keep free + claimed + quarantined == pool
+# ---------------------------------------------------------------------------
+
+
+def check_pool_invariants(rm) -> None:
+    from repro.core.scheduler import JOB_RUNNING
+
+    claimed = [d for c in rm.containers.values() for d in c.device_ids]
+    # no device is ever claimed by two containers
+    assert len(claimed) == len(set(claimed)), "device claimed twice"
+    claimed_set = set(claimed)
+    # every device is exactly one of {free, claimed, quarantined}
+    assert not (rm.free & claimed_set), "device both free and claimed"
+    assert not (rm.free & rm.quarantined), "device both free and quarantined"
+    assert not (claimed_set & rm.quarantined), "quarantined device claimed"
+    assert rm.free | claimed_set | rm.quarantined == set(range(rm.total)), \
+        "free + claimed + quarantined != pool"
+    # containers are contiguous and job<->container links are a bijection
+    for c in rm.containers.values():
+        ids = c.device_ids
+        assert ids == tuple(range(ids[0], ids[0] + len(ids))), \
+            "container not contiguous"
+        if c.job is not None:
+            assert rm.jobs[c.job].container is c, "dangling container->job"
+    for job in rm.jobs.values():
+        if job.state == JOB_RUNNING:
+            assert job.container is not None, "RUNNING job without container"
+            assert job.min_devices <= job.container.size <= max(
+                job.devices, job.min_devices
+            ), "container size outside [min_devices, devices]"
+        else:
+            assert job.container is None, f"{job.state} job holds a container"
+
+
+def exercise_pool(rm, ops) -> None:
+    """Apply ``(op, arg)`` steps — op in submit/complete/fail/resize/heal —
+    to a ResourceManager, checking invariants after each.  ``arg`` indexes
+    deterministically into whatever jobs are eligible for the op."""
+    from repro.core.scheduler import (
+        JOB_DONE,
+        JOB_FAILED,
+        JOB_PENDING,
+        JOB_PREEMPTED,
+        JOB_RUNNING,
+        Job,
+    )
+
+    def nth(states, i):
+        live = sorted(
+            j.name for j in rm.jobs.values() if j.state in states
+        )
+        return live[i % len(live)] if live else None
+
+    n_submitted = 0
+    for op, arg in ops:
+        if op == "submit":
+            devices = 1 << (arg % 4)  # 1, 2, 4, 8
+            n_submitted += 1
+            rm.submit(Job(
+                f"j{n_submitted}", "stub", devices=devices,
+                min_devices=1 if arg % 3 else devices,
+                priority=arg % 5,
+            ))
+        elif op == "complete":
+            name = nth((JOB_RUNNING, JOB_PENDING, JOB_PREEMPTED), arg)
+            if name is not None:
+                rm.complete(name, state=JOB_FAILED if arg % 7 == 0 else JOB_DONE)
+        elif op == "fail":
+            name = nth((JOB_RUNNING,), arg)
+            if name is not None:
+                job = rm.jobs[name]
+                rm.fail_container(
+                    name, dead_devices=1 + arg % job.container.size
+                )
+        elif op == "resize":
+            name = nth((JOB_RUNNING,), arg)
+            if name is not None:
+                rm.resize(name, 1 << (arg % 4))
+        elif op == "heal":
+            rm.heal()
+        else:  # pragma: no cover — strategy/harness bug
+            raise ValueError(f"unknown op {op!r}")
+        check_pool_invariants(rm)
+    # teardown: completing everything returns the pool whole (minus
+    # quarantine), with nothing claimed
+    for name in sorted(rm.jobs):
+        if rm.jobs[name].state not in (JOB_DONE, JOB_FAILED):
+            rm.complete(name)
+        check_pool_invariants(rm)
+    assert not rm.containers, "containers leaked after teardown"
+    assert rm.free | rm.quarantined == set(range(rm.total))
+
+
+# ---------------------------------------------------------------------------
 # Fake serving replicas for deterministic router tests (duck-typed against
 # ContinuousBatchingEngine's router surface)
 # ---------------------------------------------------------------------------
@@ -141,6 +238,9 @@ class FakeReplica:
             r.prompt_len + r.max_new_tokens for r in self.queue
         )
 
+    def queue_depth(self) -> int:
+        return len(self.queue)
+
     def has_work(self) -> bool:
         return bool(self.queue)
 
@@ -162,3 +262,39 @@ class FakeReplica:
     def drain_continuations(self):
         drained, self.queue = self.queue, []
         return drained
+
+
+class FakeCell(FakeReplica):
+    """A fake serve *cell*: FakeReplica's routing surface plus the
+    ``replicas``/``scale_to`` knob the pool-level CellRouter drives.  Each
+    step drains ``replicas`` queued requests, so scaling visibly changes
+    throughput in deterministic tests."""
+
+    def __init__(self, base_load: int = 0, fail_on_step: int = 0,
+                 replicas: int = 1):
+        super().__init__(base_load, fail_on_step)
+        self.replicas = replicas
+        self.scale_calls: list[int] = []
+
+    def scale_to(self, n: int) -> int:
+        self.scale_calls.append(n)
+        self.replicas = max(1, int(n))
+        return self.replicas
+
+    def step(self, now: float = float("inf")):
+        self.steps += 1
+        if self.fail_on_step and self.steps >= self.fail_on_step:
+            raise RuntimeError("injected cell death")
+        outs = []
+        from repro.serving.scheduler import RequestOutput
+
+        for _ in range(min(self.replicas, len(self.queue))):
+            req = self.queue.pop(0)
+            out = RequestOutput(
+                rid=req.rid, prompt_len=req.prompt_len,
+                tokens=list(range(req.max_new_tokens)),
+                arrival_time=req.arrival_time, token_times=[0.0],
+            )
+            self.completed.append(out)
+            outs.append(out)
+        return outs

@@ -16,6 +16,7 @@ except ImportError:
         "test_binpipe.py",
         "test_moe.py",
         "test_paged_cache_props.py",
+        "test_pool_props.py",
         "test_tiered_store.py",
     ]
 

@@ -1,0 +1,215 @@
+"""Deterministic tests for the pool-level serve-cell tier and for
+ServeRouter replica churn — every interleaving is sequential fake-driven,
+so the suite runs in the ``-m concurrency`` CI tier (20x, no sleeps)."""
+
+import numpy as np
+import pytest
+
+from concurrency_utils import FakeCell, FakeReplica
+from repro.serving.cell_router import (
+    CellRouter,
+    NoCellsAlive,
+    advise_replicas,
+)
+from repro.serving.router import ServeRouter
+from repro.serving.scheduler import Request
+
+pytestmark = pytest.mark.concurrency
+
+
+def _req(rid, prompt=8, gen=8):
+    return Request(rid=rid, tokens=np.zeros((prompt,), np.int32),
+                   max_new_tokens=gen)
+
+
+def _drain(router):
+    outs = []
+    while router.has_work():
+        outs.extend(router.step())
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# advise_replicas: the hysteresis policy shared with the ElasticController
+# ---------------------------------------------------------------------------
+
+
+def test_advise_replicas_needs_a_sustained_signal():
+    kw = dict(high_water=4, low_water=0, window=3, max_replicas=4)
+    # a spike is not a trend
+    assert advise_replicas([9], 1, **kw) == 1
+    assert advise_replicas([9, 9], 1, **kw) == 1
+    assert advise_replicas([0, 9, 9], 1, **kw) == 1
+    # three consecutive samples above the high water mark scale up
+    assert advise_replicas([9, 9, 9], 1, **kw) == 2
+    assert advise_replicas([0, 9, 9, 9], 1, **kw) == 2
+    # sustained idle scales down, never below the floor
+    assert advise_replicas([0, 0, 0], 3, **kw) == 2
+    assert advise_replicas([0, 0, 0], 1, **kw) == 1
+    # the ceiling holds
+    assert advise_replicas([9, 9, 9], 4, **kw) == 4
+    # mixed signal: hold
+    assert advise_replicas([9, 0, 9], 2, **kw) == 2
+
+
+# ---------------------------------------------------------------------------
+# JSQ across cells
+# ---------------------------------------------------------------------------
+
+
+def test_jsq_routes_to_least_loaded_cell_deterministically():
+    router = CellRouter([FakeCell(base_load=100), FakeCell(),
+                         FakeCell(base_load=50)])
+    picks = [router.submit(_req(i)) for i in range(6)]
+    # same JSQ + lowest-index tie-break the replica router uses
+    assert picks == [1, 1, 1, 1, 2, 1]
+    assert router.routed == [0, 5, 1]
+    assert router.routed_tokens == [0, 80, 16]
+
+
+def test_cell_indices_are_stable_for_life():
+    """A failed cell keeps its index; the survivors' tie-break order never
+    shifts underneath queued work."""
+    cells = [FakeCell(), FakeCell(fail_on_step=1), FakeCell()]
+    router = CellRouter(cells)
+    for i in range(3):
+        router.submit(_req(i))  # round-robin by tie-break: 0, 1, 2
+    assert router.routed == [1, 1, 1]
+    _drain(router)
+    assert router.alive == [True, False, True]
+    # post-failure routing still prefers the lowest alive index on ties
+    assert router.submit(_req(10)) == 0
+    assert router.submit(_req(11)) == 2
+    assert router.submit(_req(12)) == 0
+
+
+# ---------------------------------------------------------------------------
+# whole-cell failure and salvage
+# ---------------------------------------------------------------------------
+
+
+def test_cell_failure_salvages_queue_to_survivors():
+    bad, good = FakeCell(fail_on_step=1), FakeCell()
+    router = CellRouter([bad, good])
+    for i in range(6):
+        router.submit(_req(i))
+    outs = _drain(router)
+    assert sorted(o.rid for o in outs) == list(range(6))
+    assert router.alive == [False, True]
+    assert router.salvaged > 0 and len(router.failures) == 1
+    assert all(o.rid in {c.rid for c in good.completed} for o in outs)
+
+
+def test_all_cells_dead_raises():
+    router = CellRouter([FakeCell(fail_on_step=1)])
+    router.submit(_req(0))
+    with pytest.raises(NoCellsAlive):
+        _drain(router)
+
+
+def test_salvage_reroutes_preempted_cell_work():
+    """The whole-cell preemption hook: continuations stranded when a serve
+    job lost its container are replayed across the surviving cells."""
+    router = CellRouter([FakeCell(), FakeCell()])
+    stranded = [_req(i) for i in range(4)]
+    assert router.salvage(stranded) == 4
+    assert router.salvaged == 4
+    assert router.routed == [2, 2]  # JSQ-spread, not dumped on one cell
+    outs = _drain(router)
+    assert sorted(o.rid for o in outs) == list(range(4))
+
+
+# ---------------------------------------------------------------------------
+# autoscaling on sustained queue depth
+# ---------------------------------------------------------------------------
+
+
+def test_autoscale_scales_up_on_sustained_depth_and_back_down():
+    cell = FakeCell()
+    router = CellRouter([cell], autoscale=True, high_water=2, low_water=0,
+                        window=2, max_replicas=3)
+    for i in range(12):
+        router.submit(_req(i))
+    outs = _drain(router)
+    assert sorted(o.rid for o in outs) == list(range(12))
+    # the backlog (12 deep, 1 request/step capacity) scaled the cell up...
+    up = [e for e in router.scale_events if e[2] > e[1]]
+    assert up and up[0][0] == 0
+    assert max(cell.scale_calls) >= 2
+    assert cell.scale_calls[0] == 2  # one step at a time, no jumps
+    peak = cell.replicas
+    # ...and a sustained idle window scales it back toward the floor
+    router.autoscale()
+    router.autoscale()
+    down = [e for e in router.scale_events if e[2] < e[1]]
+    assert down, router.scale_events
+    assert cell.replicas == peak - 1
+
+
+def test_autoscale_ignores_single_sample_spikes():
+    cell = FakeCell()
+    router = CellRouter([cell], autoscale=True, high_water=2, low_water=-1,
+                        window=3, max_replicas=3)
+    for i in range(4):
+        router.submit(_req(i))
+    router.step()  # depth sampled once above the water mark
+    assert router.scale_events == []  # not sustained yet
+    assert cell.scale_calls == []
+
+
+# ---------------------------------------------------------------------------
+# ServeRouter replica churn: tie-break determinism (FakeReplica twin of the
+# real-engine test in test_serving.py)
+# ---------------------------------------------------------------------------
+
+
+def test_add_replica_keeps_untouched_replica_assignments():
+    """Scaling up mid-stream must not move or reorder work already queued
+    on existing replicas, and ties must still resolve by (load, index)."""
+    a, b = FakeReplica(), FakeReplica()
+    router = ServeRouter([a, b])
+    picks = [router.submit(_req(i)) for i in range(4)]
+    assert picks == [0, 1, 0, 1]
+    before = ([r.rid for r in a.queue], [r.rid for r in b.queue])
+    c = FakeReplica()
+    assert router.add_replica(c) == 2
+    # untouched replicas: identical queues, identical order
+    assert ([r.rid for r in a.queue], [r.rid for r in b.queue]) == before
+    # the empty newcomer absorbs new load; ties fall back to lowest index
+    assert router.submit(_req(4)) == 2
+    assert router.submit(_req(5)) == 2
+    assert router.submit(_req(6)) == 0
+    outs = _drain(router)
+    assert sorted(o.rid for o in outs) == list(range(7))
+    # each untouched replica completed exactly its original assignment
+    assert [o.rid for o in a.completed] == [0, 2, 6]
+    assert [o.rid for o in b.completed] == [1, 3]
+
+
+def test_retire_replica_rebalances_without_touching_survivors():
+    a, b, c = FakeReplica(), FakeReplica(), FakeReplica()
+    router = ServeRouter([a, b, c])
+    for i in range(6):
+        router.submit(_req(i))  # round-robin: a=[0,3] b=[1,4] c=[2,5]
+    conts = router.retire_replica(1)
+    assert [r.rid for r in conts] == [1, 4]
+    assert router.alive == [True, False, True]
+    assert router.retired == 1 and router.rebalanced == 2
+    # survivors keep their original queues (order intact), plus the
+    # JSQ-rebalanced refugees
+    assert [r.rid for r in a.queue] == [0, 3, 1]
+    assert [r.rid for r in c.queue] == [2, 5, 4]
+    outs = _drain(router)
+    assert sorted(o.rid for o in outs) == list(range(6))
+    # the retired slot keeps its index: routing skips it deterministically
+    assert router.submit(_req(9)) == 0
+    assert router.retire_replica(1) == []  # already retired: no-op
+    router.retire_replica(0)  # allowed: c remains
+    with pytest.raises(ValueError, match="last alive"):
+        router.retire_replica(2)
+
+
+def test_retiring_last_alive_replica_is_refused():
+    router = ServeRouter([FakeReplica()])
+    with pytest.raises(ValueError, match="last alive"):
+        router.retire_replica(0)

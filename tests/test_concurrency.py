@@ -14,7 +14,13 @@ import threading
 import numpy as np
 import pytest
 
-from concurrency_utils import FakeReplica, Gate, VirtualClock, exercise_allocator
+from concurrency_utils import (
+    FakeReplica,
+    Gate,
+    VirtualClock,
+    exercise_allocator,
+    exercise_pool,
+)
 from repro.platform import (
     CANCELLED,
     DONE,
@@ -445,6 +451,24 @@ def test_all_replicas_dead_raises():
 # BlockAllocator seeded fuzz (the hypothesis twin lives in
 # test_paged_cache_props.py and shares exercise_allocator)
 # ---------------------------------------------------------------------------
+
+
+def test_resource_pool_seeded_fuzz_invariants():
+    """Seeded twin of test_pool_props.py: random submit/complete/fail/
+    resize/heal sequences never double-claim a device and always keep
+    free + claimed + quarantined == pool."""
+    from repro.core.scheduler import ResourceManager
+
+    rng = np.random.default_rng(13)
+    for _ in range(10):
+        rm = ResourceManager(int(rng.integers(1, 13)))
+        ops = [
+            (str(rng.choice(["submit", "submit", "complete", "fail",
+                             "resize", "resize", "heal"])),
+             int(rng.integers(0, 64)))
+            for _ in range(50)
+        ]
+        exercise_pool(rm, ops)
 
 
 def test_block_allocator_seeded_fuzz_invariants():

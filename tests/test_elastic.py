@@ -1,0 +1,403 @@
+"""Elastic control plane: ResourceManager.resize, forced and load-driven
+ResizeOffers through the CheckpointToken protocol, driver re-sharding
+determinism, wait() deadlines, and the pool-derived launch helpers."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from concurrency_utils import Gate, check_pool_invariants
+from repro.core.scheduler import Job, ResourceManager
+from repro.platform import (
+    DONE,
+    ExecutorHooks,
+    JobSpec,
+    JobTimeout,
+    Platform,
+    register_driver,
+    unregister_driver,
+)
+
+
+@pytest.fixture
+def stub(request):
+    """Register a throwaway token-accepting driver kind; unregister after."""
+
+    registered = []
+
+    def make(kind="stub", run_fn=None):
+        class Stub:
+            def prepare(self, spec):
+                return spec.config
+
+            def run(self, container, cfg, token=None):
+                if run_fn is None:
+                    return {"ok": 1}
+                return run_fn(container, cfg, token)
+
+        Stub.kind = kind
+        Stub.__name__ = f"Stub_{kind}"
+        register_driver(Stub)
+        registered.append(kind)
+        return Stub
+
+    yield make
+    for kind in registered:
+        unregister_driver(kind)
+
+
+# ---------------------------------------------------------------------------
+# ResourceManager.resize: the commit half of an accepted offer
+# ---------------------------------------------------------------------------
+
+
+def test_rm_resize_shrink_frees_devices_for_the_queue():
+    rm = ResourceManager(8)
+    rm.submit(Job("big", "stub", devices=8, min_devices=1))
+    rm.submit(Job("queued", "stub", devices=4, min_devices=4))
+    assert rm.jobs["queued"].state == "PENDING"
+    c = rm.resize("big", 4)
+    check_pool_invariants(rm)
+    assert c is not None and c.size == 4
+    assert rm.jobs["big"].resizes == 1
+    # the freed half went straight to the queued tenant
+    assert rm.jobs["queued"].state == "RUNNING"
+    assert rm.jobs["queued"].container.size == 4
+
+
+def test_rm_resize_grow_absorbs_adjacent_free_run():
+    rm = ResourceManager(8)
+    rm.submit(Job("job", "stub", devices=8, min_devices=1))
+    assert rm.resize("job", 2).size == 2
+    check_pool_invariants(rm)
+    c = rm.resize("job", 8)
+    check_pool_invariants(rm)
+    assert c is not None and c.size == 8
+    assert rm.jobs["job"].resizes == 2
+    assert not rm.free
+
+
+def test_rm_resize_clamps_and_noops():
+    rm = ResourceManager(8)
+    rm.submit(Job("job", "stub", devices=4, min_devices=2))
+    # beyond the desired size clamps to it; below the floor clamps up
+    assert rm.resize("job", 16).size == 4  # was 4 -> returns the container
+    assert rm.jobs["job"].resizes == 0  # no-op target: nothing happened
+    assert rm.resize("job", 1).size == 2
+    assert rm.jobs["job"].resizes == 1
+    check_pool_invariants(rm)
+    # non-running jobs are not resizable
+    rm.complete("job")
+    assert rm.resize("job", 4) is None
+
+
+def test_rm_free_runs_reports_contiguous_shape():
+    rm = ResourceManager(8)
+    assert rm.free_runs() == [(0, 8)]
+    rm.submit(Job("a", "stub", devices=2, min_devices=2))
+    rm.submit(Job("b", "stub", devices=2, min_devices=2))
+    rm.complete("a")
+    assert rm.free_runs() == [(0, 2), (4, 4)]
+
+
+# ---------------------------------------------------------------------------
+# forced offers through the token protocol (deterministic via hooks)
+# ---------------------------------------------------------------------------
+
+
+def _sized_unit_driver(units=6):
+    """Records the container size of every attempt; `units` checkpoints."""
+
+    def run(container, cfg, token):
+        token.state.setdefault("sizes", []).append(container.size)
+        done = token.state.setdefault("done", [])
+        for u in range(units):
+            if u in done:
+                continue
+            token.checkpoint()
+            done.append(u)
+        return {"sizes": token.state["sizes"], "units": list(done)}
+
+    return run
+
+
+def test_forced_resize_offers_regrant_midrun(stub):
+    """4 -> 2 -> 4: each offer is accepted at the next checkpoint, the
+    driver resumes on the re-granted container with its state intact, and
+    every unit of work still runs exactly once."""
+    stub("elasticjob", run_fn=_sized_unit_driver(units=6))
+    p = Platform(total_devices=4)
+
+    def force(name, token):
+        done = len(token.state.get("done", []))
+        plan = token.state.setdefault("plan", [])
+        if done == 2 and 2 not in plan:
+            plan.append(2)
+            assert p.elastic.offer(name, 2) is not None
+        elif done == 4 and 4 not in plan:
+            plan.append(4)
+            assert p.elastic.offer(name, 4) is not None
+
+    p.hooks = ExecutorHooks(checkpoint=force)
+    rep = p.wait(p.submit(JobSpec(
+        kind="elasticjob", name="job", devices=4, min_devices=1,
+    )), timeout_s=30.0)
+    assert rep.state == DONE
+    assert rep.resizes == 2
+    assert rep.metrics["sizes"] == [4, 2, 4]
+    assert rep.metrics["units"] == list(range(6))  # exactly once each
+    evs = " ".join(rep.events)
+    assert "resize offered: 4 -> 2" in evs and "resize offered: 2 -> 4" in evs
+    assert "accepted resize offer" in evs and "re-granted container" in evs
+    assert rep.preemptions == 0  # resize is not a preemption
+    assert p.rm.jobs["job"].container is None  # released on completion
+    assert len(p.rm.free) == 4
+
+
+def test_offer_validation_rejects_unofferable_jobs(stub):
+    hold = Gate("release rigid")
+
+    def run(container, cfg, token):
+        cfg["at_work"].open()
+        hold.wait()
+        return {}
+
+    stub("rigid", run_fn=run)
+    stub("tokenless")
+    p = Platform(total_devices=4)
+    at_work = Gate("rigid at work")
+    rigid = p.submit(JobSpec(kind="rigid", config={"at_work": at_work},
+                             devices=4, elastic=False))
+    waiter = threading.Thread(
+        target=lambda: p.wait(rigid, timeout_s=30.0), daemon=True
+    )
+    waiter.start()
+    at_work.wait()
+    # non-elastic spec: never offered
+    assert p.elastic.offer(rigid, 2) is None
+    # unknown / queued jobs: never offered
+    queued = p.submit(JobSpec(kind="tokenless", devices=4))
+    assert p.elastic.offer(queued, 2) is None
+    hold.open()
+    waiter.join(30.0)
+    assert not waiter.is_alive()
+    p.wait([rigid, queued], timeout_s=30.0)
+    assert p.elastic.offer(rigid, 2) is None  # terminal
+
+
+# ---------------------------------------------------------------------------
+# load-driven policy: shrink under queue pressure, grow into free space
+# ---------------------------------------------------------------------------
+
+
+def test_controller_shrinks_for_queue_then_grows_back(stub):
+    """Deterministic end-to-end control loop, stepped manually: a queued
+    rigid tenant triggers a shrink offer on the running elastic tenant; once
+    the queued tenant finishes, the next step offers the grow back."""
+    at = {i: Gate(f"at checkpoint {i}") for i in range(1, 9)}
+    go = {i: Gate(f"release checkpoint {i}") for i in range(1, 9)}
+    counter = {"n": 0}
+
+    def pace(name, token):
+        if name != "big":
+            return
+        counter["n"] += 1
+        i = counter["n"]
+        if i in at:
+            at[i].open()
+            go[i].wait()
+
+    stub("big", run_fn=_sized_unit_driver(units=6))
+    stub("quick")
+    p = Platform(total_devices=8, hooks=ExecutorHooks(checkpoint=pace))
+    big = p.submit(JobSpec(kind="big", name="big", devices=8, min_devices=2))
+    waiter = threading.Thread(
+        target=lambda: p.wait(big, timeout_s=60.0), daemon=True
+    )
+    waiter.start()
+    at[1].wait()  # big is mid-run holding all 8 devices
+
+    # no pressure, nothing shrunk: the controller stays quiet
+    assert p.elastic.step() == []
+
+    quick = p.submit(JobSpec(kind="quick", name="quick", devices=4,
+                             elastic=False))
+    assert p.status(quick) == "PENDING"
+    offers = p.elastic.step()
+    assert [o.target_devices for o in offers] == [4]
+    assert offers[0].reason == "shrink-for-queue"
+    assert p.elastic.step() == []  # offer pending: no double-issue
+    go[1].open()  # big accepts at its next checkpoint -> quick runs
+    assert p.wait(quick, timeout_s=30.0).state == DONE
+    at[2].wait()  # big's resumed (shrunk) attempt is on the clock
+    offers = p.elastic.step()
+    assert [o.target_devices for o in offers] == [8]
+    assert offers[0].reason == "grow-to-free"
+    go[2].open()
+    for i in range(3, 9):  # let the remaining checkpoints sail through
+        go[i].open()
+    waiter.join(60.0)
+    assert not waiter.is_alive()
+    rep = p.results(big)
+    assert rep.state == DONE
+    assert rep.metrics["sizes"] == [8, 4, 8]
+    assert rep.resizes == 2
+    assert rep.metrics["units"] == list(range(6))
+
+
+def test_sample_exposes_driver_load_and_pool_shape(stub):
+    seen = {}
+
+    def run(container, cfg, token):
+        token.state["load"] = {"kind": "stub", "busy": 0.25}
+        cfg["at_work"].open()
+        cfg["release"].wait()
+        return {}
+
+    stub("loaded", run_fn=run)
+    p = Platform(total_devices=8)
+    at_work, release = Gate("at work"), Gate("release")
+    name = p.submit(JobSpec(kind="loaded",
+                            config={"at_work": at_work, "release": release},
+                            devices=2))
+    waiter = threading.Thread(
+        target=lambda: p.wait(name, timeout_s=30.0), daemon=True
+    )
+    waiter.start()
+    at_work.wait()
+    sig = p.elastic.sample()
+    assert sig["jobs"][name]["busy"] == 0.25
+    assert sig["jobs"][name]["devices"] == 2
+    assert sig["free_runs"] == [(2, 6)]
+    assert sig["pending"] == []
+    release.open()
+    waiter.join(30.0)
+    assert not waiter.is_alive()
+
+
+# ---------------------------------------------------------------------------
+# wait() hard deadline
+# ---------------------------------------------------------------------------
+
+
+def test_wait_deadline_raises_job_timeout_with_last_event(stub):
+    hold = Gate("release the slowpoke")
+
+    def run(container, cfg, token):
+        cfg["at_work"].open()
+        hold.wait()
+        return {}
+
+    stub("slow", run_fn=run)
+    p = Platform(total_devices=2)
+    at_work = Gate("slow at work")
+    name = p.submit(JobSpec(kind="slow", config={"at_work": at_work},
+                            devices=2))
+    with pytest.raises(JobTimeout) as exc:
+        p.wait(name, deadline_s=0.2)
+    assert name in exc.value.pending
+    assert "scheduled on container" in exc.value.pending[name]
+    hold.open()
+    assert p.wait(name, timeout_s=30.0).state == DONE
+
+
+def test_wait_deadline_applies_in_serial_mode(stub):
+    stub("nap", run_fn=lambda c, cfg, t: time.sleep(0.4) or {})
+    p = Platform(total_devices=2, concurrent=False)
+    a = p.submit(JobSpec(kind="nap", name="a", devices=2, elastic=False))
+    b = p.submit(JobSpec(kind="nap", name="b", devices=2, elastic=False))
+    # a's step outruns the deadline; b is still queued when it expires
+    with pytest.raises(JobTimeout) as exc:
+        p.wait([a, b], deadline_s=0.2)
+    assert exc.value.pending
+    reports = p.wait([a, b], timeout_s=30.0)
+    assert all(r.state == DONE for r in reports.values())
+
+
+# ---------------------------------------------------------------------------
+# scenario re-sharding: resize-equality on the real driver
+# ---------------------------------------------------------------------------
+
+
+def test_scenario_resized_sweep_is_bitwise_equal_to_unresized():
+    from repro.platform import ScenarioJobConfig, aggregate_scenario_metrics
+
+    cfg = ScenarioJobConfig(per_family=2, steps=8, chunks=3)
+    p_ref = Platform(total_devices=4)
+    ref = p_ref.wait(p_ref.submit(
+        JobSpec(kind="scenario", name="ref", config=cfg, devices=4)
+    ), timeout_s=120.0)
+    assert ref.state == DONE
+
+    p = Platform(total_devices=4)
+
+    def force(name, token):
+        done = len(token.state.get("done", {}))
+        plan = token.state.setdefault("_plan", [])
+        if done == 1 and 2 not in plan:
+            plan.append(2)
+            p.elastic.offer(name, 2)
+        elif done == 2 and 4 not in plan:
+            plan.append(4)
+            p.elastic.offer(name, 4)
+
+    p.hooks = ExecutorHooks(checkpoint=force)
+    rep = p.wait(p.submit(JobSpec(
+        kind="scenario", name="sweep", config=cfg, devices=4, min_devices=1,
+    )), timeout_s=120.0)
+    assert rep.state == DONE
+    assert rep.resizes == 2
+    # the re-sharded chunks partition the same scenario set: bitwise equal
+    np.testing.assert_array_equal(
+        np.asarray(rep.metrics["_rollout"].collided),
+        np.asarray(ref.metrics["_rollout"].collided),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(rep.metrics["_rollout"].min_ttc),
+        np.asarray(ref.metrics["_rollout"].min_ttc),
+    )
+    assert rep.metrics["collision_rate"] == ref.metrics["collision_rate"]
+    ra = aggregate_scenario_metrics([ref.metrics], 1.0)
+    rb = aggregate_scenario_metrics([rep.metrics], 1.0)
+    assert ra.collision_rate == rb.collision_rate
+    for fam, fs in ra.families.items():
+        assert fs.min_ttc_hist == rb.families[fam].min_ttc_hist
+
+
+# ---------------------------------------------------------------------------
+# pool-derived launch helpers: --shards auto, serve_cell_plan
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_shards_auto_derives_from_free_runs():
+    from repro.launch.scenario_job import resolve_shards
+
+    p = Platform(total_devices=8)
+    assert resolve_shards(p, "auto", 2) == 4
+    assert resolve_shards(p, "auto", 3) == 2  # floor per run
+    assert resolve_shards(p, "5", 2) == 5
+    assert resolve_shards(p, 7, 2) == 7
+    with pytest.raises(ValueError):
+        resolve_shards(p, "0", 2)
+    # a tenant holding the middle of the pool splits the free shape
+    p.rm.submit(Job("hog", "stub", devices=3, min_devices=3))
+    runs = p.rm.free_runs()
+    expect = max(1, sum(length // 2 for _, length in runs))
+    assert resolve_shards(p, "auto", 2) == expect
+
+
+def test_serve_cell_plan_derives_cells_from_pool():
+    from repro.launch.cells import serve_cell_plan
+
+    rm = ResourceManager(8)
+    assert serve_cell_plan(rm, devices_per_cell=2) == [2, 2, 2, 2]
+    assert serve_cell_plan(rm, cells=3, devices_per_cell=2) == [2, 2, 2]
+    rm.submit(Job("hog", "stub", devices=6, min_devices=6))
+    assert serve_cell_plan(rm, devices_per_cell=2) == [2]
+    rm.submit(Job("hog2", "stub", devices=2, min_devices=2))
+    # nothing free: still plans one cell (it will queue)
+    assert serve_cell_plan(rm, devices_per_cell=2) == [2]
+    with pytest.raises(ValueError):
+        serve_cell_plan(rm, devices_per_cell=0)

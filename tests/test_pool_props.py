@@ -1,0 +1,73 @@
+"""Property-based tests for ``ResourceManager`` resize/allocation invariants.
+
+Random submit/complete/fail_container/resize/heal sequences must never claim
+a device twice and must keep free + claimed + quarantined == pool — the
+model checker lives in ``concurrency_utils.check_pool_invariants`` and runs
+after *every* operation.  A seeded non-hypothesis twin of this fuzz runs in
+``test_concurrency.py`` so the invariants are exercised even where
+hypothesis is absent (``conftest.py`` soft-gates this file).
+"""
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from concurrency_utils import check_pool_invariants, exercise_pool
+from repro.core.scheduler import Job, ResourceManager
+
+_op = st.one_of(
+    st.tuples(st.just("submit"), st.integers(min_value=0, max_value=63)),
+    st.tuples(st.just("complete"), st.integers(min_value=0, max_value=63)),
+    st.tuples(st.just("fail"), st.integers(min_value=0, max_value=63)),
+    st.tuples(st.just("resize"), st.integers(min_value=0, max_value=63)),
+    st.tuples(st.just("heal"), st.just(0)),
+)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    total=st.integers(min_value=1, max_value=16),
+    ops=st.lists(_op, max_size=60),
+)
+def test_random_lifecycles_never_double_claim_or_leak(total, ops):
+    rm = ResourceManager(total)
+    exercise_pool(rm, ops)
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    devices=st.integers(min_value=1, max_value=8),
+    min_devices=st.integers(min_value=1, max_value=8),
+    target=st.integers(min_value=-4, max_value=16),
+)
+def test_resize_clamps_to_spec_and_preserves_pool(devices, min_devices, target):
+    """A lone job resized to any target stays within [min_devices, devices]
+    (or is requeued), and the pool partition invariant holds throughout."""
+    min_devices = min(min_devices, devices)
+    rm = ResourceManager(8)
+    rm.submit(Job("job", "stub", devices=devices, min_devices=min_devices))
+    check_pool_invariants(rm)
+    job = rm.jobs["job"]
+    assert job.state == "RUNNING"  # alone on an 8-pool: always schedulable
+    c = rm.resize("job", target)
+    check_pool_invariants(rm)
+    if c is not None:
+        assert min_devices <= c.size <= devices
+        assert job.container is c
+    rm.complete("job")
+    check_pool_invariants(rm)
+    assert len(rm.free) == 8
+
+
+@settings(max_examples=100, deadline=None)
+@given(ops=st.lists(_op, max_size=40))
+def test_free_runs_partition_the_free_set(ops):
+    """free_runs() is always a partition of the free set into maximal
+    contiguous runs (no overlap, no gap-free adjacency between runs)."""
+    rm = ResourceManager(12)
+    exercise_pool(rm, ops)
+    runs = rm.free_runs()
+    covered = [d for start, length in runs for d in range(start, start + length)]
+    assert sorted(covered) == sorted(rm.free)
+    assert len(covered) == len(set(covered))
+    for (s1, l1), (s2, _) in zip(runs, runs[1:]):
+        assert s1 + l1 < s2  # maximal: adjacent runs would have merged

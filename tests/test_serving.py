@@ -230,6 +230,53 @@ def test_router_salvages_outputs_finished_inside_failing_step(setup):
     assert router.rerouted >= 1  # rid 3 finished on the survivor
 
 
+def test_router_replica_churn_preserves_greedy_outputs(setup):
+    """Elastic churn mid-stream — a replica added, another retired while
+    sequences are in flight — must not change any request's greedy tokens:
+    untouched replicas keep their work (stable tie-break indices), and the
+    retired replica's continuations finish identically on the survivors."""
+    from repro.serving.router import ServeRouter
+
+    cfg, model, params = setup
+    B, S, G = 6, 12, 6
+    prompt = jax.random.randint(jax.random.PRNGKey(9), (B, S), 0, cfg.vocab_size)
+    ref = np.asarray(ServeEngine(cfg, params, max_len=S + G).generate(
+        {"tokens": prompt}, G
+    ))
+    engines = [
+        ContinuousBatchingEngine(cfg, params, num_slots=2, page_size=8,
+                                 max_len=64, seed=r)
+        for r in range(2)
+    ]
+    router = ServeRouter(engines)
+    reqs = [
+        Request(rid=i, tokens=np.asarray(prompt[i]), max_new_tokens=G)
+        for i in range(B)
+    ]
+    for r in reqs[:4]:
+        router.submit(r)
+    outs = []
+    outs.extend(router.step())
+    outs.extend(router.step())  # sequences now mid-flight on replicas 0/1
+    # scale up: the newcomer is appended, untouched indices are stable
+    router.add_replica(ContinuousBatchingEngine(
+        cfg, params, num_slots=2, page_size=8, max_len=64, seed=2
+    ))
+    for r in reqs[4:]:
+        router.submit(r)  # JSQ prefers the empty newcomer
+    outs.extend(router.step())
+    # scale down: replica 1's in-flight work rebalances to the survivors
+    conts = router.retire_replica(1)
+    while router.has_work():
+        outs.extend(router.step())
+    got = np.array([o.tokens for o in sorted(outs, key=lambda o: o.rid)])
+    np.testing.assert_array_equal(got, ref)
+    assert router.alive == [True, False, True]
+    assert router.retired == 1
+    assert router.rebalanced == len(conts) >= 1
+    assert router.routed[2] >= 2  # the newcomer really absorbed load
+
+
 def test_continuous_temperature_and_validation(setup):
     cfg, model, params = setup
     eng = ContinuousBatchingEngine(cfg, params, num_slots=2, page_size=8, max_len=32)
