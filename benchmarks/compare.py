@@ -10,6 +10,13 @@ as its headline — and flags regressions beyond ``--threshold`` (default
 surface on the PR without failing the build; ``--fail-on-regression``
 turns them into a non-zero exit for branches that want a hard gate.
 
+Snapshots from different PRs rarely have identical row sets: a PR that
+adds a benchmark (say ``hetero_chaos_mix``) has rows with no baseline in
+the previous snapshot, and a renamed row looks vanished.  Both are
+reported as ``::notice::`` annotations — informational, never failing —
+unless ``--fail-on-vanished`` explicitly promotes vanished rows back to
+gate-able warnings.
+
 The committed ``BENCH_<pr>.json`` snapshots are the trajectory: CI runs
 the suite fresh, diffs against the last committed snapshot, and uploads
 the new rows as an artifact.
@@ -33,9 +40,10 @@ def compare(
     new: dict[str, float],
     prefix: str,
     threshold: float,
-) -> tuple[list[str], list[str]]:
-    """Returns (report lines, regression warning lines)."""
-    lines, warnings = [], []
+    fail_on_vanished: bool = False,
+) -> tuple[list[str], list[str], list[str]]:
+    """Returns (report lines, gate-able warnings, informational notices)."""
+    lines, warnings, notices = [], [], []
     shared = sorted(n for n in new if n.startswith(prefix) and n in old)
     for name in shared:
         ratio = new[name] / max(old[name], 1e-9)
@@ -53,15 +61,23 @@ def compare(
             f"{name}: {old[name] / 1e6:.2f}s -> {new[name] / 1e6:.2f}s "
             f"({ratio:.2f}x) {verdict}"
         )
+    added = sorted(n for n in new if n.startswith(prefix) and n not in old)
+    for name in added:
+        notices.append(
+            f"::notice title=new perf row::{name} ({new[name] / 1e6:.2f}s) "
+            "has no baseline in the previous snapshot; it joins the "
+            "trajectory from this run on"
+        )
     missing = sorted(n for n in old if n.startswith(prefix) and n not in new)
     for name in missing:
-        warnings.append(
-            f"::warning title=perf row vanished::{name} is in the previous "
-            "snapshot but not the new run"
-        )
+        msg = (f"{name} is in the previous snapshot but not the new run")
+        if fail_on_vanished:
+            warnings.append(f"::warning title=perf row vanished::{msg}")
+        else:
+            notices.append(f"::notice title=perf row vanished::{msg}")
     if not shared:
         lines.append(f"no shared rows with prefix {prefix!r}")
-    return lines, warnings
+    return lines, warnings, notices
 
 
 def main(argv=None) -> int:
@@ -75,14 +91,21 @@ def main(argv=None) -> int:
                          "regression (default: 0.2 = 20%%)")
     ap.add_argument("--fail-on-regression", action="store_true",
                     help="exit 1 on regression instead of only warning")
+    ap.add_argument("--fail-on-vanished", action="store_true",
+                    help="treat rows present in the previous snapshot but "
+                         "missing from the new run as gate-able warnings "
+                         "(default: informational notice)")
     args = ap.parse_args(argv)
 
-    lines, warnings = compare(
-        load_rows(args.old), load_rows(args.new), args.prefix, args.threshold
+    lines, warnings, notices = compare(
+        load_rows(args.old), load_rows(args.new), args.prefix, args.threshold,
+        fail_on_vanished=args.fail_on_vanished,
     )
     print(f"# perf trajectory: {args.old} -> {args.new}")
     for line in lines:
         print(line)
+    for n in notices:
+        print(n)
     for w in warnings:
         print(w)
     if warnings and args.fail_on_regression:

@@ -384,6 +384,130 @@ def _elastic_mix() -> None:
     assert elastic_busy > static_busy, (elastic_busy, static_busy)
 
 
+# ---------------------------------------------------------------------------
+# chaos: a seeded fault campaign over the full heterogeneous mix
+# ---------------------------------------------------------------------------
+
+_CHAOS_SEED = 2017  # the paper's year; any seed works, this one is pinned
+_CHAOS_FAULTS = 7  # >= len(ALL_KINDS): every fault kind fires at least once
+
+
+def _chaos_specs(ckpt_dir: str):
+    """Four equal-priority tenants filling the 8-device pool: a process-
+    isolated scenario sweep (the SIGKILL / IPC-fault target), a 2-cell
+    serve tenant (the kill_cell target), and thread-mode train + replay-sim
+    tenants (cooperative fault targets)."""
+    from repro.platform import (
+        JobSpec,
+        ScenarioJobConfig,
+        ServeJobConfig,
+        SimulateJobConfig,
+        TrainJobConfig,
+    )
+
+    return [
+        JobSpec(
+            kind="scenario", name="csweep",
+            config=ScenarioJobConfig(per_family=8, steps=30, chunks=4),
+            devices=2, priority=0, isolation="process", max_retries=6,
+        ),
+        JobSpec(
+            kind="serve", name="cfrontend",
+            config=ServeJobConfig(
+                arch="qwen2-0.5b", batch=4, prompt_len=16, gen=16,
+                engine="continuous", page_size=8, slots=2,
+                cells=2, cell_rebuild_retries=2,
+            ),
+            devices=2, priority=0, max_retries=6,
+        ),
+        JobSpec(
+            kind="train", name="ctrain",
+            config=TrainJobConfig(
+                arch="qwen2-0.5b", steps=6, batch=4, seq=64, vocab=128,
+                ckpt_dir=ckpt_dir, ckpt_every=6, log_every=6,
+            ),
+            devices=2, priority=0, max_retries=6,
+        ),
+        JobSpec(
+            kind="simulate", name="creplay",
+            config=SimulateJobConfig(partitions=4, frames=6,
+                                     lidar_points=256, channels=(8, 16)),
+            devices=2, priority=0, max_retries=6,
+        ),
+    ]
+
+
+def _chaos_mix() -> None:
+    """The same 4-tenant mix run twice: fault-free, then under a seeded
+    FaultPlan covering every fault kind (a real SIGKILL of the isolated
+    scenario worker, a serve-cell death, an injected device failure riding
+    quarantine + healing, a checkpoint stall, and IPC delay/drop).  Every
+    job must still finish DONE, the scenario leg must account every unit
+    exactly once and merge bitwise-equal to the fault-free leg, and the
+    same seed must re-derive the identical fault schedule."""
+    from repro.platform import FaultPlan, Platform
+
+    plan = FaultPlan(seed=_CHAOS_SEED, faults=_CHAOS_FAULTS)
+    # chaos-determinism, re-derived fresh: same seed, same schedule
+    assert plan.schedule() == \
+        FaultPlan(seed=_CHAOS_SEED, faults=_CHAOS_FAULTS).schedule()
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        p_ff = Platform(total_devices=8)
+        t0 = time.perf_counter()
+        ff = p_ff.run_batch(_chaos_specs(ckpt_dir))
+        ff_s = time.perf_counter() - t0
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        p = Platform(
+            total_devices=8, chaos_plan=plan,
+            retry_backoff_s=0.02, heal_after_s=0.5,
+            backoff_seed=_CHAOS_SEED,
+        )
+        t0 = time.perf_counter()
+        ch = p.run_batch(_chaos_specs(ckpt_dir))
+        chaos_s = time.perf_counter() - t0
+
+    s = p.chaos.summary()
+    sigkills = sum("SIGKILL pid=" in e["detail"] for e in p.chaos.injected)
+    cell_kills = s["by_kind"].get("kill_cell", 0)
+    retries = sum(r.retries for r in ch.values())
+
+    _mix_row("hetero_chaos_faultfree", ff, ff_s, extra=";mode=fault_free")
+    kinds_str = ",".join(f"{k}:{v}" for k, v in sorted(s["by_kind"].items()))
+    _mix_row(
+        "hetero_chaos_mix", ch, chaos_s,
+        extra=(
+            f";mode=chaos;faults_injected={s['injected']}"
+            f";sigkills={sigkills};cell_kills={cell_kills}"
+            f";skipped={s['skipped']};retries={retries}"
+            f";ff_s={ff_s:.2f};bitwise_equal=1;{kinds_str}"
+        ),
+    )
+
+    # the acceptance bar: a real campaign, not a no-op
+    assert s["injected"] >= 5, s
+    assert sigkills >= 1, p.chaos.injected
+    assert cell_kills >= 1, s
+    # zero lost / duplicated scenario units: the completed chunk ranges
+    # partition [0, n) with no gaps and no overlaps
+    done = sorted(p._records["csweep"].driver_state["done"])
+    assert done[0][0] == 0, done
+    assert done[-1][1] == ch["csweep"].metrics["scenarios"], done
+    for (_, h1), (l2, _) in zip(done, done[1:]):
+        assert h1 == l2, f"lost/duplicated units at {h1} vs {l2}"
+    # the chaos leg's scenario results are bitwise-equal to fault-free
+    assert ch["csweep"].metrics["collision_rate"] == \
+        ff["csweep"].metrics["collision_rate"]
+    for a, b in zip(jax.tree.leaves(ch["csweep"].metrics["_rollout"]),
+                    jax.tree.leaves(ff["csweep"].metrics["_rollout"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the serve tenant lost nothing and doubled nothing across cell deaths
+    assert ch["cfrontend"].metrics["tokens"] == \
+        ff["cfrontend"].metrics["tokens"]
+    # recovery cost is bounded: respawns + backoff, not a meltdown
+    assert chaos_s < ff_s * 5.0, (chaos_s, ff_s)
+
+
 def run() -> None:
     # order matters: the serial-vs-concurrent comparison runs first so its
     # serial leg pays the same cold jit compiles it always has (the resize
@@ -392,6 +516,7 @@ def run() -> None:
     _platform_mix()
     _resize_proof()
     _elastic_mix()
+    _chaos_mix()
     channels = (16, 32, 64)
     model = PerceptionModel(channels=channels)
     params = model.init(jax.random.PRNGKey(0))

@@ -74,6 +74,10 @@ class Job:
     preemptions: int = 0
     resumes: int = 0
     resizes: int = 0  # accepted mid-run ResizeOffers (grow or shrink)
+    # retry-backoff hold: schedule() skips the job until this monotonic
+    # timestamp (0 = no hold); set by fail_container(delay_s=...) so a
+    # flapping container can't thrash the queue with immediate retries
+    not_before: float = 0.0
 
 
 @dataclasses.dataclass
@@ -94,6 +98,9 @@ class ResourceManager:
         self.total = total_devices
         self.free: set[int] = set(range(total_devices))
         self.quarantined: set[int] = set()
+        # device id -> monotonic timestamp of its quarantine, for healing
+        # probes (heal_expired); healed/never-quarantined ids are absent
+        self.quarantined_at: dict[int, float] = {}
         self.containers: dict[int, Container] = {}
         self.jobs: dict[str, Job] = {}
         self._cid = itertools.count(1)
@@ -203,9 +210,14 @@ class ResourceManager:
     # ------------------------------------------------------------------
     @_locked
     def schedule(self) -> None:
-        """Greedy highest-priority-first packing with shrink + preemption."""
+        """Greedy highest-priority-first packing with shrink + preemption.
+        Jobs under a retry-backoff hold (``not_before`` in the future) are
+        skipped; ``kick_expired`` reschedules them when the hold lapses."""
+        now = time.monotonic()
         pending = sorted(
-            (j for j in self.jobs.values() if j.state in (JOB_PENDING, JOB_PREEMPTED)),
+            (j for j in self.jobs.values()
+             if j.state in (JOB_PENDING, JOB_PREEMPTED)
+             and j.not_before <= now),
             key=lambda j: (-j.priority, j.submitted_at),
         )
         for job in pending:
@@ -325,17 +337,30 @@ class ResourceManager:
         ]
 
     @_locked_notify
-    def fail_container(self, name: str, dead_devices: int = 1) -> None:
-        """A node in the job's container died: quarantine devices, resubmit."""
+    def fail_container(
+        self, name: str, dead_devices: int = 1, delay_s: float = 0.0
+    ) -> None:
+        """A node in the job's container died: quarantine devices, resubmit.
+
+        ``dead_devices=0`` means the *worker* died but its devices are fine
+        (e.g. a killed isolated process): nothing is quarantined, the job is
+        just requeued.  ``delay_s > 0`` holds the requeued job out of
+        ``schedule()`` until the backoff lapses (``Job.not_before``)."""
         job = self.jobs[name]
         if job.container is None:
             return
         dead = set(job.container.device_ids[:dead_devices])
-        self.quarantined.update(dead)
-        self._log(f"container failure in {name}: quarantine {sorted(dead)}")
+        if dead:
+            now = time.monotonic()
+            self.quarantined.update(dead)
+            self.quarantined_at.update({d: now for d in dead})
+            self._log(f"container failure in {name}: quarantine {sorted(dead)}")
+        else:
+            self._log(f"container failure in {name}: worker lost, devices kept")
         self._release(job.container)
         job.container = None
         job.state = JOB_PENDING  # driver resumes from checkpoint on reschedule
+        job.not_before = time.monotonic() + delay_s if delay_s > 0 else 0.0
         self.schedule()
 
     @_locked_notify
@@ -344,7 +369,11 @@ class ResourceManager:
         failing job is abandoned (e.g. retries exhausted) but its devices
         must still be kept out of the pool."""
         dead = set(device_ids)
+        if not dead:
+            return
+        now = time.monotonic()
         self.quarantined.update(dead)
+        self.quarantined_at.update({d: now for d in dead})
         self.free.difference_update(dead)
         self._log(f"quarantine {sorted(dead)}")
 
@@ -352,8 +381,57 @@ class ResourceManager:
     def heal(self, device_ids: Optional[list[int]] = None) -> None:
         ids = set(device_ids) if device_ids else set(self.quarantined)
         self.quarantined.difference_update(ids)
+        for d in ids:
+            self.quarantined_at.pop(d, None)
         self.free.update(ids)
         self.schedule()
+
+    def heal_expired(self, after_s: float, now: Optional[float] = None) -> list[int]:
+        """Healing probe: devices quarantined at least ``after_s`` ago are
+        probed (trivially healthy in this repro — real pools would run a
+        device self-test) and returned to the pool.  Returns the healed ids.
+        """
+        with self._lock:
+            t = time.monotonic() if now is None else now
+            due = sorted(
+                d for d, at in self.quarantined_at.items()
+                if d in self.quarantined and t - at >= after_s
+            )
+            for d in due:
+                self._log(f"healing probe passed: device {d} rejoins the pool")
+        if due:
+            self.heal(due)  # reschedules + notifies listeners
+        return due
+
+    def kick_expired(self) -> list[str]:
+        """Re-run the scheduler for jobs whose retry-backoff hold has lapsed;
+        returns the names whose hold was cleared.  Called from executor wait
+        loops (cheap no-op while every hold is still ticking)."""
+        kicked = []
+        with self._lock:
+            now = time.monotonic()
+            for job in self.jobs.values():
+                if job.not_before and job.not_before <= now \
+                        and job.state in (JOB_PENDING, JOB_PREEMPTED):
+                    job.not_before = 0.0
+                    kicked.append(job.name)
+            if kicked:
+                self.schedule()
+        if kicked:
+            self._notify_listeners()
+        return kicked
+
+    @_locked
+    def earliest_hold(self) -> Optional[float]:
+        """The soonest ``not_before`` among held queued jobs (monotonic
+        timestamp), or None — bounds the executor's condition-wait so a
+        backoff retry fires on time."""
+        now = time.monotonic()
+        holds = [
+            j.not_before for j in self.jobs.values()
+            if j.not_before > now and j.state in (JOB_PENDING, JOB_PREEMPTED)
+        ]
+        return min(holds) if holds else None
 
     def utilization(self) -> float:
         busy = sum(c.size for c in self.containers.values())

@@ -61,6 +61,7 @@ def _sweep(platform: Platform, args, policy: str, prefix: str):
                 shard_index=i, num_shards=num_shards,
             ),
             devices=args.devices_per_shard,
+            isolation=args.isolation,
         )
         for i in range(num_shards)
     ]
@@ -89,6 +90,11 @@ def main(argv=None):
     ap.add_argument("--devices-per-shard", type=int, default=2)
     ap.add_argument("--pallas-collision", action="store_true",
                     help="route collision/TTC through the Pallas kernel")
+    ap.add_argument("--isolation", choices=["thread", "process"],
+                    default="thread",
+                    help="process: each shard attempt runs in a subprocess "
+                         "pinned to its container, with enforced (SIGTERM/"
+                         "SIGKILL) preemption and cancel")
     ap.add_argument("--ab-test", action="store_true",
                     help="qualify --policy against the deployed baseline")
     args = ap.parse_args(argv)

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import argparse
 import sys
+import time
 
 import numpy as np
 
@@ -102,6 +103,10 @@ def main(argv=None):
     ap.add_argument("--devices-per-cell", type=int, default=2)
     ap.add_argument("--pool-devices", type=int, default=8)
     ap.add_argument("--priority", type=int, default=0)
+    ap.add_argument("--salvage-retries", type=int, default=2,
+                    help="salvage rounds for failed cell jobs before giving up")
+    ap.add_argument("--salvage-backoff-s", type=float, default=0.5,
+                    help="base delay between salvage rounds (doubles per round)")
     args = ap.parse_args(argv)
 
     platform = Platform(total_devices=args.pool_devices)
@@ -133,13 +138,17 @@ def main(argv=None):
         specs.append(spec)
     reports = platform.run_batch(specs)
 
-    # whole-cell salvage: a terminally failed cell's requests are rerouted
-    # across the surviving cells and served by follow-up jobs
+    # whole-cell salvage with a retry cap + exponential backoff: a cell job
+    # that failed terminally has its requests rerouted across the surviving
+    # cells and served by follow-up jobs; follow-ups that fail too are
+    # salvaged again, up to --salvage-retries rounds
     failed = {n: r for n, r in reports.items() if r.state != DONE}
-    if failed:
+    round_no = 0
+    while failed and round_no < args.salvage_retries:
+        round_no += 1
         survivors = [
             ci for ci, cell in enumerate(planned)
-            if not any(cell_of[n] == ci for n in failed)
+            if router.alive[ci] and not any(cell_of[n] == ci for n in failed)
         ]
         if not survivors:
             print("[serve_cells] every cell failed; nothing to salvage")
@@ -152,17 +161,35 @@ def main(argv=None):
             print(f"[serve_cells] cell {ci} failed ({rep.error}); "
                   f"salvaging {len(lost)} requests across cells {survivors}")
             salvaged.extend(lost)
+        if not salvaged:
+            break
+        delay = args.salvage_backoff_s * (2 ** (round_no - 1))
+        if delay > 0:
+            print(f"[serve_cells] salvage round {round_no}/"
+                  f"{args.salvage_retries}: backing off {delay:.2f}s "
+                  "before resubmitting")
+            time.sleep(delay)
+        # survivors' earlier requests were already served by their original
+        # jobs; clear them so a failed *salvage* job only re-salvages its own
+        for si in survivors:
+            planned[si].drain_continuations()
         before = list(router.routed)
         _assign(router, salvaged)  # JSQ across the surviving cells
         router.salvaged += len(salvaged)
-        salvage_specs = [
-            _cell_spec(args, si, plan[si], router.routed[si] - before[si],
-                       suffix="-salvage")
-            for si in survivors
-            if router.routed[si] - before[si] > 0
-        ]
-        if salvage_specs:
-            reports.update(platform.run_batch(salvage_specs))
+        salvage_specs = []
+        for si in survivors:
+            extra = router.routed[si] - before[si]
+            if extra > 0:
+                spec = _cell_spec(args, si, plan[si], extra,
+                                  suffix=f"-salvage{round_no}")
+                cell_of[spec.name] = si
+                salvage_specs.append(spec)
+        fresh = platform.run_batch(salvage_specs) if salvage_specs else {}
+        reports.update(fresh)
+        failed = {n: r for n, r in fresh.items() if r.state != DONE}
+    if failed:
+        print(f"[serve_cells] salvage budget exhausted after {round_no} "
+              f"round(s); still failed: {sorted(failed)}")
 
     print("\n=== serve-cell tier ===")
     total_tokens, total_wall = 0, 0.0

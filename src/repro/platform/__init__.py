@@ -19,6 +19,7 @@ wrappers that parse flags into a JobSpec and submit here.
 """
 
 from repro.platform import services  # noqa: F401 — registers built-in drivers
+from repro.platform.chaos import ChaosController, FaultPlan
 from repro.platform.client import (
     CANCELLED,
     DONE,
@@ -57,7 +58,9 @@ from repro.platform.spec import JobReport, JobSpec
 __all__ = [
     "CANCEL",
     "CANCELLED",
+    "ChaosController",
     "CheckpointToken",
+    "FaultPlan",
     "DONE",
     "ElasticController",
     "ExecutorHooks",

@@ -1,0 +1,312 @@
+"""Deterministic chaos layer: seeded fault plans injected from the wait loop.
+
+Cloud results only count if the platform keeps its promises under real
+faults, and a fault campaign is only a *verification tool* if it is
+repeatable.  :class:`FaultPlan` therefore derives its entire fault schedule
+as a pure function of a seed — same seed, same schedule, byte for byte —
+and :class:`ChaosController` steps that schedule from the platform's wait
+loop (next to the elastic controller), injecting each fault when a viable
+target exists and logging every injection into the target job's event
+stream.
+
+Fault kinds (the arsenal, one per failure domain the platform recovers
+from):
+
+* ``kill_worker`` — SIGKILL a process-isolated worker mid-unit (the real
+  thing: no cooperation, no goodbye).  With only thread workers alive the
+  kill downgrades to an injected worker-loss fault honored at the next
+  checkpoint, and the downgrade is logged.
+* ``fail_device`` — inject a :class:`~repro.platform.driver.
+  ContainerFailure` on a running token: the next checkpoint quarantines a
+  device and rides the backoff/retry path (``rm.fail_container``).
+* ``kill_cell`` — post a ``("kill_cell", pick)`` directive to a serve
+  tenant running a cell tier; the ServeDriver drains it between engine
+  steps and makes that cell's next step raise (whole-cell salvage).
+* ``stall_checkpoint`` — make one checkpoint overrun its deadline; under
+  process isolation a stall past ``grace_s`` with a stop pending triggers
+  the enforced SIGTERM/SIGKILL ladder.
+* ``delay_ipc`` / ``drop_ipc`` — hold one isolation IPC message, or drop
+  one state snapshot (the parent keeps the previous one; chunk-keyed
+  driver state makes the replay exactly-once).
+
+Events fire in schedule order; an event whose trigger step has passed but
+has no eligible target yet *defers* (and blocks later events, keeping the
+injected sequence deterministic) until ``max_defer_steps``, after which it
+is logged as skipped.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import os
+import random
+import signal
+import threading
+from typing import TYPE_CHECKING, Optional
+
+if TYPE_CHECKING:  # pragma: no cover — import cycle: client builds us
+    from repro.platform.client import Platform
+
+KILL_WORKER = "kill_worker"
+FAIL_DEVICE = "fail_device"
+KILL_CELL = "kill_cell"
+STALL_CHECKPOINT = "stall_checkpoint"
+DELAY_IPC = "delay_ipc"
+DROP_IPC = "drop_ipc"
+ALL_KINDS = (
+    KILL_WORKER, FAIL_DEVICE, KILL_CELL, STALL_CHECKPOINT, DELAY_IPC, DROP_IPC,
+)
+
+_TERMINAL = ("DONE", "FAILED", "CANCELLED")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled injection: fire at/after controller ``step``."""
+
+    step: int
+    kind: str
+    arg: float = 0.0  # stall/delay seconds, or dead-device count
+    pick: int = 0  # deterministic index into the eligible-target list
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A seeded, reproducible fault schedule.
+
+    :meth:`schedule` is a pure function of the dataclass fields — no clock,
+    no entropy — so equal plans produce identical schedules (the
+    chaos-determinism guarantee).  When ``faults >= len(kinds)`` every kind
+    appears at least once: the first ``len(kinds)`` events are a seeded
+    shuffle of ``kinds``, the rest are seeded draws.
+    """
+
+    seed: int = 0
+    faults: int = 5
+    kinds: tuple = ALL_KINDS
+    max_step_gap: int = 4  # events spaced Uniform[1, gap] controller steps
+    stall_s: float = 0.05  # stall_checkpoint duration
+    delay_s: float = 0.05  # delay_ipc hold
+    max_defer_steps: int = 2000  # give up on a target-less event after this
+
+    def _arg(self, kind: str) -> float:
+        if kind == STALL_CHECKPOINT:
+            return self.stall_s
+        if kind == DELAY_IPC:
+            return self.delay_s
+        if kind == FAIL_DEVICE:
+            return 1.0  # dead devices
+        return 0.0
+
+    def schedule(self) -> tuple[FaultEvent, ...]:
+        if self.faults < 0:
+            raise ValueError(f"faults must be >= 0, got {self.faults}")
+        if not self.kinds:
+            raise ValueError("plan needs at least one fault kind")
+        unknown = sorted(set(self.kinds) - set(ALL_KINDS))
+        if unknown:
+            raise ValueError(f"unknown fault kinds {unknown}; known: {ALL_KINDS}")
+        rng = random.Random(self.seed)
+        first = list(self.kinds)
+        rng.shuffle(first)
+        events, step = [], 0
+        for i in range(self.faults):
+            step += 1 + rng.randrange(max(1, self.max_step_gap))
+            kind = first[i] if i < len(first) \
+                else self.kinds[rng.randrange(len(self.kinds))]
+            events.append(FaultEvent(
+                step=step, kind=kind, arg=self._arg(kind),
+                pick=rng.randrange(1 << 16),
+            ))
+        return tuple(events)
+
+
+class ChaosController:
+    """Steps a :class:`FaultPlan` against live platform state; owned by a
+    :class:`~repro.platform.client.Platform` (armed only when built with
+    ``chaos_plan=``)."""
+
+    def __init__(self, platform: "Platform", plan: Optional[FaultPlan] = None,
+                 poll_s: float = 0.02):
+        self.platform = platform
+        self.plan = plan
+        self.poll_s = poll_s  # wait-loop cadence while armed
+        self._queue = collections.deque(plan.schedule()) if plan else \
+            collections.deque()
+        self.steps = 0  # controller steps taken (wait-loop iterations)
+        self.injected: list[dict] = []  # what actually fired, in order
+        self.skipped: list[dict] = []  # expired with no eligible target
+        self._pending_ipc: collections.deque = collections.deque()
+        self._ipc_lock = threading.Lock()
+
+    @property
+    def armed(self) -> bool:
+        return self.plan is not None
+
+    # -- wait-loop surface ----------------------------------------------
+    def maybe_step(self) -> int:
+        """Advance one controller step and fire due events; returns how
+        many fired.  Safe to call from anywhere (takes the platform lock);
+        the wait loops call it each iteration while armed."""
+        if not self.armed or (not self._queue and not self._pending_ipc):
+            return 0
+        fired = 0
+        p = self.platform
+        with p._cond:
+            self.steps += 1
+            while self._queue and self._queue[0].step <= self.steps:
+                ev = self._queue[0]
+                if self._inject(ev):
+                    self._queue.popleft()
+                    fired += 1
+                elif self.steps - ev.step > self.plan.max_defer_steps:
+                    self._queue.popleft()
+                    self.skipped.append({"step": self.steps, "kind": ev.kind})
+                else:
+                    break  # defer in order: determinism beats promptness
+        return fired
+
+    # -- injection -------------------------------------------------------
+    def _workers(self, *, pids_only: bool = False,
+                 tokens_only: bool = False) -> list[str]:
+        """Sorted live-worker names (platform lock held).  ``pids_only``
+        keeps process-isolated workers, ``tokens_only`` keeps interruptible
+        (checkpointing) ones."""
+        p = self.platform
+        names = []
+        for name in sorted(p._active):
+            rec = p._records.get(name)
+            if rec is None or rec.state in _TERMINAL:
+                continue
+            token = p._active[name].token
+            if pids_only and token.worker_pid is None:
+                continue
+            if tokens_only and not rec.accepts_token:
+                continue
+            names.append(name)
+        return names
+
+    def _record(self, ev: FaultEvent, target: str, detail: str) -> dict:
+        p = self.platform
+        entry = {
+            "step": self.steps, "kind": ev.kind, "target": target,
+            "detail": detail,
+        }
+        self.injected.append(entry)
+        rec = p._records.get(target)
+        if rec is not None:
+            rec.log(f"chaos[{ev.kind}]: {detail}", p._clock())
+        return entry
+
+    def _inject(self, ev: FaultEvent) -> bool:
+        """Try to fire one event (platform lock held); False = no target."""
+        p = self.platform
+        with p.rm._lock:  # platform -> ResourceManager: the one legal order
+            if ev.kind == KILL_WORKER:
+                cands = self._workers(pids_only=True)
+                if cands:
+                    name = cands[ev.pick % len(cands)]
+                    pid = p._active[name].token.worker_pid
+                    os.kill(pid, signal.SIGKILL)
+                    self._record(ev, name, f"SIGKILL pid={pid} mid-unit")
+                    return True
+                if any(rec.spec.isolation == "process"
+                       and rec.state not in _TERMINAL
+                       for rec in p._records.values()):
+                    # a process-isolated tenant is in flight but its worker
+                    # pid isn't visible yet (spawn or backoff-hold window):
+                    # defer for the real SIGKILL instead of downgrading
+                    return False
+                cands = self._workers(tokens_only=True)
+                if cands:
+                    # no process worker alive: downgrade to a cooperative
+                    # worker-loss fault (devices kept, job requeued)
+                    name = cands[ev.pick % len(cands)]
+                    p._active[name].token.request_fault(
+                        "chaos: worker killed (cooperative downgrade)",
+                        dead_devices=0)
+                    self._record(
+                        ev, name,
+                        "worker kill downgraded to cooperative fault "
+                        "(thread isolation)")
+                    return True
+                return False
+            if ev.kind == FAIL_DEVICE:
+                cands = self._workers(tokens_only=True)
+                if not cands:
+                    return False
+                name = cands[ev.pick % len(cands)]
+                p._active[name].token.request_fault(
+                    "chaos: injected device failure",
+                    dead_devices=max(1, int(ev.arg)))
+                self._record(ev, name,
+                             f"device failure armed ({max(1, int(ev.arg))} "
+                             "dead at next checkpoint)")
+                return True
+            if ev.kind == KILL_CELL:
+                cands = [
+                    n for n in self._workers(tokens_only=True)
+                    if p._records[n].spec.kind == "serve"
+                    and int(getattr(p._records[n].ctx, "cells", 1)) > 1
+                ]
+                if not cands:
+                    return False
+                name = cands[ev.pick % len(cands)]
+                p._active[name].token.post_directive(("kill_cell", ev.pick))
+                self._record(ev, name,
+                             "serve-cell death armed (next driver step)")
+                return True
+            if ev.kind == STALL_CHECKPOINT:
+                cands = self._workers(tokens_only=True)
+                if not cands:
+                    return False
+                name = cands[ev.pick % len(cands)]
+                p._active[name].token.post_directive(
+                    ("stall_checkpoint", float(ev.arg)))
+                self._record(ev, name,
+                             f"checkpoint stall armed ({ev.arg:.3f}s)")
+                return True
+            if ev.kind in (DELAY_IPC, DROP_IPC):
+                if not self._workers(pids_only=True):
+                    return False
+                fault = ("delay", float(ev.arg)) if ev.kind == DELAY_IPC \
+                    else ("drop",)
+                entry = self._record(ev, self._workers(pids_only=True)[
+                    ev.pick % len(self._workers(pids_only=True))],
+                    f"IPC {fault[0]} armed (next isolation message)")
+                with self._ipc_lock:
+                    self._pending_ipc.append((entry, fault))
+                return True
+            raise ValueError(f"unknown fault kind {ev.kind!r}")
+
+    # -- isolation-supervisor surface -------------------------------------
+    def take_ipc(self, job_name: str) -> Optional[tuple]:
+        """Pop one pending IPC fault (called by the isolation supervisor for
+        each child message); returns ``("delay", s)`` / ``("drop",)`` or
+        None.  Applied by whichever isolated worker messages next."""
+        with self._ipc_lock:
+            if not self._pending_ipc:
+                return None
+            entry, fault = self._pending_ipc.popleft()
+        p = self.platform
+        with p._cond:
+            entry["detail"] = f"IPC {fault[0]} applied to {job_name}"
+            rec = p._records.get(job_name)
+            if rec is not None:
+                rec.log(f"chaos[{'delay_ipc' if fault[0] == 'delay' else 'drop_ipc'}]"
+                        f": {fault[0]} applied", p._clock())
+        return fault
+
+    # -- reporting ---------------------------------------------------------
+    def summary(self) -> dict:
+        by_kind: dict[str, int] = {}
+        for e in self.injected:
+            by_kind[e["kind"]] = by_kind.get(e["kind"], 0) + 1
+        return {
+            "injected": len(self.injected),
+            "by_kind": by_kind,
+            "skipped": len(self.skipped),
+            "pending": len(self._queue),
+            "steps": self.steps,
+        }

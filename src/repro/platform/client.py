@@ -59,6 +59,7 @@ from __future__ import annotations
 
 import dataclasses
 import inspect
+import random
 import threading
 import time
 import weakref
@@ -84,6 +85,7 @@ from repro.platform.driver import (
     ServiceDriver,
     get_driver,
 )
+from repro.platform.chaos import ChaosController, FaultPlan
 from repro.platform.elastic import ElasticController
 from repro.platform.spec import JobReport, JobSpec
 
@@ -176,11 +178,26 @@ class Platform:
         hooks: Optional[ExecutorHooks] = None,
         clock: Callable[[], float] = time.monotonic,
         elastic_poll_s: Optional[float] = None,
+        retry_backoff_s: float = 0.05,
+        retry_backoff_cap_s: float = 2.0,
+        backoff_seed: int = 0,
+        heal_after_s: Optional[float] = None,
+        chaos_plan: Optional[FaultPlan] = None,
+        chaos_poll_s: float = 0.02,
     ):
         self.rm = rm if rm is not None else ResourceManager(total_devices)
         self.concurrent = concurrent
         self.hooks = hooks if hooks is not None else ExecutorHooks()
         self._clock = clock
+        # container-failure resubmission: exponential backoff with jitter
+        # (delay = min(cap, base * 2^(retry-1)) * U[0.5, 1.5)); base <= 0
+        # disables the hold entirely (immediate requeue, the PR-4 behavior)
+        self.retry_backoff_s = retry_backoff_s
+        self.retry_backoff_cap_s = retry_backoff_cap_s
+        self._backoff_rng = random.Random(backoff_seed)
+        # quarantine healing probe: devices quarantined longer than this
+        # rejoin the pool from the wait loop (None = quarantine is forever)
+        self.heal_after_s = heal_after_s
         self._records: dict[str, _JobRecord] = {}
         self._active: dict[str, _Worker] = {}
         # guards _records/_active/record fields; workers notify on exit.
@@ -206,6 +223,10 @@ class Platform:
         # only bites when another thread is mid-step (forced offers always
         # work).
         self.elastic = ElasticController(self, poll_s=elastic_poll_s)
+        # the chaos layer: armed only when built with a FaultPlan; stepped
+        # from the wait loops right next to the elastic controller so fault
+        # injection rides the same cadence machinery as elasticity
+        self.chaos = ChaosController(self, chaos_plan, poll_s=chaos_poll_s)
 
     def _pool_changed(self) -> None:
         # Never block here: the notifying thread may hold *another*
@@ -223,6 +244,7 @@ class Platform:
     # -- submission ----------------------------------------------------
     def submit(self, spec: JobSpec) -> str:
         """Validate, uniquify, queue; returns the (possibly renamed) job name."""
+        spec.validate()  # isolation/grace/elasticity sanity, fail-fast
         driver = get_driver(spec.kind)  # raises UnknownServiceKind on typos
         ctx = driver.prepare(spec)  # bad config payloads fail here, not in queue
         with self._cond:
@@ -316,11 +338,19 @@ class Platform:
             self._finish(name, FAILED, error=str(e))
             return
         rec.retries += 1
-        rec.log(f"resubmitting (retry {rec.retries}/{rec.spec.max_retries})",
-                self._clock())
+        delay = self._retry_delay(rec.retries)
+        if delay > 0:
+            rec.log(
+                f"resubmitting in {delay:.3f}s "
+                f"(retry {rec.retries}/{rec.spec.max_retries}, "
+                "exponential backoff + jitter)", self._clock())
+        else:
+            rec.log(f"resubmitting (retry {rec.retries}/{rec.spec.max_retries})",
+                    self._clock())
         job = self.rm.jobs[name]
         if job.container is container:
-            self.rm.fail_container(name, dead_devices=e.dead_devices)
+            self.rm.fail_container(
+                name, dead_devices=e.dead_devices, delay_s=delay)
         else:
             # preempted while dying (maybe already rescheduled elsewhere):
             # quarantine the devices of the container that actually died,
@@ -336,6 +366,25 @@ class Platform:
                     f"({job.container.size} devices)", self._clock())
         self._observe()
         self._cond.notify_all()
+
+    def _retry_delay(self, retries: int) -> float:
+        """Resubmission hold for the ``retries``-th container-failure retry:
+        exponential backoff with jitter, so a flapping container doesn't
+        thrash the scheduler (and correlated failures don't resubmit in
+        lockstep)."""
+        base = self.retry_backoff_s
+        if base <= 0:
+            return 0.0
+        delay = min(self.retry_backoff_cap_s, base * (2 ** (retries - 1)))
+        return delay * (0.5 + self._backoff_rng.random())
+
+    def _log_event(self, name: str, msg: str) -> None:
+        """Append to a job's event log from outside the lock (the isolation
+        supervisor reports spawn/enforcement milestones through this)."""
+        with self._cond:
+            rec = self._records.get(name)
+            if rec is not None:
+                rec.log(msg, self._clock())
 
     # -- concurrent executor -------------------------------------------
     def _dispatch(self) -> int:
@@ -398,7 +447,22 @@ class Platform:
         overwritten."""
         t0 = time.perf_counter()
         try:
-            if rec.accepts_token:
+            if rec.spec.isolation == "process":
+                # enforced isolation: the attempt runs in a subprocess pinned
+                # to the container's devices; this thread supervises the IPC
+                # and escalates SIGTERM -> SIGKILL when the child blows its
+                # grace window.  Exceptions surface identically to the
+                # in-thread path, so settling below is shared.
+                from repro.platform import isolation
+
+                metrics = isolation.run_isolated(
+                    rec.spec, container, token,
+                    checkpoint_hook=self.hooks.checkpoint,
+                    grace_s=rec.spec.grace_s,
+                    log=lambda m: self._log_event(name, m),
+                    chaos=self.chaos if self.chaos.armed else None,
+                )
+            elif rec.accepts_token:
                 metrics = rec.driver.run(container, rec.ctx, token=token)
             else:
                 metrics = rec.driver.run(container, rec.ctx)
@@ -646,9 +710,26 @@ class Platform:
         base = 0.5  # safety net, not a poll: notifications do the waking
         if self.elastic.poll_s is not None:
             base = min(base, max(self.elastic.poll_s, 0.02))
+        if self.chaos.armed:
+            base = min(base, max(self.chaos.poll_s, 0.005))
+        hold = self.rm.earliest_hold()
+        if hold is not None:  # wake when a backoff hold lapses
+            base = min(base, max(hold - time.monotonic(), 0.005))
+        if self.heal_after_s is not None and self.rm.quarantined_at:
+            base = min(base, max(self.heal_after_s / 4.0, 0.01))
         if deadline is not None:
             base = min(base, max(deadline - time.monotonic(), 0.001))
         return base
+
+    def _tick_controllers(self) -> bool:
+        """Per-wait-loop-iteration housekeeping (platform lock held): lapse
+        backoff holds, run healing probes, step the chaos schedule.  True if
+        pool state changed (something kicked or healed)."""
+        changed = bool(self.rm.kick_expired())
+        if self.heal_after_s is not None:
+            changed = bool(self.rm.heal_expired(self.heal_after_s)) or changed
+        self.chaos.maybe_step()
+        return changed
 
     def _wait_concurrent(
         self, targets: Sequence[str], timeout_s: float,
@@ -665,12 +746,18 @@ class Platform:
                         and not any(n in self._active for n in targets):
                     return
                 self._check_deadline(targets, deadline, deadline_s)
+                self._tick_controllers()
                 if self._dispatch():
                     continue
                 self.elastic.maybe_step()
                 if self._active:
                     # workers run; their exit (or a submit, or a pool-state
                     # change) notifies the condition
+                    self._cond.wait(timeout=self._wait_timeout(deadline))
+                    continue
+                if self.rm.earliest_hold() is not None:
+                    # everything runnable is in a backoff hold: not a stall,
+                    # the timeout below wakes us when the hold lapses
                     self._cond.wait(timeout=self._wait_timeout(deadline))
                     continue
                 foreign = self.rm.running_jobs(exclude=self._records)
@@ -697,10 +784,16 @@ class Platform:
             with self._cond:
                 # serial mode only has live workers when another thread is
                 # mid-step; the controller can still offer to those
+                if self._tick_controllers():
+                    continue  # a hold lapsed / device healed: retry step()
                 self.elastic.maybe_step()
                 if self._active:
                     # another thread is mid-step on this platform: its job
                     # wasn't runnable for us, so wait for it to settle
+                    self._cond.wait(timeout=self._wait_timeout(deadline))
+                    continue
+                if self.rm.earliest_hold() is not None:
+                    # runnable work is in a backoff hold, not stuck
                     self._cond.wait(timeout=self._wait_timeout(deadline))
                     continue
                 # nothing of ours is scheduled: either a foreign tenant

@@ -25,6 +25,7 @@ from __future__ import annotations
 import dataclasses
 import difflib
 import threading
+import time
 from typing import Any, Callable, Optional, Protocol, runtime_checkable
 
 from repro.core.scheduler import Container
@@ -80,9 +81,15 @@ class CheckpointToken:
       and publish load signals (``state["load"]``) the ElasticController
       samples.
 
-    ``request_stop``/``request_resize`` are called by the executor/controller
-    (from another thread); the stop flag is an event so drivers never miss a
-    stop that raced a checkpoint, and a stop always outranks a resize.
+    ``request_stop``/``request_resize``/``request_fault`` are called by the
+    executor/controller (from another thread); the stop flag is an event so
+    drivers never miss a stop that raced a checkpoint, and a stop always
+    outranks a resize.  ``request_fault`` is the chaos layer's device-death
+    injection point: the next checkpoint raises :class:`ContainerFailure`
+    exactly as if the driver had noticed its devices dying, so the injected
+    failure rides the real quarantine/retry path.  ``post_directive`` carries
+    opaque ``(kind, arg)`` hints to the driver (serve-cell kills, checkpoint
+    stalls); drivers drain them with ``drain_directives`` between units.
     """
 
     def __init__(
@@ -98,6 +105,17 @@ class CheckpointToken:
         self._stop = threading.Event()
         self.reason: Optional[str] = None
         self._resize: Optional[ResizeOffer] = None
+        # (msg, dead_devices) injected by the chaos layer; raised at the
+        # next checkpoint as a ContainerFailure
+        self._fault: Optional[tuple[str, int]] = None
+        # opaque (kind, arg) hints for the driver; guarded by _dlock because
+        # the chaos controller posts from the wait loop's thread
+        self._directives: list[tuple] = []
+        self._dlock = threading.Lock()
+        # pid of the isolated subprocess running this attempt (process
+        # isolation only; None for in-thread drivers) — the chaos layer's
+        # SIGKILL target
+        self.worker_pid: Optional[int] = None
 
     def request_stop(self, reason: str) -> None:
         self.reason = reason  # write before set(): checkpoint reads after wait
@@ -108,6 +126,11 @@ class CheckpointToken:
         checkpoint (unless a preempt/cancel stop wins the race)."""
         self._resize = offer
 
+    def request_fault(self, msg: str, dead_devices: int = 1) -> None:
+        """Inject a container failure: the next checkpoint raises
+        :class:`ContainerFailure` with these parameters (chaos layer)."""
+        self._fault = (msg, dead_devices)
+
     def should_stop(self) -> bool:
         return self._stop.is_set()
 
@@ -115,12 +138,51 @@ class CheckpointToken:
     def pending_resize(self) -> Optional[ResizeOffer]:
         return self._resize
 
+    def take_resize(self) -> Optional[ResizeOffer]:
+        """Pop the pending resize offer (the isolation supervisor relays it
+        to the child exactly once)."""
+        offer, self._resize = self._resize, None
+        return offer
+
+    @property
+    def pending_fault(self) -> Optional[tuple[str, int]]:
+        return self._fault
+
+    def take_fault(self) -> Optional[tuple[str, int]]:
+        fault, self._fault = self._fault, None
+        return fault
+
+    def post_directive(self, directive: tuple) -> None:
+        """Queue an opaque ``(kind, arg)`` hint for the driver."""
+        with self._dlock:
+            self._directives.append(tuple(directive))
+
+    def drain_directives(self) -> list[tuple]:
+        """Take all queued directives (driver-side, between units of work)."""
+        with self._dlock:
+            drained, self._directives = self._directives, []
+        return drained
+
+    def _consume_stalls(self) -> None:
+        """Apply any ``("stall_checkpoint", seconds)`` directives in place —
+        the chaos fault that makes a checkpoint overrun its deadline (under
+        process isolation, a stall past the grace window is what triggers
+        the enforced SIGTERM/SIGKILL escalation)."""
+        with self._dlock:
+            stalls = [d for d in self._directives if d[0] == "stall_checkpoint"]
+            self._directives = [
+                d for d in self._directives if d[0] != "stall_checkpoint"
+            ]
+        for _, seconds in stalls:
+            time.sleep(float(seconds))
+
     def checkpoint(self, save: Optional[Callable[[], None]] = None) -> None:
         self.checkpoints += 1
         if self._on_checkpoint is not None:
             # test harness hook: barriers/gates injected here make preempt-
             # mid-run interleavings deterministic (no sleeps)
             self._on_checkpoint(self.job_name, self)
+        self._consume_stalls()
         if self._stop.is_set():
             # a preempt/cancel outranks any pending resize; the offer is
             # dropped (the controller re-issues against live state)
@@ -128,7 +190,12 @@ class CheckpointToken:
             if save is not None:
                 save()
             raise JobInterrupted(self.reason or CANCEL)
-        offer, self._resize = self._resize, None
+        fault = self.take_fault()
+        if fault is not None:
+            # injected device death: no save (the devices are "gone"); the
+            # executor quarantines and resubmits through the retry path
+            raise ContainerFailure(fault[0], dead_devices=fault[1])
+        offer = self.take_resize()
         if offer is not None:
             if save is not None:
                 save()

@@ -1,0 +1,348 @@
+"""Enforced process isolation: one subprocess worker per granted container.
+
+The default executor runs drivers on threads, so every interruption is
+*cooperative* — a driver that never reaches ``token.checkpoint()`` can hold
+its devices forever, and a simulated ``ContainerFailure`` never actually
+loses a process.  ``JobSpec(isolation="process")`` makes the failure domain
+real: each run attempt executes in a fresh subprocess pinned to its
+container's devices via the ``--xla_force_host_platform_device_count``
+idiom (the same fake-device trick ``launch/dryrun.py`` uses), with the
+CheckpointToken protocol carried over a pickle-framed pipe pair:
+
+    parent -> child   bootstrap {spec, container, resume state}
+    child  -> parent  ("checkpoint", n, state)    at every token.checkpoint()
+    parent -> child   ("continue", directives) | ("stop", reason)
+                      | ("resize", offer) | ("fault", msg, dead_devices)
+    child  -> parent  ("done", metrics, state) | ("interrupted", reason,
+                      offer, state) | ("error", kind, msg, dead, state)
+
+The child blocks inside ``checkpoint()`` waiting for the reply, so the
+parent-side supervisor mirrors the thread executor's semantics exactly: the
+``ExecutorHooks.checkpoint`` hook runs on the supervising worker thread
+while the child is parked (the deterministic concurrency harness works
+unchanged), stops/resizes/faults requested on the *parent* token are
+relayed at the next checkpoint, and ``token.state`` is refreshed from the
+child's snapshot so resume-after-anything uses the usual driver state.
+
+What threads cannot give, processes do — **enforcement**: a stop (preempt /
+cancel) the child has not honored within ``JobSpec.grace_s`` escalates to
+SIGTERM, then SIGKILL, and the supervisor raises the interruption itself
+from the last snapshot.  A child that dies unexpectedly (chaos SIGKILL, a
+crash, an OOM) surfaces as ``ContainerFailure(dead_devices=0)`` — the
+worker is gone but the devices are fine — and rides the normal
+quarantine/backoff/retry path.
+
+Test hook: the child imports the comma-separated modules named by the
+``REPRO_ISOLATION_IMPORT`` environment variable before resolving the
+driver, so suites can register throwaway driver kinds that exist in the
+child too.
+"""
+
+from __future__ import annotations
+
+import importlib
+import os
+import pickle
+import select
+import struct
+import subprocess
+import sys
+import time
+import traceback
+from typing import Callable, Optional
+
+from repro.core.scheduler import Container
+from repro.platform.driver import (
+    CANCEL,
+    RESIZE,
+    CheckpointToken,
+    ContainerFailure,
+    JobInterrupted,
+    get_driver,
+)
+from repro.platform.spec import JobSpec
+
+_LEN = struct.Struct(">I")
+
+
+# ---------------------------------------------------------------------------
+# framing: 4-byte big-endian length + pickle, over blocking pipe fds
+# ---------------------------------------------------------------------------
+
+
+def _send(f, obj) -> None:
+    payload = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    f.write(_LEN.pack(len(payload)) + payload)
+    f.flush()
+
+
+def _read_exact(f, n: int) -> bytes:
+    buf = b""
+    while len(buf) < n:
+        chunk = f.read(n - len(buf))
+        if not chunk:
+            raise EOFError(f"IPC channel closed mid-frame ({len(buf)}/{n} bytes)")
+        buf += chunk
+    return buf
+
+
+def _recv(f):
+    (n,) = _LEN.unpack(_read_exact(f, _LEN.size))
+    return pickle.loads(_read_exact(f, n))
+
+
+# ---------------------------------------------------------------------------
+# parent side: spawn + supervise one isolated attempt
+# ---------------------------------------------------------------------------
+
+
+def _noop_log(msg: str) -> None:
+    return None
+
+
+def _enforce_kill(proc, token, log, term_wait_s: float = 1.0) -> None:
+    """The enforcement ladder: SIGTERM, a short wait, then SIGKILL."""
+    reason = (token.reason or CANCEL).lower()
+    log(f"grace window expired; enforcing {reason} with SIGTERM "
+        f"(pid={proc.pid})")
+    proc.terminate()
+    try:
+        proc.wait(timeout=term_wait_s)
+    except subprocess.TimeoutExpired:
+        log(f"SIGTERM ignored; SIGKILL (pid={proc.pid})")
+        proc.kill()
+        proc.wait(timeout=10.0)
+    log("isolated worker killed (enforced interruption); "
+        "resuming from the last checkpoint snapshot")
+
+
+def run_isolated(
+    spec: JobSpec,
+    container: Container,
+    token: CheckpointToken,
+    *,
+    checkpoint_hook: Optional[Callable[[str, CheckpointToken], None]] = None,
+    grace_s: float = 5.0,
+    log: Callable[[str], None] = _noop_log,
+    chaos=None,
+    poll_s: float = 0.02,
+) -> dict:
+    """Run one attempt of ``spec`` in an isolated subprocess; mirrors
+    ``driver.run(container, ctx, token=...)`` semantics (returns metrics,
+    raises JobInterrupted / ContainerFailure).  ``chaos`` duck-types
+    ``take_ipc(job_name) -> None | ("delay", s) | ("drop",)`` — the chaos
+    controller's per-message IPC fault hook."""
+    c2p_r, c2p_w = os.pipe()
+    p2c_r, p2c_w = os.pipe()
+    env = dict(os.environ)
+    # the container pinning idiom: the child sees exactly its grant as
+    # fake host devices (set before the child's first jax import)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={container.size}"
+    )
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env["PYTHONPATH"] = os.pathsep.join(p for p in sys.path if p)
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.platform.isolation",
+         str(p2c_r), str(c2p_w)],
+        env=env, pass_fds=(p2c_r, c2p_w), close_fds=True,
+    )
+    os.close(p2c_r)
+    os.close(c2p_w)
+    r = os.fdopen(c2p_r, "rb")
+    w = os.fdopen(p2c_w, "wb")
+    token.worker_pid = proc.pid
+    log(f"isolated worker spawned (pid={proc.pid}, "
+        f"{container.size} devices pinned via XLA_FLAGS)")
+    stop_deadline: Optional[float] = None
+
+    def send(obj) -> None:
+        # a write can hit a just-killed child (chaos SIGKILL mid-boot, an
+        # OOM): that is the same worker-death failure a read EOF signals
+        try:
+            _send(w, obj)
+        except BrokenPipeError:
+            try:
+                proc.wait(timeout=10.0)
+            except Exception:
+                pass
+            raise ContainerFailure(
+                f"isolated worker died mid-message (pid={proc.pid}, "
+                f"rc={proc.returncode})", dead_devices=0) from None
+
+    try:
+        send({
+            "spec": spec,
+            "cid": container.cid,
+            "device_ids": container.device_ids,
+            "state": token.state,
+        })
+        while True:
+            if token.should_stop() and stop_deadline is None:
+                stop_deadline = time.monotonic() + grace_s
+            if stop_deadline is not None and time.monotonic() >= stop_deadline:
+                _enforce_kill(proc, token, log)
+                raise JobInterrupted(token.reason or CANCEL)
+            ready, _, _ = select.select([r], [], [], poll_s)
+            if not ready:
+                if proc.poll() is not None:
+                    raise ContainerFailure(
+                        f"isolated worker died (pid={proc.pid}, "
+                        f"rc={proc.returncode})", dead_devices=0)
+                continue
+            try:
+                msg = _recv(r)
+            except EOFError:
+                proc.wait(timeout=10.0)
+                raise ContainerFailure(
+                    f"isolated worker died mid-message (pid={proc.pid}, "
+                    f"rc={proc.returncode})", dead_devices=0) from None
+            kind = msg[0]
+            if kind == "checkpoint":
+                ipc = chaos.take_ipc(token.job_name) if chaos is not None \
+                    else None
+                if ipc is not None and ipc[0] == "delay":
+                    time.sleep(float(ipc[1]))
+                n, snapshot = int(msg[1]), msg[2]
+                token.checkpoints = n
+                if ipc is not None and ipc[0] == "drop":
+                    # one lost state snapshot: the parent keeps the previous
+                    # one — chunk-keyed driver state makes the re-run of
+                    # anything newer bitwise-identical, never duplicated
+                    pass
+                else:
+                    token.state.clear()
+                    token.state.update(snapshot)
+                if checkpoint_hook is not None:
+                    # same contract as the thread executor: the harness hook
+                    # runs on this worker thread while the child is parked
+                    # awaiting the reply
+                    checkpoint_hook(token.job_name, token)
+                if token.should_stop():
+                    send(("stop", token.reason or CANCEL))
+                    # the child is cooperating now (save may be slow): give
+                    # it a fresh grace window to persist and yield
+                    stop_deadline = time.monotonic() + grace_s
+                    continue
+                fault = token.take_fault()
+                if fault is not None:
+                    send(("fault", fault[0], int(fault[1])))
+                    continue
+                offer = token.take_resize()
+                if offer is not None:
+                    send(("resize", offer))
+                    continue
+                send(("continue", token.drain_directives()))
+            elif kind == "done":
+                token.state.clear()
+                token.state.update(msg[2])
+                proc.wait(timeout=30.0)
+                return msg[1]
+            elif kind == "interrupted":
+                reason, offer, snapshot = msg[1], msg[2], msg[3]
+                token.state.clear()
+                token.state.update(snapshot)
+                proc.wait(timeout=30.0)
+                raise JobInterrupted(reason, offer=offer)
+            elif kind == "error":
+                ekind, emsg, dead, snapshot = msg[1], msg[2], msg[3], msg[4]
+                token.state.clear()
+                token.state.update(snapshot)
+                proc.wait(timeout=30.0)
+                if ekind == "ContainerFailure":
+                    raise ContainerFailure(emsg, dead_devices=int(dead or 0))
+                raise RuntimeError(f"isolated worker failed: {ekind}: {emsg}")
+            else:  # pragma: no cover — protocol bug
+                raise RuntimeError(f"unknown IPC frame {kind!r}")
+    finally:
+        token.worker_pid = None
+        if proc.poll() is None:
+            proc.kill()
+        try:
+            proc.wait(timeout=10.0)
+        except Exception:
+            pass
+        r.close()
+        w.close()
+
+
+# ---------------------------------------------------------------------------
+# child side: python -m repro.platform.isolation <read_fd> <write_fd>
+# ---------------------------------------------------------------------------
+
+
+class _ChildToken(CheckpointToken):
+    """The driver-facing token inside the isolated worker.  ``checkpoint``
+    is a synchronous round-trip to the supervisor: publish the state
+    snapshot, block for the verdict, then continue / raise exactly like the
+    in-thread token would."""
+
+    def __init__(self, job_name: str, state: dict, rfile, wfile):
+        super().__init__(job_name, state=state)
+        self._r = rfile
+        self._w = wfile
+
+    def checkpoint(self, save=None) -> None:
+        self.checkpoints += 1
+        self._consume_stalls()  # stalls shipped with an earlier reply
+        _send(self._w, ("checkpoint", self.checkpoints, self.state))
+        reply = _recv(self._r)
+        kind = reply[0]
+        if kind == "continue":
+            for d in reply[1]:
+                self.post_directive(d)
+            # a ("stall_checkpoint", s) directive stalls *this* checkpoint
+            self._consume_stalls()
+            return
+        if kind == "stop":
+            if save is not None:
+                save()
+            raise JobInterrupted(reply[1])
+        if kind == "fault":
+            raise ContainerFailure(reply[1], dead_devices=int(reply[2]))
+        if kind == "resize":
+            if save is not None:
+                save()
+            raise JobInterrupted(RESIZE, offer=reply[1])
+        raise RuntimeError(f"unknown checkpoint reply {kind!r}")
+
+
+def _child_main(argv: list[str]) -> int:
+    r = os.fdopen(int(argv[0]), "rb")
+    w = os.fdopen(int(argv[1]), "wb")
+    boot = _recv(r)
+    # test hook: register extra driver kinds in this process too
+    for mod in os.environ.get("REPRO_ISOLATION_IMPORT", "").split(","):
+        if mod.strip():
+            importlib.import_module(mod.strip())
+    import repro.platform  # noqa: F401 — registers the built-in drivers
+    from repro.platform.client import _wants_token
+
+    spec: JobSpec = boot["spec"]
+    container = Container(int(boot["cid"]), tuple(boot["device_ids"]))
+    token = _ChildToken(spec.name or spec.kind, boot["state"], r, w)
+    try:
+        driver = get_driver(spec.kind)
+        ctx = driver.prepare(spec)
+        if _wants_token(driver):
+            metrics = driver.run(container, ctx, token=token)
+        else:
+            metrics = driver.run(container, ctx)
+    except JobInterrupted as e:
+        # state is sent *after* the driver's finally blocks ran, so wall-
+        # clock accumulators etc. survive the yield
+        _send(w, ("interrupted", e.reason, e.offer, token.state))
+    except ContainerFailure as e:
+        _send(w, ("error", "ContainerFailure", str(e), e.dead_devices,
+                  token.state))
+    except BaseException as e:  # noqa: BLE001 — everything must cross the pipe
+        _send(w, ("error", type(e).__name__,
+                  f"{e}\n{traceback.format_exc()}", None, token.state))
+    else:
+        _send(w, ("done", metrics, token.state))
+    w.flush()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(_child_main(sys.argv[1:]))

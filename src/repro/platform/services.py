@@ -580,6 +580,11 @@ class ServeJobConfig:
     scale_high_water: int = 32
     scale_low_water: int = 0
     scale_window: int = 3
+    # graceful degradation (cell tier): when every cell has died the router
+    # sheds in-flight work instead of raising, and the driver rebuilds up to
+    # this many fresh cells per attempt before giving up (0 = fail as soon
+    # as the last cell dies, the pre-chaos behavior)
+    cell_rebuild_retries: int = 1
     vocab: int = 512  # smoke-scale vocab (must match a ckpt's train job)
     seq: int = 512  # smoke-scale max_seq_len (match the train job's --seq
     #                 when restoring from ckpt_dir; params depend on it)
@@ -685,7 +690,11 @@ class ServeDriver:
         if cfg.engine == "continuous":
             import itertools
 
-            from repro.serving.cell_router import CellRouter, InProcessCell
+            from repro.serving.cell_router import (
+                CellRouter,
+                InProcessCell,
+                NoCellsAlive,
+            )
             from repro.serving.continuous import ContinuousBatchingEngine
             from repro.serving.router import ServeRouter
             from repro.serving.scheduler import Request, token_latencies
@@ -702,10 +711,11 @@ class ServeDriver:
                     seed=next(seeds),
                 )
 
-            if cfg.cells > 1 or cfg.max_replicas > cfg.replicas:
+            cell_tier = cfg.cells > 1 or cfg.max_replicas > cfg.replicas
+            cap = cfg.max_replicas or cfg.replicas
+            if cell_tier:
                 # the pool-level tier: JSQ across cells, whole-cell
                 # failover, sustained-queue-depth replica autoscaling
-                cap = cfg.max_replicas or cfg.replicas
                 cells = [
                     InProcessCell(
                         f"cell{c}", make_engine,
@@ -721,6 +731,9 @@ class ServeDriver:
                     window=cfg.scale_window,
                     min_replicas=cfg.replicas,  # never below the baseline
                     max_replicas=cap,
+                    # losing the last cell sheds work for rebuild below
+                    # instead of raising out of a router step
+                    shed_stranded=cfg.cell_rebuild_retries > 0,
                 )
             else:
                 router = ServeRouter(
@@ -751,11 +764,62 @@ class ServeDriver:
             t0 = time.perf_counter()
 
             def preempt_save():
-                state["cont"] = router.drain_continuations()
+                # in-flight work from alive cells, plus anything graceful
+                # degradation shed while every cell was down
+                cont = router.drain_continuations()
+                if cell_tier:
+                    cont.extend(router.take_stranded())
+                state["cont"] = cont
+
+            rebuilds = 0  # fresh cells built into dead slots (this attempt)
+
+            def _recover_stranded():
+                """Graceful degradation: after a step left work shed (every
+                cell died mid-flight), rebuild a dead slot — up to the
+                configured budget — and replay the shed requests, instead
+                of the tenant failing outright."""
+                nonlocal rebuilds
+                if not (cell_tier and router.stranded):
+                    return
+                if router.num_alive == 0:
+                    if rebuilds >= cfg.cell_rebuild_retries:
+                        raise NoCellsAlive(
+                            f"all {len(router.cells)} serve cells failed and "
+                            f"the rebuild budget ({cfg.cell_rebuild_retries}) "
+                            f"is spent; {len(router.stranded)} requests shed"
+                        )
+                    dead = next(
+                        i for i, a in enumerate(router.alive) if not a
+                    )
+                    router.revive(dead, InProcessCell(
+                        f"cell{dead}-rebuild{rebuilds}", make_engine,
+                        replicas=cfg.replicas, max_replicas=cap,
+                    ))
+                    rebuilds += 1
+                    print(
+                        f"[serve/continuous] degraded: rebuilt cell slot "
+                        f"{dead} (rebuild {rebuilds}/"
+                        f"{cfg.cell_rebuild_retries})"
+                    )
+                router.salvage(router.take_stranded())
 
             try:
-                while router.has_work():
+                while router.has_work() or (cell_tier and router.stranded):
                     if token is not None:
+                        if cell_tier:
+                            # chaos directives land between engine steps: a
+                            # kill_cell makes the picked cell's next step
+                            # die through the real failover path
+                            for d in token.drain_directives():
+                                if d[0] != "kill_cell":
+                                    continue
+                                alive = [i for i, a in
+                                         enumerate(router.alive) if a]
+                                if alive:
+                                    victim = alive[int(d[1]) % len(alive)]
+                                    router.inject_cell_failure(victim)
+                                    print("[serve/continuous] chaos: cell "
+                                          f"{victim} marked for death")
                         # load signal the ElasticController samples: queued
                         # depth + live tokens, and a normalized busy fraction
                         state["load"] = {
@@ -768,6 +832,7 @@ class ServeDriver:
                         # drains in-flight sequences into resumable requests
                         token.checkpoint(save=preempt_save)
                     outs.extend(router.step(base + time.perf_counter() - t0))
+                    _recover_stranded()
             finally:
                 # interrupted attempts count toward wall time and routing
                 # stats too, or resumed jobs would report inflated rates

@@ -33,6 +33,25 @@ class JobSpec:
     priority: int = 0  # higher wins; may preempt lower
     elastic: bool = True  # may run shrunk to min_devices under pressure
     max_retries: int = 1  # container-failure resubmissions before FAILED
+    # "thread" (default): the driver runs on a worker thread and every
+    # interruption is cooperative (honored at the driver's next
+    # checkpoint()).  "process": each attempt runs in a subprocess pinned to
+    # its container's devices, and preempt/cancel are *enforced* — a worker
+    # that doesn't yield within grace_s of the stop request is SIGTERMed,
+    # then SIGKILLed (see repro.platform.isolation)
+    isolation: str = "thread"
+    grace_s: float = 5.0  # enforcement grace window (process isolation)
+
+    def validate(self) -> None:
+        """Fail-fast checks beyond the dataclass types (run at submit)."""
+        if self.isolation not in ("thread", "process"):
+            raise ValueError(
+                f"isolation must be 'thread' or 'process', got "
+                f"{self.isolation!r}"
+            )
+        if self.grace_s <= 0:
+            raise ValueError(f"grace_s must be > 0, got {self.grace_s}")
+        self.resolved_min_devices()  # elastic/min_devices consistency
 
     def resolved_min_devices(self) -> int:
         if not self.elastic:

@@ -147,6 +147,7 @@ class CellRouter:
         window: int = 3,
         min_replicas: int = 1,
         max_replicas: int = 4,
+        shed_stranded: bool = False,
     ):
         if not cells:
             raise ValueError("cell router needs at least one cell")
@@ -160,6 +161,14 @@ class CellRouter:
         # for (retiring drains mid-decode sequences to survivors)
         self.min_replicas = min_replicas
         self.max_replicas = max_replicas
+        # graceful degradation: with shed_stranded, losing the *last* cell
+        # parks work in ``self.stranded`` (for the owner to rebuild a cell
+        # and resubmit via take_stranded) instead of raising NoCellsAlive
+        # mid-flight.  Off by default: a bare router still fails loudly.
+        self.shed_stranded = shed_stranded
+        self.stranded: list[Request] = []
+        self.shed = 0  # requests parked by graceful degradation (total)
+        self.revivals = 0  # cells rebuilt into a dead slot
         self.alive = [True] * len(self.cells)
         self.routed = [0] * len(self.cells)
         self.routed_tokens = [0] * len(self.cells)
@@ -167,6 +176,7 @@ class CellRouter:
         self.failures: list[tuple[int, str]] = []  # (cell, error)
         self.scale_events: list[tuple[int, int, int]] = []  # (cell, from, to)
         self._depth_hist: list[list[int]] = [[] for _ in self.cells]
+        self._injected_failures: set[int] = set()  # chaos: fail on next step
 
     # ------------------------------------------------------------------
     @property
@@ -186,7 +196,17 @@ class CellRouter:
         return min(alive, key=lambda i: (self.load(i), i))
 
     def submit(self, req: Request) -> int:
-        i = self.pick()
+        """Route to the least-loaded alive cell; returns the cell index.
+        With ``shed_stranded`` and no cells alive, the request is parked in
+        ``stranded`` instead (returns -1) — shed, not lost."""
+        try:
+            i = self.pick()
+        except NoCellsAlive:
+            if self.shed_stranded:
+                self.stranded.append(req)
+                self.shed += 1
+                return -1
+            raise
         self.cells[i].submit(req)
         self.routed[i] += 1
         self.routed_tokens[i] += req.prompt_len + remaining_new_tokens(req)
@@ -196,11 +216,15 @@ class CellRouter:
     def salvage(self, conts: Sequence[Request]) -> int:
         """Reroute continuations stranded on a lost cell (a dead cell here,
         or a whole serve *job* preempted off the pool) across the
-        survivors; returns how many were replaced."""
+        survivors; returns how many were placed (the rest shed to
+        ``stranded`` under graceful degradation, or NoCellsAlive without)."""
+        placed = 0
         for cont in conts:
-            self.submit(cont)  # raises NoCellsAlive when nothing is left
+            if self.submit(cont) < 0:  # raises NoCellsAlive unless shedding
+                continue
+            placed += 1
             self.salvaged += 1
-        return len(conts)
+        return placed
 
     def _fail_cell(self, i: int, err: Exception) -> list[RequestOutput]:
         self.alive[i] = False
@@ -226,6 +250,13 @@ class CellRouter:
             ) from err
         return finished
 
+    def inject_cell_failure(self, i: int) -> None:
+        """Chaos hook: the next :meth:`step` treats cell ``i`` as died
+        (same drain/salvage path a real step exception takes)."""
+        if not (0 <= i < len(self.cells)):
+            raise IndexError(f"no cell {i} (have {len(self.cells)})")
+        self._injected_failures.add(i)
+
     def step(self, now: float = float("inf")) -> list[RequestOutput]:
         """Advance every alive cell one step (scaling first when enabled);
         cells that raise are failed over.  Returns completed requests."""
@@ -233,13 +264,39 @@ class CellRouter:
             self.autoscale()
         outs: list[RequestOutput] = []
         for i, cell in enumerate(self.cells):
-            if not self.alive[i] or not cell.has_work():
+            if not self.alive[i]:
+                self._injected_failures.discard(i)
+                continue
+            if i in self._injected_failures:
+                self._injected_failures.discard(i)
+                outs.extend(self._fail_cell(
+                    i, RuntimeError("injected cell death (chaos)")))
+                continue
+            if not cell.has_work():
                 continue
             try:
                 outs.extend(cell.step(now))
             except Exception as e:  # noqa: BLE001 — whole-cell loss is the point
                 outs.extend(self._fail_cell(i, e))
         return outs
+
+    # ------------------------------------------------------------------
+    def revive(self, i: int, cell) -> None:
+        """Rebuild a dead cell slot with a fresh cell (graceful-degradation
+        recovery): the slot keeps its index (stable JSQ tie-break) and any
+        shed work can now be resubmitted via :meth:`take_stranded`."""
+        if self.alive[i]:
+            raise ValueError(f"cell {i} is alive; revive only fills dead slots")
+        self.cells[i] = cell
+        self.alive[i] = True
+        self._depth_hist[i] = []
+        self.revivals += 1
+
+    def take_stranded(self) -> list[Request]:
+        """Pop everything graceful degradation parked (owner resubmits after
+        reviving capacity)."""
+        out, self.stranded = self.stranded, []
+        return out
 
     def autoscale(self) -> list[tuple[int, int, int]]:
         """Sample queue depth per cell and apply the hysteresis policy;
@@ -293,6 +350,9 @@ class CellRouter:
             "routed": list(self.routed),
             "routed_tokens": list(self.routed_tokens),
             "salvaged": self.salvaged,
+            "shed": self.shed,
+            "stranded": len(self.stranded),
+            "revivals": self.revivals,
             "cell_failures": len(self.failures),
             "scale_events": [list(e) for e in self.scale_events],
             "replicas_per_cell": [

@@ -26,6 +26,8 @@ def pytest_configure(config):
         "concurrency: deterministic concurrency-harness tests "
         "(fast, no jax models; CI runs this tier 20x)",
         "subprocess: spawns a fresh python with fake XLA devices",
+        "chaos: seeded fault-injection tests (deterministic chaos tier; "
+        "CI runs chaos+subprocess 5x)",
         "slow: long-running integration tests",
     ):
         config.addinivalue_line("markers", line)

@@ -1,0 +1,257 @@
+"""Deterministic chaos: seeded fault plans, injection paths, recovery.
+
+Thread-mode and fake-cell tests only (the subprocess SIGKILL paths live in
+``test_isolation.py``), so this tier stays fast enough for CI to run 5x.
+"""
+
+from __future__ import annotations
+
+import re
+import time
+
+import numpy as np
+import pytest
+
+import chaos_driver_fixture  # noqa: F401 — registers the crashy kind
+from concurrency_utils import FakeCell
+from repro.core.scheduler import ResourceManager
+from repro.platform import ExecutorHooks, FaultPlan, JobSpec, Platform
+from repro.platform.chaos import ALL_KINDS
+from repro.serving.cell_router import CellRouter, NoCellsAlive
+
+pytestmark = pytest.mark.chaos
+
+SCN = {"per_family": 2, "steps": 5, "chunks": 6}
+
+
+def _park_until_injected(holder, n_faults, timeout_s=60.0):
+    """ExecutorHooks.checkpoint hook: park the worker at its first
+    checkpoint until the chaos controller has fired ``n_faults`` events —
+    the standard harness trick, so injection wins the race against a
+    jit-warm job finishing in milliseconds."""
+
+    def hook(name, token):
+        if token.checkpoints != 1:
+            return
+        t0 = time.monotonic()
+        while (len(holder["p"].chaos.injected) < n_faults
+               and time.monotonic() - t0 < timeout_s):
+            time.sleep(0.005)
+
+    return hook
+
+
+# ---------------------------------------------------------------------------
+# the fault plan is a pure function of its seed
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_same_seed_same_schedule():
+    a = FaultPlan(seed=42, faults=9).schedule()
+    assert a == FaultPlan(seed=42, faults=9).schedule()
+    assert a != FaultPlan(seed=43, faults=9).schedule()
+    # steps strictly increase: events fire in schedule order
+    assert all(x.step < y.step for x, y in zip(a, a[1:]))
+
+
+def test_fault_plan_covers_every_kind():
+    kinds = {e.kind for e in FaultPlan(seed=0, faults=len(ALL_KINDS)).schedule()}
+    assert kinds == set(ALL_KINDS)
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError, match="unknown fault kinds"):
+        FaultPlan(kinds=("explode",)).schedule()
+    with pytest.raises(ValueError, match="faults"):
+        FaultPlan(faults=-1).schedule()
+    with pytest.raises(ValueError, match="at least one"):
+        FaultPlan(kinds=()).schedule()
+
+
+# ---------------------------------------------------------------------------
+# injection rides the real recovery paths
+# ---------------------------------------------------------------------------
+
+
+def test_fail_device_rides_quarantine_and_backoff():
+    plan = FaultPlan(seed=3, faults=1, kinds=("fail_device",))
+    holder = {}
+    p = Platform(total_devices=4, chaos_plan=plan, retry_backoff_s=0.02,
+                 hooks=ExecutorHooks(checkpoint=_park_until_injected(holder, 1)))
+    holder["p"] = p
+    rep = p.wait(
+        p.submit(JobSpec(kind="scenario", devices=2, max_retries=3,
+                         config=dict(SCN))),
+        deadline_s=120,
+    )
+    assert rep.state == "DONE", rep.error
+    assert rep.retries == 1
+    assert any("chaos[fail_device]" in e for e in rep.events)
+    assert any("injected device failure" in e for e in rep.events)
+    assert any("resubmitting in" in e and "backoff" in e for e in rep.events)
+    assert len(p.rm.quarantined) == 1  # the injected death left the pool
+    assert p.chaos.summary()["injected"] == 1
+
+
+def test_kill_worker_downgrades_for_thread_workers():
+    """Without a process-isolated target, kill_worker degrades to a
+    cooperative worker-loss fault — logged as such, devices kept."""
+    plan = FaultPlan(seed=5, faults=1, kinds=("kill_worker",))
+    holder = {}
+    p = Platform(total_devices=4, chaos_plan=plan, retry_backoff_s=0.02,
+                 hooks=ExecutorHooks(checkpoint=_park_until_injected(holder, 1)))
+    holder["p"] = p
+    rep = p.wait(
+        p.submit(JobSpec(kind="scenario", devices=2, max_retries=3,
+                         config=dict(SCN))),
+        deadline_s=120,
+    )
+    assert rep.state == "DONE", rep.error
+    assert rep.retries == 1
+    assert any("downgraded to cooperative" in e for e in rep.events)
+    assert len(p.rm.quarantined) == 0  # worker lost, devices fine
+
+
+def test_backoff_delays_are_logged_and_grow():
+    p = Platform(total_devices=2, retry_backoff_s=0.01, backoff_seed=7)
+    rep = p.wait(
+        p.submit(JobSpec(kind="crashy", devices=1, max_retries=3,
+                         config={"fail_attempts": 2})),
+        deadline_s=60,
+    )
+    assert rep.state == "DONE", rep.error
+    delays = [
+        float(m.group(1))
+        for e in rep.events
+        for m in [re.search(r"resubmitting in (\d+\.\d+)s", e)]
+        if m
+    ]
+    assert len(delays) == 2
+    assert all(d > 0 for d in delays)
+    # retry k draws from [b*2^(k-1)*0.5, b*2^(k-1)*1.5): bands are disjoint
+    assert 0.005 <= delays[0] < 0.015
+    assert 0.010 <= delays[1] < 0.030
+
+
+def test_heal_expired_returns_devices_after_probe_window():
+    rm = ResourceManager(4)
+    rm.quarantine_devices([1, 2])
+    assert rm.heal_expired(after_s=1e9) == []  # too fresh
+    healed = rm.heal_expired(after_s=0.0)
+    assert healed == [1, 2]
+    assert len(rm.quarantined) == 0
+    assert len(rm.free) == 4
+
+
+# ---------------------------------------------------------------------------
+# determinism: same seed, same faults, same results
+# ---------------------------------------------------------------------------
+
+
+def _chaos_run(seed: int):
+    plan = FaultPlan(seed=seed, faults=2,
+                     kinds=("fail_device", "stall_checkpoint"),
+                     stall_s=0.01)
+    holder = {}
+    p = Platform(total_devices=4, chaos_plan=plan, retry_backoff_s=0.01,
+                 backoff_seed=seed,
+                 hooks=ExecutorHooks(checkpoint=_park_until_injected(holder, 2)))
+    holder["p"] = p
+    rep = p.wait(
+        p.submit(JobSpec(kind="scenario", name="det", devices=2,
+                         max_retries=4, config=dict(SCN))),
+        deadline_s=120,
+    )
+    assert rep.state == "DONE", rep.error
+    injected = [(e["kind"], e["target"]) for e in p.chaos.injected]
+    return plan, injected, rep
+
+
+def test_chaos_determinism_three_runs():
+    """The acceptance bar: the same FaultPlan seed reproduces the identical
+    fault schedule, and the final reports are identical — three times."""
+    import jax
+
+    runs = [_chaos_run(seed=11) for _ in range(3)]
+    schedules = [plan.schedule() for plan, _, _ in runs]
+    assert schedules[0] == schedules[1] == schedules[2]
+    injected = [inj for _, inj, _ in runs]
+    assert injected[0] == injected[1] == injected[2]
+    base = runs[0][2]
+    for _, _, rep in runs[1:]:
+        assert rep.metrics["collision_rate"] == base.metrics["collision_rate"]
+        for a, b in zip(jax.tree.leaves(rep.metrics["_rollout"]),
+                        jax.tree.leaves(base.metrics["_rollout"])):
+            np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation in the serving tier
+# ---------------------------------------------------------------------------
+
+
+def _req(rid):
+    from repro.serving.scheduler import Request
+
+    return Request(rid=rid, tokens=np.zeros((4,), np.int32), max_new_tokens=4)
+
+
+def test_cell_router_sheds_instead_of_raising():
+    router = CellRouter([FakeCell(fail_on_step=1), FakeCell(fail_on_step=1)],
+                        shed_stranded=True)
+    for i in range(4):
+        router.submit(_req(i))
+    outs = router.step()  # both cells die; nothing alive to salvage onto
+    assert router.num_alive == 0
+    assert not outs
+    assert len(router.stranded) == 4  # shed, not lost — and no raise
+    assert router.shed == 4
+    # a fresh cell revives the dead slot and the shed work replays onto it
+    router.revive(0, FakeCell())
+    assert router.salvage(router.take_stranded()) == 4
+    done = []
+    while router.has_work():
+        done.extend(router.step())
+    assert sorted(o.rid for o in done) == [0, 1, 2, 3]
+    assert router.stats()["revivals"] == 1
+    assert router.stats()["shed"] == 4
+
+
+def test_cell_router_default_still_raises():
+    router = CellRouter([FakeCell(fail_on_step=1)])
+    router.submit(_req(0))
+    with pytest.raises(NoCellsAlive):
+        router.step()
+
+
+def test_inject_cell_failure_uses_real_failover_path():
+    router = CellRouter([FakeCell(), FakeCell()])
+    for i in range(4):
+        router.submit(_req(i))
+    router.inject_cell_failure(1)
+    done = []
+    while router.has_work():
+        done.extend(router.step())
+    assert router.alive == [True, False]
+    assert router.salvaged > 0
+    assert sorted(o.rid for o in done) == [0, 1, 2, 3]
+
+
+def test_serve_driver_rebuilds_after_all_cells_die():
+    """kill_cell chaos on a 2-cell serve tenant, twice: the second kill
+    leaves no cells alive, graceful degradation sheds + rebuilds, and every
+    request still completes."""
+    plan = FaultPlan(seed=1, faults=2, kinds=("kill_cell", "kill_cell"))
+    p = Platform(total_devices=4, chaos_plan=plan)
+    rep = p.wait(
+        p.submit(JobSpec(
+            kind="serve", devices=2,
+            config={"engine": "continuous", "cells": 2, "batch": 4,
+                    "prompt_len": 8, "gen": 16, "cell_rebuild_retries": 2},
+        )),
+        deadline_s=240,
+    )
+    assert rep.state == "DONE", rep.error
+    assert rep.metrics["tokens"] == 4 * 16  # nothing lost, nothing doubled
+    assert rep.metrics["replica_cell_failures"] >= 1
+    assert p.chaos.summary()["by_kind"].get("kill_cell", 0) >= 1
