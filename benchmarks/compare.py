@@ -35,6 +35,23 @@ def load_rows(path: str) -> dict[str, float]:
     return {r["name"]: float(r["us_per_call"]) for r in data.get("results", [])}
 
 
+def load_meta(path: str) -> dict:
+    """The ``meta`` provenance header (git sha, date, platform, devices);
+    empty for pre-header snapshots."""
+    with open(path) as f:
+        return dict(json.load(f).get("meta") or {})
+
+
+def describe_meta(meta: dict) -> str:
+    if not meta:
+        return "no provenance header (older snapshot)"
+    return (
+        f"sha={str(meta.get('git_sha', 'unknown'))[:12]} "
+        f"date={meta.get('date', '?')} devices={meta.get('devices', '?')} "
+        f"platform={meta.get('platform', '?')}"
+    )
+
+
 def compare(
     old: dict[str, float],
     new: dict[str, float],
@@ -102,6 +119,8 @@ def main(argv=None) -> int:
         fail_on_vanished=args.fail_on_vanished,
     )
     print(f"# perf trajectory: {args.old} -> {args.new}")
+    print(f"#   old: {describe_meta(load_meta(args.old))}")
+    print(f"#   new: {describe_meta(load_meta(args.new))}")
     for line in lines:
         print(line)
     for n in notices:

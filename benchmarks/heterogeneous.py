@@ -141,10 +141,12 @@ def _measure_serial() -> tuple[float, dict]:
         return time.perf_counter() - t0, reports
 
 
-def _measure_concurrent() -> tuple[float, dict]:
+def _measure_concurrent(trace: bool = True) -> tuple[float, dict]:
     """Concurrent executor: overlap + preempt-mid-run.  A sweep shard is
     parked at its second chunk checkpoint just long enough for the train
-    tenant to arrive and preempt it mid-run."""
+    tenant to arrive and preempt it mid-run.  ``trace=False`` runs the same
+    mix with the structured tracer disabled — the paired leg the tracing
+    overhead bound is measured against."""
     from repro.platform import ExecutorHooks, Platform
 
     at_checkpoint, release = threading.Event(), threading.Event()
@@ -158,7 +160,8 @@ def _measure_concurrent() -> tuple[float, dict]:
     with tempfile.TemporaryDirectory() as ckpt_dir:
         low, train = _mix_specs(ckpt_dir)
         platform = Platform(
-            total_devices=8, hooks=ExecutorHooks(checkpoint=on_checkpoint)
+            total_devices=8, hooks=ExecutorHooks(checkpoint=on_checkpoint),
+            trace=trace,
         )
         t0 = time.perf_counter()
         low_names = platform.submit_batch(low)
@@ -197,6 +200,27 @@ def _platform_mix() -> None:
     # one-at-a-time total, with a real mid-run preemption
     assert conc_s < serial_s, (conc_s, serial_s)
     assert yields >= 1, "train never preempted a sweep mid-run"
+
+    # tracing overhead bound: the identical mix with the tracer disabled,
+    # best-of on both sides so a scheduler hiccup on either leg can't fake
+    # (or hide) overhead — the structured plane must cost <= 5% wall
+    on_best = conc_s
+    off_best = float("inf")
+    for attempt in range(3):
+        off_s, off_reports = _measure_concurrent(trace=False)
+        assert all(r.state == "DONE" for r in off_reports.values())
+        off_best = min(off_best, off_s)
+        if on_best <= off_best * 1.05:
+            break
+        on_s, on_reports = _measure_concurrent()
+        assert all(r.state == "DONE" for r in on_reports.values())
+        on_best = min(on_best, on_s)
+    row(
+        "hetero_concurrent_mix_notrace", off_best,
+        f"tenants=4;mode=concurrent;trace=off;trace_on_s={on_best:.2f};"
+        f"trace_overhead={on_best / off_best:.3f}x",
+    )
+    assert on_best <= off_best * 1.05, (on_best, off_best)
 
 
 # ---------------------------------------------------------------------------
@@ -506,6 +530,31 @@ def _chaos_mix() -> None:
         ff["cfrontend"].metrics["tokens"]
     # recovery cost is bounded: respawns + backoff, not a meltdown
     assert chaos_s < ff_s * 5.0, (chaos_s, ff_s)
+
+    # structured-trace export: the chaos campaign's full span stream dumped
+    # next to BENCH.json (CI uploads both as artifacts) plus the rendered
+    # per-stage report
+    from pathlib import Path
+
+    from repro.obs import text_report, write_jsonl
+
+    spans = p.tracer.spans()
+    write_jsonl(spans, "TRACE_7.jsonl")
+    Path("TRACE_7.txt").write_text(text_report(spans))
+    # chaos accounting, exactly once: every injection in summary() appears
+    # as exactly one chaos[kind] span event in the exported trace
+    ev_by_kind: dict = {}
+    for sp in spans:
+        for _t, ev_name, _tags in sp.events:
+            if ev_name.startswith("chaos["):
+                k = ev_name[len("chaos[") : -1]
+                ev_by_kind[k] = ev_by_kind.get(k, 0) + 1
+    assert ev_by_kind == dict(s["by_kind"]), (ev_by_kind, s["by_kind"])
+    row(
+        "chaos_trace_export", chaos_s,
+        f"spans={len(spans)};chaos_events={sum(ev_by_kind.values())};"
+        f"accounted=exactly_once",
+    )
 
 
 def run() -> None:

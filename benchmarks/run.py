@@ -6,15 +6,47 @@ Prints ``name,us_per_call,derived`` CSV; the derived column carries the
 paper-claim analog (speedups / efficiencies) next to the paper's number.
 ``--json OUT`` additionally writes the rows as machine-readable JSON
 (e.g. ``BENCH_serving.json``) so the perf trajectory is tracked across
-PRs.
+PRs.  The JSON carries a ``meta`` provenance header (git sha, UTC date,
+platform string, JAX device count) so a snapshot is attributable to the
+commit and machine that produced it.
 """
 
 from __future__ import annotations
 
 import argparse
+import datetime
 import json
+import platform as _platform
+import subprocess
 import sys
 import traceback
+
+
+def snapshot_meta() -> dict:
+    """Provenance header for a ``--json`` snapshot.  Every field degrades
+    to ``"unknown"`` rather than failing the run (e.g. a tarball checkout
+    with no git)."""
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except Exception:
+        sha = "unknown"
+    try:
+        import jax
+
+        devices = jax.device_count()
+    except Exception:
+        devices = 0
+    return {
+        "git_sha": sha,
+        "date": datetime.datetime.now(datetime.timezone.utc)
+        .strftime("%Y-%m-%dT%H:%M:%SZ"),
+        "platform": _platform.platform(),
+        "python": _platform.python_version(),
+        "devices": devices,
+    }
 
 MODULES = [
     ("pipeline_fusion", "§2.1 Spark-vs-MapReduce 5x (in-memory pipeline)"),
@@ -53,9 +85,16 @@ def main() -> None:
     if args.json:
         from benchmarks.common import RESULTS
 
+        meta = snapshot_meta()
         with open(args.json, "w") as f:
-            json.dump({"results": RESULTS, "failed": failed}, f, indent=2)
-        print(f"# wrote {len(RESULTS)} rows to {args.json}")
+            json.dump(
+                {"meta": meta, "results": RESULTS, "failed": failed},
+                f, indent=2,
+            )
+        print(
+            f"# wrote {len(RESULTS)} rows to {args.json} "
+            f"(sha={meta['git_sha'][:12]} devices={meta['devices']})"
+        )
     if failed:
         print(f"# FAILED: {failed}")
         sys.exit(1)

@@ -102,6 +102,11 @@ def main():
         assert reports[sweep].preemptions >= 1, "expected the sweep to be preempted"
         assert reports[sweep].resumes >= 1, "expected the sweep to resume"
         assert reports[sweep].devices_used < 8, "expected an elastic shrunk resume"
+
+        from repro.obs import text_report
+
+        print("\n=== structured trace: per-stage latency + critical path ===")
+        print(text_report(platform.tracer.spans()))
     elastic_scene()
 
 

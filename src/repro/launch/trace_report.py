@@ -1,0 +1,46 @@
+"""Render a platform trace dump: p50/p99 table + Perfetto export.
+
+    PYTHONPATH=src python -m repro.launch.trace_report TRACE_7.jsonl
+    PYTHONPATH=src python -m repro.launch.trace_report TRACE_7.jsonl \
+        --chrome trace.json --job serve
+
+``--chrome`` writes Chrome ``trace_event`` JSON; open
+https://ui.perfetto.dev and drop the file on it to get the timeline
+(one process track per job, one thread track per attempt/worker/cell).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs.export import read_jsonl, text_report, to_chrome_trace
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="JSONL trace dump (e.g. TRACE_7.jsonl)")
+    ap.add_argument("--job", default=None, help="restrict the report to one job")
+    ap.add_argument("--chrome", default=None, metavar="OUT",
+                    help="also write Chrome trace_event JSON for Perfetto")
+    args = ap.parse_args(argv)
+
+    spans = read_jsonl(args.trace)
+    if args.job is not None:
+        spans = [s for s in spans if s.job == args.job]
+    if not spans:
+        print(f"no spans in {args.trace}"
+              + (f" for job {args.job!r}" if args.job else ""))
+        return 1
+    print(f"# {len(spans)} spans from {args.trace}")
+    print(text_report(spans))
+    if args.chrome:
+        with open(args.chrome, "w") as f:
+            json.dump(to_chrome_trace(spans), f)
+        print(f"\nwrote {args.chrome} — open it at https://ui.perfetto.dev")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

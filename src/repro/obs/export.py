@@ -1,0 +1,191 @@
+"""Trace export: JSONL dump, Chrome ``trace_event``, text report.
+
+The JSONL dump is the interchange format (one span dict per line,
+sorted and key-stable, so identical traces produce identical bytes).
+``to_chrome_trace`` converts it to the Chrome/Perfetto ``trace_event``
+JSON — open ``https://ui.perfetto.dev`` and drop the file on it; each
+job becomes a process track, each attempt (worker/container) a thread
+track.  ``text_report`` is the terminal view: a per-stage p50/p99
+latency table plus a per-job critical-path summary.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Iterable, Optional
+
+from repro.obs.metrics import stage_summary
+from repro.obs.trace import Span
+
+
+def _as_spans(spans: Iterable) -> list[Span]:
+    return [s if isinstance(s, Span) else Span.from_dict(s) for s in spans]
+
+
+def write_jsonl(spans: Iterable, path: str) -> int:
+    """One span per line, sorted by (t0, id) — deterministic bytes."""
+    out = sorted(_as_spans(spans), key=lambda s: (s.t0, s.job, s.attempt, s.span))
+    with open(path, "w") as f:
+        for s in out:
+            f.write(json.dumps(s.to_dict(), sort_keys=True) + "\n")
+    return len(out)
+
+
+def read_jsonl(path: str) -> list[Span]:
+    spans = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                spans.append(Span.from_dict(json.loads(line)))
+    return spans
+
+
+def _track(s: Span) -> str:
+    """Thread-track key within a job's process track."""
+    if "track" in s.tags:
+        return str(s.tags["track"])
+    if s.attempt:
+        return f"attempt {s.attempt}"
+    return "lifecycle"
+
+
+def to_chrome_trace(spans: Iterable) -> dict:
+    """Chrome ``trace_event`` JSON: ``{"traceEvents": [...]}``.
+
+    Tracks: pid per job (``process_name`` metadata), tid per attempt /
+    worker / cell within it (``thread_name``).  Spans become complete
+    ("X") events with microsecond ts/dur; span events become instants
+    ("i").  Open-ended spans (a killed worker's) export with dur 0 and
+    an ``unclosed`` arg rather than being dropped.
+    """
+    spans = sorted(_as_spans(spans), key=lambda s: (s.t0, s.job, s.attempt, s.span))
+    jobs = sorted({s.job for s in spans})
+    pid = {job: i + 1 for i, job in enumerate(jobs)}
+    tid: dict[tuple, int] = {}
+    for s in spans:
+        key = (s.job, _track(s))
+        if key not in tid:
+            tid[key] = len([k for k in tid if k[0] == s.job]) + 1
+
+    events: list[dict] = []
+    for job in jobs:
+        events.append({
+            "name": "process_name", "ph": "M", "pid": pid[job], "tid": 0,
+            "ts": 0, "args": {"name": job},
+        })
+    for (job, track), t in sorted(tid.items(), key=lambda kv: (kv[0][0], kv[1])):
+        events.append({
+            "name": "thread_name", "ph": "M", "pid": pid[job], "tid": t,
+            "ts": 0, "args": {"name": track},
+        })
+
+    t_min = min((s.t0 for s in spans), default=0.0)
+    for s in spans:
+        p, t = pid[s.job], tid[(s.job, _track(s))]
+        dur = max(((s.t1 if s.t1 is not None else s.t0) - s.t0) * 1e6, 0.0)
+        args = {k: v for k, v in s.tags.items()}
+        args["span_id"] = f"{s.job}/{s.attempt}/{s.span}"
+        if s.parent is not None:
+            args["parent"] = "/".join(map(str, s.parent))
+        if s.t1 is None:
+            args["unclosed"] = True
+        events.append({
+            "name": s.name, "ph": "X", "pid": p, "tid": t,
+            "ts": (s.t0 - t_min) * 1e6, "dur": dur, "args": args,
+        })
+        for (te, name, tags) in s.events:
+            events.append({
+                "name": name, "ph": "i", "s": "t", "pid": p, "tid": t,
+                "ts": (te - t_min) * 1e6, "args": dict(tags),
+            })
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+def validate_chrome(trace: dict) -> None:
+    """Raise ``ValueError`` on trace_event schema violations.
+
+    Checks the invariants Perfetto's importer relies on: top-level
+    ``traceEvents`` list, every event carries name/ph/pid/tid and a
+    numeric non-negative ts, complete events carry a non-negative dur,
+    and every (pid, tid) used by an event is named by metadata.
+    """
+    if not isinstance(trace, dict) or not isinstance(trace.get("traceEvents"), list):
+        raise ValueError("trace must be a dict with a traceEvents list")
+    named_pids, named_tids = set(), set()
+    for ev in trace["traceEvents"]:
+        for field in ("name", "ph", "pid", "tid"):
+            if field not in ev:
+                raise ValueError(f"event missing {field!r}: {ev!r}")
+        if ev["ph"] not in ("X", "M", "i", "B", "E"):
+            raise ValueError(f"unknown phase {ev['ph']!r}")
+        if not isinstance(ev.get("ts"), (int, float)) or ev["ts"] < 0:
+            raise ValueError(f"bad ts in {ev!r}")
+        if ev["ph"] == "X":
+            if not isinstance(ev.get("dur"), (int, float)) or ev["dur"] < 0:
+                raise ValueError(f"complete event missing dur: {ev!r}")
+        if ev["ph"] == "M":
+            if ev["name"] == "process_name":
+                named_pids.add(ev["pid"])
+            elif ev["name"] == "thread_name":
+                named_tids.add((ev["pid"], ev["tid"]))
+    for ev in trace["traceEvents"]:
+        if ev["ph"] in ("X", "i"):
+            if ev["pid"] not in named_pids:
+                raise ValueError(f"pid {ev['pid']} has no process_name metadata")
+            if (ev["pid"], ev["tid"]) not in named_tids:
+                raise ValueError(
+                    f"tid {ev['tid']} in pid {ev['pid']} has no thread_name metadata"
+                )
+
+
+def text_report(spans: Iterable, job: Optional[str] = None) -> str:
+    """Per-stage p50/p99 table + per-job critical-path summary."""
+    spans = _as_spans(spans)
+    if job is not None:
+        spans = [s for s in spans if s.job == job]
+    if not spans:
+        return "(no spans)"
+
+    stages = stage_summary(spans)
+    lines = ["stage latency (s)"]
+    w = max([len("stage")] + [len(n) for n in stages])
+    lines.append(f"{'stage':<{w}}  {'count':>6}  {'p50':>9}  {'p99':>9}  {'total':>9}")
+    for name, st in stages.items():
+        lines.append(
+            f"{name:<{w}}  {st['count']:>6}  {st['p50_s']:>9.4f}  "
+            f"{st['p99_s']:>9.4f}  {st['total_s']:>9.3f}"
+        )
+
+    lines.append("")
+    lines.append("critical path by job")
+    by_job: dict[str, list] = {}
+    for s in spans:
+        by_job.setdefault(s.job, []).append(s)
+    for jname in sorted(by_job):
+        js = by_job[jname]
+        roots = [s for s in js if s.name == "job"]
+        wall = roots[0].duration_s if roots else max(
+            (s.duration_s for s in js if s.t1 is not None), default=0.0
+        )
+        attempts = max((s.attempt for s in js), default=0)
+        chaos = sum(
+            1 for s in js for (_, n, _) in s.events if n.startswith("chaos[")
+        )
+        # dominant stage = stage with the largest closed-span total,
+        # excluding the all-enclosing job/attempt wrappers
+        totals: dict[str, float] = {}
+        for s in js:
+            if s.t1 is not None and s.name not in ("job", "attempt", "isolated_run"):
+                totals[s.name] = totals.get(s.name, 0.0) + s.duration_s
+        if totals:
+            dom = max(sorted(totals), key=lambda n: totals[n])
+            dom_txt = f"dominant stage {dom} ({totals[dom]:.3f}s)"
+        else:
+            dom_txt = "no stage spans"
+        chaos_txt = f", {chaos} chaos events" if chaos else ""
+        lines.append(
+            f"  {jname}: wall {wall:.3f}s over {attempts} attempt(s), "
+            f"{dom_txt}{chaos_txt}"
+        )
+    return "\n".join(lines)

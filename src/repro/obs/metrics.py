@@ -1,0 +1,139 @@
+"""Lock-safe counter/gauge/histogram registry.
+
+One registry per ``Platform`` (``platform.obs``).  Drivers reach it
+through the ``CheckpointToken`` the executor binds, so workload code
+never imports the client.  Histograms keep raw observations (platform
+runs are bounded — thousands of samples, not millions) and compute
+percentiles at ``snapshot()`` time; snapshots are plain dicts of
+scalars, safe to stash in ``JobReport.metrics``.
+
+Catalog (what the platform itself records):
+
+======================  =========  =========================================
+name                    type       meaning
+======================  =========  =========================================
+pool_utilization        gauge/hist fraction of devices claimed at dispatch
+queue_wait_s.<kind>     histogram  submit/requeue -> worker start, per kind
+checkpoint_s.<kind>     histogram  full checkpoint() round-trip, per kind
+serve_queue_wait_s      histogram  request arrival -> admission
+serve_prefill_s         histogram  per-request prefill compute
+serve_decode_step_s     histogram  one engine decode step
+serve_ttft_s            histogram  arrival -> first token
+serve_tokens_per_s      histogram  per-attempt decode throughput
+preempts / resumes      counter    scheduler preemption round-trips
+resize_offers           counter    elastic offers posted
+resizes_committed       counter    offers accepted + re-granted
+retries                 counter    container-failure resubmits
+cancels                 counter    cancel() requests
+jobs_<state>            counter    terminal states (jobs_done, ...)
+chaos_injections[.kind] counter    chaos faults actually injected
+======================  =========  =========================================
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Iterable, Optional
+
+from repro.obs.trace import Span
+
+
+def percentile(sorted_vals: list, q: float) -> float:
+    """Nearest-rank-with-interpolation percentile of a pre-sorted list."""
+    if not sorted_vals:
+        return 0.0
+    if len(sorted_vals) == 1:
+        return float(sorted_vals[0])
+    pos = (len(sorted_vals) - 1) * q
+    lo = int(pos)
+    hi = min(lo + 1, len(sorted_vals) - 1)
+    frac = pos - lo
+    return float(sorted_vals[lo] * (1.0 - frac) + sorted_vals[hi] * frac)
+
+
+class MetricsRegistry:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._counters: dict[str, float] = {}
+        self._gauges: dict[str, float] = {}
+        self._hists: dict[str, list] = {}
+
+    def inc(self, name: str, v: float = 1.0) -> None:
+        with self._lock:
+            self._counters[name] = self._counters.get(name, 0.0) + v
+
+    def gauge(self, name: str, v: float) -> None:
+        with self._lock:
+            self._gauges[name] = float(v)
+
+    def observe(self, name: str, v: float) -> None:
+        with self._lock:
+            self._hists.setdefault(name, []).append(float(v))
+
+    def counter(self, name: str) -> float:
+        with self._lock:
+            return self._counters.get(name, 0.0)
+
+    def snapshot(self) -> dict:
+        """Scalars-only snapshot: counters, gauges, histogram summaries."""
+        with self._lock:
+            counters = dict(self._counters)
+            gauges = dict(self._gauges)
+            hists = {k: list(v) for k, v in self._hists.items()}
+        out = {"counters": counters, "gauges": gauges, "histograms": {}}
+        for name, vals in sorted(hists.items()):
+            vals.sort()
+            out["histograms"][name] = {
+                "count": len(vals),
+                "total": float(sum(vals)),
+                "mean": float(sum(vals) / len(vals)) if vals else 0.0,
+                "p50": percentile(vals, 0.50),
+                "p99": percentile(vals, 0.99),
+                "max": float(vals[-1]) if vals else 0.0,
+            }
+        return out
+
+    def dump(self) -> dict:
+        """Raw state, for shipping across a process boundary."""
+        with self._lock:
+            return {
+                "counters": dict(self._counters),
+                "gauges": dict(self._gauges),
+                "histograms": {k: list(v) for k, v in self._hists.items()},
+            }
+
+    def merge(self, dump: dict) -> None:
+        """Fold another registry's ``dump()`` into this one."""
+        with self._lock:
+            for k, v in (dump.get("counters") or {}).items():
+                self._counters[k] = self._counters.get(k, 0.0) + v
+            for k, v in (dump.get("gauges") or {}).items():
+                self._gauges[k] = float(v)
+            for k, vals in (dump.get("histograms") or {}).items():
+                self._hists.setdefault(k, []).extend(vals)
+
+
+def stage_summary(spans: Iterable[Span], top: Optional[int] = None) -> dict:
+    """Per-stage duration summary over closed spans.
+
+    Returns ``{stage: {count, total_s, p50_s, p99_s}}`` — the compact
+    per-job telemetry stashed under ``JobReport.metrics["obs"]``.
+    """
+    by_name: dict[str, list] = {}
+    for s in spans:
+        if s.t1 is None:
+            continue
+        by_name.setdefault(s.name, []).append(s.duration_s)
+    out = {}
+    names = sorted(by_name, key=lambda n: -sum(by_name[n]))
+    if top is not None:
+        names = names[:top]
+    for name in sorted(names):
+        durs = sorted(by_name[name])
+        out[name] = {
+            "count": len(durs),
+            "total_s": float(sum(durs)),
+            "p50_s": percentile(durs, 0.50),
+            "p99_s": percentile(durs, 0.99),
+        }
+    return out

@@ -13,6 +13,14 @@ autonomous-driving workload.  This package is that surface:
   (pending -> running -> preempted -> resumed -> done/failed) and per-job events,
 * :class:`JobReport` — the uniform result schema every service emits.
 
+Every platform also carries an observability plane (``repro.obs``): a
+structured :class:`~repro.obs.trace.Tracer` (``Platform.tracer``) whose
+spans cover the full job lifecycle — queue wait, attempts, every
+checkpoint, enforcement ladders, resize commits, serve stages — and a
+:class:`~repro.obs.metrics.MetricsRegistry` (``Platform.obs``) snapshotted
+via :meth:`Platform.metrics_snapshot`.  The per-job string event log is a
+rendered view over the same structured records.
+
 Importing this package registers the five built-in drivers (train,
 simulate, scenario, mapgen, serve); the ``repro.launch.*`` CLIs are thin
 wrappers that parse flags into a JobSpec and submit here.
@@ -44,6 +52,7 @@ from repro.platform.driver import (
     register_driver,
     unregister_driver,
 )
+from repro.obs import MetricsRegistry, Span, Tracer
 from repro.platform.elastic import ElasticController
 from repro.platform.services import (
     MapGenJobConfig,
@@ -75,7 +84,10 @@ __all__ = [
     "JobReport",
     "JobSpec",
     "MapGenJobConfig",
+    "MetricsRegistry",
     "Platform",
+    "Span",
+    "Tracer",
     "ScenarioJobConfig",
     "ServeJobConfig",
     "ServiceDriver",

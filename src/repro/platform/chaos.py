@@ -197,6 +197,16 @@ class ChaosController:
         rec = p._records.get(target)
         if rec is not None:
             rec.log(f"chaos[{ev.kind}]: {detail}", p._clock())
+            # the injection itself, as a distinct span event on the target
+            # job's trace — exactly one per ``injected`` entry (the ipc
+            # faults log a second "applied" *line* later, but never a
+            # second event), so trace exports can account for every fault
+            p.tracer.event(
+                rec.root, f"chaos[{ev.kind}]",
+                target=target, detail=detail, injection=len(self.injected),
+            )
+        p.obs.inc("chaos_injections")
+        p.obs.inc(f"chaos_injections.{ev.kind}")
         return entry
 
     def _inject(self, ev: FaultEvent) -> bool:

@@ -85,6 +85,8 @@ from repro.platform.driver import (
     ServiceDriver,
     get_driver,
 )
+from repro.obs.metrics import MetricsRegistry, stage_summary
+from repro.obs.trace import Tracer
 from repro.platform.chaos import ChaosController, FaultPlan
 from repro.platform.elastic import ElasticController
 from repro.platform.spec import JobReport, JobSpec
@@ -152,11 +154,27 @@ class _JobRecord:
     cancel_requested: bool = False
     driver_state: dict = dataclasses.field(default_factory=dict)
     metrics: dict = dataclasses.field(default_factory=dict)
-    events: list[str] = dataclasses.field(default_factory=list)
+    # structured event stream: (absolute clock timestamp, message).  The
+    # legacy "+N.NNs msg" strings are a rendered view (``events``), so
+    # concurrent tenants' records merge onto one absolute timeline.
+    records: list[tuple[float, str]] = dataclasses.field(default_factory=list)
     error: Optional[str] = None
+    # observability: the platform tracer, this job's root span, attempts
+    tracer: Optional[Tracer] = None
+    root: Any = None
+    attempts: int = 0
+    enqueued_at: float = 0.0  # last submit/requeue time (queue-wait origin)
 
     def log(self, msg: str, now: float) -> None:
-        self.events.append(f"+{now - self.submitted_at:.2f}s {msg}")
+        self.records.append((now, msg))
+        if self.tracer is not None:
+            self.tracer.event(self.root, "log", t=now, msg=msg)
+
+    @property
+    def events(self) -> list[str]:
+        """Rendered view over ``records`` — byte-identical to the
+        pre-structured format (offsets from ``submitted_at``)."""
+        return [f"+{t - self.submitted_at:.2f}s {m}" for t, m in self.records]
 
 
 def _wants_token(driver: ServiceDriver) -> bool:
@@ -184,11 +202,17 @@ class Platform:
         heal_after_s: Optional[float] = None,
         chaos_plan: Optional[FaultPlan] = None,
         chaos_poll_s: float = 0.02,
+        trace: bool = True,
     ):
         self.rm = rm if rm is not None else ResourceManager(total_devices)
         self.concurrent = concurrent
         self.hooks = hooks if hooks is not None else ExecutorHooks()
         self._clock = clock
+        # structured observability: one tracer + one metrics registry per
+        # platform.  ``trace=False`` disables span recording entirely (the
+        # benchmark overhead-off leg); the event log and metrics stay on.
+        self.tracer = Tracer(clock=clock, enabled=trace)
+        self.obs = MetricsRegistry()
         # container-failure resubmission: exponential backoff with jitter
         # (delay = min(cap, base * 2^(retry-1)) * U[0.5, 1.5)); base <= 0
         # disables the hold entirely (immediate requeue, the PR-4 behavior)
@@ -262,6 +286,13 @@ class Platform:
             )
             name = self.rm.submit(job)  # auto-uniquifies duplicate names
             self._records[name] = rec
+            rec.tracer = self.tracer
+            rec.enqueued_at = rec.submitted_at
+            rec.root = self.tracer.start(
+                "job", job=name, t=rec.submitted_at, kind=spec.kind,
+                devices=spec.devices, priority=spec.priority,
+                isolation=spec.isolation,
+            )
             rec.log(f"submitted kind={spec.kind} want={spec.devices} "
                     f"priority={spec.priority}", self._clock())
             # the submit may have preempted running tenants: flag their tokens
@@ -292,14 +323,19 @@ class Platform:
             if cur == JOB_RUNNING:
                 c = job.container
                 verb = "resumed" if prev == JOB_PREEMPTED else "scheduled"
+                if prev == JOB_PREEMPTED:
+                    self.obs.inc("resumes")
                 rec.log(f"{verb} on container {c.cid} ({c.size} devices)", now)
             elif cur == JOB_PREEMPTED:
                 rec.log("preempted (devices reclaimed by higher priority)", now)
+                self.obs.inc("preempts")
+                rec.enqueued_at = now  # queue-wait clock restarts here
                 worker = self._active.get(name)
                 if worker is not None:
                     worker.token.request_stop(PREEMPT)
             elif cur == JOB_PENDING:
                 rec.log("requeued", now)
+                rec.enqueued_at = now
             rec.last_rm_state = cur
             rec.state = cur
 
@@ -312,6 +348,9 @@ class Platform:
         rec.error = error
         rec.finished_at = now
         rec.log(state.lower() if not error else f"failed: {error}", now)
+        self.obs.inc(f"jobs_{state.lower()}")
+        self.tracer.tag(rec.root, state=state)
+        self.tracer.end(rec.root, t=now)
         # frees the container, reschedules the queue; co-tenants sharing the
         # ResourceManager see the real outcome, not a blanket "done"
         self.rm.complete(name, state=JOB_FAILED if state == FAILED else JOB_DONE)
@@ -338,6 +377,7 @@ class Platform:
             self._finish(name, FAILED, error=str(e))
             return
         rec.retries += 1
+        self.obs.inc("retries")
         delay = self._retry_delay(rec.retries)
         if delay > 0:
             rec.log(
@@ -422,8 +462,7 @@ class Platform:
             if rec.cancel_requested:
                 token.request_stop(CANCEL)
             rec.devices_used = container.size
-            if rec.first_run_at is None:
-                rec.first_run_at = self._clock()
+            self._note_dispatch(name, rec)
             worker = _Worker(token=token, devices=devices)
             self._active[name] = worker
             worker.thread = threading.Thread(
@@ -435,7 +474,26 @@ class Platform:
             worker.thread.start()
             claimed |= devices
             started += 1
+        if started:
+            self.obs.gauge(
+                "pool_utilization", len(claimed) / max(self.rm.total, 1))
+            self.obs.observe(
+                "pool_utilization", len(claimed) / max(self.rm.total, 1))
         return started
+
+    def _note_dispatch(self, name: str, rec: _JobRecord) -> None:
+        """Record the queue-wait that just ended (platform lock held): a
+        closed span from the last submit/requeue to now, plus the per-kind
+        queue-wait histogram sample."""
+        now = self._clock()
+        if rec.first_run_at is None:
+            rec.first_run_at = now
+        qs = self.tracer.start(
+            "queue_wait", job=name, parent=rec.root, t=rec.enqueued_at)
+        self.tracer.end(qs, t=now)
+        self.obs.observe(
+            f"queue_wait_s.{rec.spec.kind}", max(now - rec.enqueued_at, 0.0))
+        rec.enqueued_at = now
 
     def _execute(
         self, name: str, rec: _JobRecord, container, token: CheckpointToken
@@ -445,6 +503,18 @@ class Platform:
         terminal-state-aware (defense in depth): a job that somehow reached
         a terminal state while the driver ran keeps it instead of being
         overwritten."""
+        with self._cond:
+            rec.attempts += 1
+            attempt = rec.attempts
+        span = self.tracer.start(
+            "attempt", job=name, attempt=attempt, parent=rec.root,
+            container=container.cid, devices=container.size,
+            kind=rec.spec.kind, isolation=rec.spec.isolation,
+        )
+        token.bind_obs(
+            tracer=self.tracer, span=span, obs=self.obs,
+            kind=rec.spec.kind, attempt=attempt,
+        )
         t0 = time.perf_counter()
         try:
             if rec.spec.isolation == "process":
@@ -467,6 +537,8 @@ class Platform:
             else:
                 metrics = rec.driver.run(container, rec.ctx)
         except JobInterrupted as e:
+            self.tracer.tag(span, outcome=e.reason.lower())
+            self.tracer.end(span)
             with self._cond:
                 rec.run_time_s += time.perf_counter() - t0
                 rec.checkpoints += token.checkpoints
@@ -486,17 +558,23 @@ class Platform:
                     # redispatched once devices (and any worker claim) free
                     self._observe()
         except ContainerFailure as e:
+            self.tracer.tag(span, outcome="container_failure")
+            self.tracer.end(span)
             with self._cond:
                 rec.run_time_s += time.perf_counter() - t0
                 rec.checkpoints += token.checkpoints
                 self._handle_container_failure(name, container, e)
         except Exception as e:  # driver bug / bad workload: job fails, pool survives
+            self.tracer.tag(span, outcome="error")
+            self.tracer.end(span)
             with self._cond:
                 rec.run_time_s += time.perf_counter() - t0
                 rec.checkpoints += token.checkpoints
                 if rec.state not in TERMINAL:
                     self._finish(name, FAILED, error=f"{type(e).__name__}: {e}")
         else:
+            self.tracer.tag(span, outcome="done")
+            self.tracer.end(span)
             with self._cond:
                 rec.run_time_s += time.perf_counter() - t0
                 rec.checkpoints += token.checkpoints
@@ -527,8 +605,15 @@ class Platform:
             f"yielded at checkpoint {token.checkpoints} "
             f"(accepted resize offer: {old} -> {offer.target_devices} "
             f"devices, {offer.reason})", self._clock())
+        rspan = self.tracer.start(
+            "resize_commit", job=name, attempt=rec.attempts, parent=rec.root,
+            old=old, new=offer.target_devices, reason=offer.reason,
+        )
         c = self.rm.resize(name, offer.target_devices)
+        self.tracer.tag(rspan, granted=c is not None)
+        self.tracer.end(rspan)
         if c is not None:
+            self.obs.inc("resizes_committed")
             rec.log(f"re-granted container {c.cid} ({c.size} devices)",
                     self._clock())
             rec.state = rec.last_rm_state = JOB_RUNNING
@@ -581,8 +666,7 @@ class Platform:
             job = self.rm.jobs[name]
             container = job.container
             rec.devices_used = container.size
-            if rec.first_run_at is None:
-                rec.first_run_at = self._clock()
+            self._note_dispatch(name, rec)
             token = CheckpointToken(
                 name, state=rec.driver_state, on_checkpoint=self.hooks.checkpoint
             )
@@ -613,6 +697,28 @@ class Platform:
             self._observe()
             return list(self._records[name].events)
 
+    def timeline(self) -> list[str]:
+        """All tenants' structured event records merged on one absolute
+        timeline (offsets from the earliest record), tagged by job —
+        the cross-tenant view the per-job offset rendering can't give."""
+        with self._cond:
+            self._observe()
+            recs = [
+                (t, name, msg)
+                for name, rec in self._records.items()
+                for (t, msg) in rec.records
+            ]
+        recs.sort(key=lambda r: (r[0], r[1]))
+        if not recs:
+            return []
+        t0 = recs[0][0]
+        return [f"+{t - t0:.2f}s [{n}] {m}" for t, n, m in recs]
+
+    def metrics_snapshot(self) -> dict:
+        """Platform-wide metrics registry snapshot (counters, gauges,
+        histogram percentiles) — see ``repro.obs.metrics`` for the catalog."""
+        return self.obs.snapshot()
+
     def active_workers(self) -> list[str]:
         """Names of jobs a worker thread is currently executing."""
         with self._cond:
@@ -628,6 +734,7 @@ class Platform:
             rec = self._records[name]
             if rec.state in TERMINAL or rec.cancel_requested:
                 return False
+            self.obs.inc("cancels")
             now = self._clock()
             worker = self._active.get(name)
             if worker is not None:
@@ -639,6 +746,9 @@ class Platform:
             rec.state = CANCELLED
             rec.finished_at = now
             rec.log("cancelled", now)
+            self.obs.inc("jobs_cancelled")
+            self.tracer.tag(rec.root, state=CANCELLED)
+            self.tracer.end(rec.root, t=now)
             self.rm.complete(name)
             self._observe()
             self._cond.notify_all()
@@ -842,7 +952,17 @@ class Platform:
                 resizes=job.resizes,
                 retries=rec.retries,
                 checkpoints=rec.checkpoints,
-                metrics=dict(rec.metrics),
+                metrics=self._report_metrics(name, rec),
                 events=list(rec.events),
                 error=rec.error,
             )
+
+    def _report_metrics(self, name: str, rec: _JobRecord) -> dict:
+        """Driver metrics plus a per-job span-stage summary under "obs"
+        (count/total/p50/p99 per stage) when tracing is on."""
+        metrics = dict(rec.metrics)
+        if self.tracer.enabled:
+            spans = self.tracer.spans(name)
+            if spans:
+                metrics["obs"] = stage_summary(spans)
+        return metrics

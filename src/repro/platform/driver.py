@@ -116,6 +116,33 @@ class CheckpointToken:
         # isolation only; None for in-thread drivers) — the chaos layer's
         # SIGKILL target
         self.worker_pid: Optional[int] = None
+        # observability bindings (set by the executor via bind_obs; all
+        # tolerate staying None so bare tokens in unit tests keep working)
+        self.tracer: Optional[Any] = None  # repro.obs.Tracer
+        self.span: Optional[Any] = None  # the enclosing attempt span
+        self.obs: Optional[Any] = None  # repro.obs.MetricsRegistry
+        self.kind: str = "?"
+        self.attempt: int = 0
+
+    def bind_obs(
+        self,
+        *,
+        tracer: Optional[Any] = None,
+        span: Optional[Any] = None,
+        obs: Optional[Any] = None,
+        kind: Optional[str] = None,
+        attempt: Optional[int] = None,
+    ) -> None:
+        """Attach tracing/metrics context for this attempt.  Checkpoints
+        then record spans under the attempt span and per-kind duration
+        histograms; unbound tokens skip both."""
+        self.tracer = tracer
+        self.span = span
+        self.obs = obs
+        if kind is not None:
+            self.kind = kind
+        if attempt is not None:
+            self.attempt = attempt
 
     def request_stop(self, reason: str) -> None:
         self.reason = reason  # write before set(): checkpoint reads after wait
@@ -176,30 +203,60 @@ class CheckpointToken:
         for _, seconds in stalls:
             time.sleep(float(seconds))
 
+    def _timed_save(self, save, tr, sp) -> None:
+        """Run the driver's save hook, recording its duration on the
+        checkpoint span (the "save" phase of the protocol)."""
+        if save is None:
+            return
+        t0 = time.perf_counter()
+        try:
+            save()
+        finally:
+            if tr is not None:
+                tr.event(sp, "save", save_s=time.perf_counter() - t0)
+
     def checkpoint(self, save: Optional[Callable[[], None]] = None) -> None:
         self.checkpoints += 1
-        if self._on_checkpoint is not None:
-            # test harness hook: barriers/gates injected here make preempt-
-            # mid-run interleavings deterministic (no sleeps)
-            self._on_checkpoint(self.job_name, self)
-        self._consume_stalls()
-        if self._stop.is_set():
-            # a preempt/cancel outranks any pending resize; the offer is
-            # dropped (the controller re-issues against live state)
-            self._resize = None
-            if save is not None:
-                save()
-            raise JobInterrupted(self.reason or CANCEL)
-        fault = self.take_fault()
-        if fault is not None:
-            # injected device death: no save (the devices are "gone"); the
-            # executor quarantines and resubmits through the retry path
-            raise ContainerFailure(fault[0], dead_devices=fault[1])
-        offer = self.take_resize()
-        if offer is not None:
-            if save is not None:
-                save()
-            raise JobInterrupted(RESIZE, offer=offer)
+        tr, sp = self.tracer, None
+        if tr is not None:
+            sp = tr.start(
+                "checkpoint", job=self.job_name, attempt=self.attempt,
+                parent=self.span, n=self.checkpoints,
+            )
+        t0 = time.perf_counter()
+        outcome = "continue"
+        try:
+            if self._on_checkpoint is not None:
+                # test harness hook: barriers/gates injected here make
+                # preempt-mid-run interleavings deterministic (no sleeps)
+                self._on_checkpoint(self.job_name, self)
+            self._consume_stalls()
+            if self._stop.is_set():
+                # a preempt/cancel outranks any pending resize; the offer is
+                # dropped (the controller re-issues against live state)
+                self._resize = None
+                self._timed_save(save, tr, sp)
+                outcome = (self.reason or CANCEL).lower()
+                raise JobInterrupted(self.reason or CANCEL)
+            fault = self.take_fault()
+            if fault is not None:
+                # injected device death: no save (the devices are "gone");
+                # the executor quarantines and resubmits via the retry path
+                outcome = "fault"
+                raise ContainerFailure(fault[0], dead_devices=fault[1])
+            offer = self.take_resize()
+            if offer is not None:
+                self._timed_save(save, tr, sp)
+                outcome = "resize"
+                raise JobInterrupted(RESIZE, offer=offer)
+        finally:
+            if tr is not None:
+                tr.tag(sp, outcome=outcome)
+                tr.end(sp)
+            if self.obs is not None:
+                self.obs.observe(
+                    f"checkpoint_s.{self.kind}", time.perf_counter() - t0
+                )
 
 
 class UnknownServiceKind(ValueError):

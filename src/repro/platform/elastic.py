@@ -156,6 +156,11 @@ class ElasticController:
             f"({reason})", p._clock(),
         )
         self.offered.append(offer)
+        p.obs.inc("resize_offers")
+        p.tracer.event(
+            rec.root, "resize_offer",
+            old=container.size, new=target, reason=reason,
+        )
         return offer
 
     # -- control loop ---------------------------------------------------

@@ -9,12 +9,19 @@ container's devices via the ``--xla_force_host_platform_device_count``
 idiom (the same fake-device trick ``launch/dryrun.py`` uses), with the
 CheckpointToken protocol carried over a pickle-framed pipe pair:
 
-    parent -> child   bootstrap {spec, container, resume state}
+    parent -> child   bootstrap {spec, container, resume state, trace ctx}
     child  -> parent  ("checkpoint", n, state)    at every token.checkpoint()
     parent -> child   ("continue", directives) | ("stop", reason)
                       | ("resize", offer) | ("fault", msg, dead_devices)
-    child  -> parent  ("done", metrics, state) | ("interrupted", reason,
-                      offer, state) | ("error", kind, msg, dead, state)
+    child  -> parent  ("done", metrics, state, spans) | ("interrupted",
+                      reason, offer, state, spans) | ("error", kind, msg,
+                      dead, state, spans)
+
+The bootstrap's trace context (parent span id + clock origin) lets the
+child run its own :class:`~repro.obs.trace.Tracer` whose spans nest under
+the supervising worker's attempt span; the child's span dicts ride the
+terminal frame (never a droppable checkpoint frame) and are merged into
+the parent tracer, so one timeline covers both sides of the boundary.
 
 The child blocks inside ``checkpoint()`` waiting for the reply, so the
 parent-side supervisor mirrors the thread executor's semantics exactly: the
@@ -103,17 +110,30 @@ def _noop_log(msg: str) -> None:
 def _enforce_kill(proc, token, log, term_wait_s: float = 1.0) -> None:
     """The enforcement ladder: SIGTERM, a short wait, then SIGKILL."""
     reason = (token.reason or CANCEL).lower()
+    tr = token.tracer
+    sp = None
+    if tr is not None:
+        sp = tr.start(
+            "enforce", job=token.job_name, attempt=token.attempt,
+            parent=token.span, reason=reason, pid=proc.pid,
+        )
     log(f"grace window expired; enforcing {reason} with SIGTERM "
         f"(pid={proc.pid})")
+    if tr is not None:
+        tr.event(sp, "sigterm", pid=proc.pid)
     proc.terminate()
     try:
         proc.wait(timeout=term_wait_s)
     except subprocess.TimeoutExpired:
         log(f"SIGTERM ignored; SIGKILL (pid={proc.pid})")
+        if tr is not None:
+            tr.event(sp, "sigkill", pid=proc.pid)
         proc.kill()
         proc.wait(timeout=10.0)
     log("isolated worker killed (enforced interruption); "
         "resuming from the last checkpoint snapshot")
+    if tr is not None:
+        tr.end(sp)
 
 
 def run_isolated(
@@ -170,12 +190,34 @@ def run_isolated(
                 f"isolated worker died mid-message (pid={proc.pid}, "
                 f"rc={proc.returncode})", dead_devices=0) from None
 
+    # span context crosses the isolation boundary inside the bootstrap
+    # frame: the child builds its own tracer on a clock anchored to the
+    # parent's, numbers spans from CHILD_SPAN_BASE (no id collisions),
+    # and ships its span dicts back on the terminal frame for merge()
+    tr = token.tracer
+    trace_info = None
+    if tr is not None and getattr(tr, "enabled", False):
+        trace_info = {
+            "enabled": True,
+            "job": token.job_name,
+            "attempt": token.attempt,
+            "parent": (
+                list(token.span.span_id) if token.span is not None else None
+            ),
+            "clock0": tr.now(),
+        }
+
+    def merge_spans(frame_spans) -> None:
+        if tr is not None and frame_spans:
+            tr.merge(frame_spans)
+
     try:
         send({
             "spec": spec,
             "cid": container.cid,
             "device_ids": container.device_ids,
             "state": token.state,
+            "trace": trace_info,
         })
         while True:
             if token.should_stop() and stop_deadline is None:
@@ -236,18 +278,21 @@ def run_isolated(
             elif kind == "done":
                 token.state.clear()
                 token.state.update(msg[2])
+                merge_spans(msg[3] if len(msg) > 3 else None)
                 proc.wait(timeout=30.0)
                 return msg[1]
             elif kind == "interrupted":
                 reason, offer, snapshot = msg[1], msg[2], msg[3]
                 token.state.clear()
                 token.state.update(snapshot)
+                merge_spans(msg[4] if len(msg) > 4 else None)
                 proc.wait(timeout=30.0)
                 raise JobInterrupted(reason, offer=offer)
             elif kind == "error":
                 ekind, emsg, dead, snapshot = msg[1], msg[2], msg[3], msg[4]
                 token.state.clear()
                 token.state.update(snapshot)
+                merge_spans(msg[5] if len(msg) > 5 else None)
                 proc.wait(timeout=30.0)
                 if ekind == "ContainerFailure":
                     raise ContainerFailure(emsg, dead_devices=int(dead or 0))
@@ -284,27 +329,45 @@ class _ChildToken(CheckpointToken):
 
     def checkpoint(self, save=None) -> None:
         self.checkpoints += 1
-        self._consume_stalls()  # stalls shipped with an earlier reply
-        _send(self._w, ("checkpoint", self.checkpoints, self.state))
-        reply = _recv(self._r)
-        kind = reply[0]
-        if kind == "continue":
-            for d in reply[1]:
-                self.post_directive(d)
-            # a ("stall_checkpoint", s) directive stalls *this* checkpoint
-            self._consume_stalls()
-            return
-        if kind == "stop":
-            if save is not None:
-                save()
-            raise JobInterrupted(reply[1])
-        if kind == "fault":
-            raise ContainerFailure(reply[1], dead_devices=int(reply[2]))
-        if kind == "resize":
-            if save is not None:
-                save()
-            raise JobInterrupted(RESIZE, offer=reply[1])
-        raise RuntimeError(f"unknown checkpoint reply {kind!r}")
+        tr, sp = self.tracer, None
+        if tr is not None:
+            sp = tr.start(
+                "checkpoint", job=self.job_name, attempt=self.attempt,
+                parent=self.span, n=self.checkpoints,
+            )
+        outcome = "continue"
+        try:
+            self._consume_stalls()  # stalls shipped with an earlier reply
+            _send(self._w, ("checkpoint", self.checkpoints, self.state))
+            tv0 = time.perf_counter()
+            reply = _recv(self._r)
+            if tr is not None:
+                # the verdict-wait phase: child parked while the supervisor
+                # ran hooks and decided continue/stop/fault/resize
+                tr.tag(sp, verdict_wait_s=time.perf_counter() - tv0)
+            kind = reply[0]
+            if kind == "continue":
+                for d in reply[1]:
+                    self.post_directive(d)
+                # a ("stall_checkpoint", s) directive stalls *this* checkpoint
+                self._consume_stalls()
+                return
+            if kind == "stop":
+                outcome = str(reply[1]).lower()
+                self._timed_save(save, tr, sp)
+                raise JobInterrupted(reply[1])
+            if kind == "fault":
+                outcome = "fault"
+                raise ContainerFailure(reply[1], dead_devices=int(reply[2]))
+            if kind == "resize":
+                outcome = "resize"
+                self._timed_save(save, tr, sp)
+                raise JobInterrupted(RESIZE, offer=reply[1])
+            raise RuntimeError(f"unknown checkpoint reply {kind!r}")
+        finally:
+            if tr is not None:
+                tr.tag(sp, outcome=outcome)
+                tr.end(sp)
 
 
 def _child_main(argv: list[str]) -> int:
@@ -320,7 +383,39 @@ def _child_main(argv: list[str]) -> int:
 
     spec: JobSpec = boot["spec"]
     container = Container(int(boot["cid"]), tuple(boot["device_ids"]))
-    token = _ChildToken(spec.name or spec.kind, boot["state"], r, w)
+    tinfo = boot.get("trace") or {}
+    # the supervisor's (uniquified) job name, so child span ids line up
+    # with the parent trace after the merge
+    job_name = tinfo.get("job") or spec.name or spec.kind
+    token = _ChildToken(job_name, boot["state"], r, w)
+    tracer = None
+    run_span = None
+    if tinfo.get("enabled"):
+        from repro.obs.trace import CHILD_SPAN_BASE, Tracer
+
+        epoch = time.perf_counter()
+        clock0 = float(tinfo.get("clock0", 0.0))
+        tracer = Tracer(
+            clock=lambda: clock0 + (time.perf_counter() - epoch),
+            seq0=CHILD_SPAN_BASE,
+        )
+        run_span = tracer.start(
+            "isolated_run", job=job_name,
+            attempt=int(tinfo.get("attempt", 0)),
+            parent=tuple(tinfo["parent"]) if tinfo.get("parent") else None,
+            pid=os.getpid(), devices=container.size,
+        )
+        token.bind_obs(
+            tracer=tracer, span=run_span, kind=spec.kind,
+            attempt=int(tinfo.get("attempt", 0)),
+        )
+
+    def spans() -> list:
+        if tracer is None:
+            return []
+        tracer.end(run_span)
+        return tracer.to_dicts()
+
     try:
         driver = get_driver(spec.kind)
         ctx = driver.prepare(spec)
@@ -331,15 +426,15 @@ def _child_main(argv: list[str]) -> int:
     except JobInterrupted as e:
         # state is sent *after* the driver's finally blocks ran, so wall-
         # clock accumulators etc. survive the yield
-        _send(w, ("interrupted", e.reason, e.offer, token.state))
+        _send(w, ("interrupted", e.reason, e.offer, token.state, spans()))
     except ContainerFailure as e:
         _send(w, ("error", "ContainerFailure", str(e), e.dead_devices,
-                  token.state))
+                  token.state, spans()))
     except BaseException as e:  # noqa: BLE001 — everything must cross the pipe
         _send(w, ("error", type(e).__name__,
-                  f"{e}\n{traceback.format_exc()}", None, token.state))
+                  f"{e}\n{traceback.format_exc()}", None, token.state, spans()))
     else:
-        _send(w, ("done", metrics, token.state))
+        _send(w, ("done", metrics, token.state, spans()))
     w.flush()
     return 0
 

@@ -701,6 +701,49 @@ class ServeDriver:
 
             seeds = itertools.count(cfg.seed)
 
+            # observability context bound by the executor (None for bare
+            # tokens / tracing-off): serve-stage spans nest under the
+            # attempt span, stage histograms land in the platform registry
+            tr = getattr(token, "tracer", None) if token is not None else None
+            if tr is not None and not tr.enabled:
+                tr = None
+            tspan = getattr(token, "span", None) if token is not None else None
+            obs = getattr(token, "obs", None) if token is not None else None
+
+            def on_trace(name, **tags):
+                # router/cell-router lifecycle events (failover, salvage,
+                # continuation reroute, scale) onto the attempt span
+                if tr is not None:
+                    tr.event(tspan, name, **tags)
+
+            def on_stage(stage, info):
+                # engine stage callback: queue-wait/prefill per admission,
+                # one decode span per engine step
+                d = float(info.get("dur_s", 0.0))
+                if obs is not None:
+                    obs.observe(f"serve_{stage}_s", d)
+                    if "queue_wait_s" in info:
+                        obs.observe("serve_queue_wait_s", info["queue_wait_s"])
+                if tr is not None:
+                    t1 = tr.now()
+                    sp = tr.start(
+                        f"serve.{stage}", job=token.job_name,
+                        attempt=token.attempt, parent=tspan, t=t1 - d,
+                        **{k: info[k] for k in ("rid", "slots") if k in info},
+                    )
+                    tr.end(sp, t=t1)
+                    qw = float(info.get("queue_wait_s") or 0.0)
+                    if stage == "prefill" and qw > 0.0:
+                        qs = tr.start(
+                            "serve.queue_wait", job=token.job_name,
+                            attempt=token.attempt, parent=tspan,
+                            t=t1 - d - qw, rid=info.get("rid"),
+                        )
+                        tr.end(qs, t=t1 - d)
+
+            stage_sink = on_stage if (tr is not None or obs is not None) else None
+            trace_sink = on_trace if tr is not None else None
+
             def make_engine():
                 # unique sampling seed per engine, including autoscaled ones
                 return ContinuousBatchingEngine(
@@ -709,6 +752,7 @@ class ServeDriver:
                     page_size=cfg.page_size,
                     max_len=S + cfg.gen,
                     seed=next(seeds),
+                    on_stage=stage_sink,
                 )
 
             cell_tier = cfg.cells > 1 or cfg.max_replicas > cfg.replicas
@@ -734,10 +778,12 @@ class ServeDriver:
                     # losing the last cell sheds work for rebuild below
                     # instead of raising out of a router step
                     shed_stranded=cfg.cell_rebuild_retries > 0,
+                    on_trace=trace_sink,
                 )
             else:
                 router = ServeRouter(
-                    [make_engine() for _ in range(cfg.replicas)]
+                    [make_engine() for _ in range(cfg.replicas)],
+                    on_trace=trace_sink,
                 )
             # a preempted attempt left its unfinished work as continuation
             # requests in the token state; completed outputs carry over too
@@ -761,6 +807,7 @@ class ServeDriver:
             # the trace clock continues from prior attempts so carried
             # token_times stay monotonic across a preempt/resume
             base = state.get("wall_s", 0.0)
+            n0 = len(outs)  # completions before this attempt
             t0 = time.perf_counter()
 
             def preempt_save():
@@ -847,6 +894,40 @@ class ServeDriver:
             toks = sum(len(o.tokens) for o in outs)
             lat = token_latencies(outs)
             p50, p99 = np.percentile(lat, 50) * 1e3, np.percentile(lat, 99) * 1e3
+            # per-request spans for this attempt's completions: the engine's
+            # relative trace clock (base + elapsed) mapped back onto the
+            # tracer timeline by anchoring "now" to the end of the attempt
+            new_outs = [o for o in outs[n0:] if len(o.token_times)]
+            if tr is not None and new_outs:
+                t_end_abs = tr.now()
+                t_end_rel = state["wall_s"]
+
+                def to_abs(tt):
+                    return t_end_abs - (t_end_rel - tt)
+
+                for o in new_outs:
+                    arr = (o.arrival_time if np.isfinite(o.arrival_time)
+                           else o.token_times[0])
+                    sp = tr.start(
+                        "serve.request", job=token.job_name,
+                        attempt=token.attempt, parent=tspan, t=to_abs(arr),
+                        rid=o.rid, tokens=len(o.tokens),
+                        ttft_s=max(o.token_times[0] - arr, 0.0),
+                    )
+                    dsp = tr.start(
+                        "serve.decode", job=token.job_name,
+                        attempt=token.attempt, parent=sp,
+                        t=to_abs(o.token_times[0]), rid=o.rid,
+                    )
+                    tr.end(dsp, t=to_abs(o.token_times[-1]))
+                    tr.end(sp, t=to_abs(o.token_times[-1]))
+            if obs is not None:
+                for o in new_outs:
+                    arr = (o.arrival_time if np.isfinite(o.arrival_time)
+                           else o.token_times[0])
+                    obs.observe(
+                        "serve_ttft_s", max(o.token_times[0] - arr, 0.0))
+                obs.observe("serve_tokens_per_s", toks / max(dt, 1e-9))
             print(
                 f"[serve/continuous] {toks} tokens in {dt:.2f}s "
                 f"({toks/dt:,.1f} tok/s) p50/p99 token latency "

@@ -83,7 +83,9 @@ class JobReport:
     retries: int  # container-failure resubmissions
     resizes: int = 0  # accepted mid-run ResizeOffers (grow or shrink)
     checkpoints: int = 0  # driver cancellation points passed (all attempts)
-    metrics: dict = dataclasses.field(default_factory=dict)  # service-specific
+    # service-specific metrics; when tracing is on the platform also adds an
+    # "obs" key: per-stage span summary {stage: {count, total_s, p50_s, p99_s}}
+    metrics: dict = dataclasses.field(default_factory=dict)
     # lifecycle trace, "+<t>s <what>" per transition
     events: list[str] = dataclasses.field(default_factory=list)
     error: Optional[str] = None

@@ -148,10 +148,15 @@ class CellRouter:
         min_replicas: int = 1,
         max_replicas: int = 4,
         shed_stranded: bool = False,
+        on_trace: Optional[Callable[..., None]] = None,
     ):
         if not cells:
             raise ValueError("cell router needs at least one cell")
         self.cells = list(cells)
+        # optional observability sink: on_trace(name, **tags) on cell
+        # lifecycle transitions (failover, salvage, revive, scale).  None
+        # costs nothing; a raising sink must never take routing down.
+        self._on_trace = on_trace
         self.autoscale_enabled = autoscale
         self.high_water = high_water
         self.low_water = low_water
@@ -179,6 +184,14 @@ class CellRouter:
         self._injected_failures: set[int] = set()  # chaos: fail on next step
 
     # ------------------------------------------------------------------
+    def _emit(self, name: str, **tags) -> None:
+        if self._on_trace is None:
+            return
+        try:
+            self._on_trace(name, **tags)
+        except Exception:  # noqa: BLE001 — tracing must never fail routing
+            pass
+
     @property
     def num_alive(self) -> int:
         return sum(self.alive)
@@ -224,11 +237,16 @@ class CellRouter:
                 continue
             placed += 1
             self.salvaged += 1
+        if conts:
+            self._emit(
+                "continuation_reroute", placed=placed, total=len(conts)
+            )
         return placed
 
     def _fail_cell(self, i: int, err: Exception) -> list[RequestOutput]:
         self.alive[i] = False
         self.failures.append((i, f"{type(err).__name__}: {err}"))
+        self._emit("cell_failover", cell=i, error=type(err).__name__)
         cell = self.cells[i]
         finished: list[RequestOutput] = []
         drain_finished = getattr(cell, "drain_finished", None)
@@ -291,6 +309,7 @@ class CellRouter:
         self.alive[i] = True
         self._depth_hist[i] = []
         self.revivals += 1
+        self._emit("cell_revive", cell=i)
 
     def take_stranded(self) -> list[Request]:
         """Pop everything graceful degradation parked (owner resubmits after
@@ -317,6 +336,7 @@ class CellRouter:
                 cell.scale_to(want)
                 self._depth_hist[i].clear()  # new capacity: fresh window
                 events.append((i, cur, want))
+                self._emit("cell_scale", cell=i, old=cur, new=want)
         self.scale_events.extend(events)
         return events
 

@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -80,6 +80,7 @@ class ContinuousBatchingEngine:
         max_len: int = 512,
         num_pages: Optional[int] = None,
         seed: int = 0,
+        on_stage: Optional[Callable[[str, dict], None]] = None,
     ):
         if cfg.family not in ("dense", "moe"):
             raise ValueError(f"paged serving supports dense/moe, got {cfg.family!r}")
@@ -101,6 +102,9 @@ class ContinuousBatchingEngine:
         self._prefill_key = jax.random.fold_in(self._key, 1)
         self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
         self._prefill = jax.jit(self._prefill_impl, donate_argnums=(1,))
+        # optional observability sink: called as on_stage("prefill"|"decode",
+        # info) with wall durations; None costs nothing on the hot path
+        self._on_stage = on_stage
         self.reset()
 
     # ------------------------------------------------------------------
@@ -231,11 +235,17 @@ class ContinuousBatchingEngine:
             key = jax.random.fold_in(
                 jax.random.fold_in(self._prefill_key, req.rid), len(carry.generated)
             )
+            pt0 = time.perf_counter()
             self.pages, tok = self._prefill(
                 self.params, self.pages, jnp.asarray(tokens_pad), np.int32(plen),
                 jnp.asarray(ids), key, np.float32(req.temperature),
             )
             carry.generated.append(int(tok))  # admission-time sync, not per-step
+            if self._on_stage is not None:
+                info = {"rid": req.rid, "dur_s": time.perf_counter() - pt0}
+                if np.isfinite(now) and np.isfinite(req.arrival_time):
+                    info["queue_wait_s"] = max(now - req.arrival_time, 0.0)
+                self._on_stage("prefill", info)
             carry.token_times.append(now if np.isfinite(now) else 0.0)
             self._slots[slot] = carry
             self._tokens[slot] = carry.generated[-1]
@@ -327,6 +337,7 @@ class ContinuousBatchingEngine:
             self._preempt_one(stalled)
             self._pending_outputs = []
             return finished
+        dt0 = time.perf_counter()
         tok_dev, self.pages = self._decode(
             self.params,
             self.pages,
@@ -340,6 +351,11 @@ class ContinuousBatchingEngine:
         )
         self._counter += 1
         toks = np.asarray(tok_dev)  # the scheduler's sync point
+        if self._on_stage is not None:
+            self._on_stage("decode", {
+                "dur_s": time.perf_counter() - dt0,
+                "slots": int(active.sum()),
+            })
         t_emit = now if np.isfinite(now) else 0.0
         for i in np.flatnonzero(active):
             s = self._slots[i]

@@ -29,7 +29,7 @@ against lightweight fakes while the serve driver runs real engines.
 from __future__ import annotations
 
 import time
-from typing import Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 from repro.serving.scheduler import Request, RequestOutput, remaining_new_tokens
 
@@ -39,10 +39,19 @@ class NoReplicasAlive(RuntimeError):
 
 
 class ServeRouter:
-    def __init__(self, replicas: Sequence):
+    def __init__(
+        self,
+        replicas: Sequence,
+        *,
+        on_trace: Optional[Callable[..., None]] = None,
+    ):
         if not replicas:
             raise ValueError("router needs at least one replica")
         self.replicas = list(replicas)
+        # optional observability sink: called as on_trace(name, **tags) on
+        # routing lifecycle transitions (failover, retirement).  None costs
+        # nothing; a raising sink must not take the router down with it.
+        self._on_trace = on_trace
         self.alive = [True] * len(self.replicas)
         self.routed = [0] * len(self.replicas)  # requests admitted per replica
         self.routed_tokens = [0] * len(self.replicas)  # prompt+gen budget routed
@@ -58,6 +67,14 @@ class ServeRouter:
         self._pending_outputs: list[RequestOutput] = []
 
     # ------------------------------------------------------------------
+    def _emit(self, name: str, **tags) -> None:
+        if self._on_trace is None:
+            return
+        try:
+            self._on_trace(name, **tags)
+        except Exception:  # noqa: BLE001 — tracing must never fail routing
+            pass
+
     @property
     def num_alive(self) -> int:
         return sum(self.alive)
@@ -90,6 +107,7 @@ class ServeRouter:
         for cont in conts:
             self.submit(cont)
             self.rebalanced += 1
+        self._emit("replica_retired", replica=i, rebalanced=len(conts))
         return conts
 
     def load(self, i: int) -> int:
@@ -120,6 +138,7 @@ class ServeRouter:
         already completed (e.g. at admission time, before decode raised)."""
         self.alive[i] = False
         self.failures.append((i, f"{type(err).__name__}: {err}"))
+        self._emit("replica_failover", replica=i, error=type(err).__name__)
         eng = self.replicas[i]
         finished: list[RequestOutput] = []
         drain_finished = getattr(eng, "drain_finished", None)

@@ -226,7 +226,8 @@ def test_cancel_mid_run_stops_at_checkpoint(stub):
     reports = _join(waiter, box)
     rep = reports[name]
     assert rep.state == CANCELLED
-    assert rep.metrics == {}  # never completed, nothing reported
+    driver_metrics = {k: v for k, v in rep.metrics.items() if k != "obs"}
+    assert driver_metrics == {}  # never completed, nothing reported
     assert "cancel requested" in " ".join(rep.events)
     assert "cancelled at checkpoint" in " ".join(rep.events)
     # the pool is whole again and nothing is still running

@@ -1,0 +1,515 @@
+"""Structured observability: spans, metrics, exports.
+
+Covers the tracer/metrics primitives, span nesting and byte-identical
+trace determinism under the seeded harness, trace-id propagation across
+the process-isolation IPC boundary, chaos injections as span events
+(exactly once per injection), metrics snapshot consistency through a
+preempt -> resume round-trip, and the Perfetto/JSONL/text exporters.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+
+import pytest
+
+import chaos_driver_fixture  # noqa: F401 — registers sleeper/crashy kinds
+from concurrency_utils import Gate, VirtualClock
+from repro.obs import (
+    CHILD_SPAN_BASE,
+    MetricsRegistry,
+    Span,
+    Tracer,
+    read_jsonl,
+    stage_summary,
+    text_report,
+    to_chrome_trace,
+    validate_chrome,
+    write_jsonl,
+)
+from repro.obs.metrics import percentile
+from repro.platform import ExecutorHooks, FaultPlan, JobSpec, Platform
+
+# ---------------------------------------------------------------------------
+# tracer primitives
+# ---------------------------------------------------------------------------
+
+
+def test_span_nesting_ids_and_durations():
+    clk = VirtualClock()
+    tr = Tracer(clock=clk)
+    root = tr.start("job", job="j", kind="stub")
+    att = tr.start("attempt", job="j", attempt=1, parent=root, container=0)
+    clk.advance(0.5)
+    ck = tr.start("checkpoint", job="j", attempt=1, parent=att, n=1)
+    clk.advance(0.25)
+    tr.end(ck)
+    tr.end(att)
+    tr.end(root)
+    assert root.span_id == ("j", 0, 1)
+    assert att.span_id == ("j", 1, 1)  # per-(job, attempt) numbering
+    assert ck.span_id == ("j", 1, 2)
+    assert att.parent == root.span_id
+    assert ck.parent == att.span_id
+    assert ck.t0 == 0.5 and ck.duration_s == 0.25
+    assert root.duration_s == 0.75
+
+
+def test_disabled_tracer_is_a_noop():
+    tr = Tracer(enabled=False)
+    sp = tr.start("job", job="j")
+    assert sp is None
+    # mutators tolerate the None handle so hot paths call unconditionally
+    tr.end(sp)
+    tr.event(sp, "x")
+    tr.tag(sp, a=1)
+    assert tr.spans() == []
+
+
+def test_span_context_manager_closes_on_error():
+    tr = Tracer(clock=VirtualClock())
+    with pytest.raises(RuntimeError):
+        with tr.span("attempt", job="j", attempt=1):
+            raise RuntimeError("boom")
+    (sp,) = tr.spans()
+    assert sp.t1 is not None
+
+
+def test_merge_avoids_id_collisions_with_child_spans():
+    tr = Tracer(clock=VirtualClock())
+    att = tr.start("attempt", job="j", attempt=1)
+    child = Span(job="j", attempt=1, span=CHILD_SPAN_BASE, name="isolated_run",
+                 t0=0.0, t1=1.0, parent=att.span_id)
+    tr.merge([child.to_dict()])
+    nxt = tr.start("enforce", job="j", attempt=1)
+    ids = [s.span_id for s in tr.spans()]
+    assert len(ids) == len(set(ids)), "span id collision after merge"
+    assert nxt.span > CHILD_SPAN_BASE
+
+
+def test_canonical_excludes_timestamps_and_float_tags():
+    sp = Span(job="j", attempt=1, span=3, name="checkpoint", t0=1.234,
+              t1=5.678, parent=("j", 0, 1),
+              tags={"n": 2, "outcome": "continue", "verdict_wait_s": 0.123},
+              events=[(2.0, "save", {"save_s": 0.01})])
+    c = sp.canonical()
+    assert "1.234" not in c and "0.123" not in c  # no wall-clock leakage
+    assert "n=2" in c and "outcome=continue" in c
+    assert "[save]" in c
+    assert c.startswith("j/1/3 checkpoint <- j/0/1")
+
+
+def test_jsonl_roundtrip_is_lossless_and_deterministic(tmp_path):
+    clk = VirtualClock()
+    tr = Tracer(clock=clk)
+    root = tr.start("job", job="j", kind="stub")
+    tr.event(root, "chaos[fail_device]", target="j")
+    clk.advance(1.0)
+    tr.end(root)
+    tr.start("enforce", job="j", attempt=1, parent=root)  # unclosed
+    p1, p2 = tmp_path / "a.jsonl", tmp_path / "b.jsonl"
+    assert write_jsonl(tr.spans(), str(p1)) == 2
+    write_jsonl(tr.spans(), str(p2))
+    assert p1.read_bytes() == p2.read_bytes()  # identical trace, identical bytes
+    back = read_jsonl(str(p1))
+    key = lambda s: s.span_id  # noqa: E731
+    assert [s.to_dict() for s in sorted(back, key=key)] == \
+        [s.to_dict() for s in sorted(tr.spans(), key=key)]
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_registry_snapshot_and_merge():
+    m = MetricsRegistry()
+    m.inc("retries")
+    m.inc("retries", 2)
+    m.gauge("pool_utilization", 0.75)
+    for v in (0.1, 0.2, 0.3, 0.4):
+        m.observe("checkpoint_s.stub", v)
+    snap = m.snapshot()
+    assert snap["counters"]["retries"] == 3
+    assert snap["gauges"]["pool_utilization"] == 0.75
+    h = snap["histograms"]["checkpoint_s.stub"]
+    assert h["count"] == 4 and h["max"] == 0.4
+    assert abs(h["p50"] - 0.25) < 1e-9
+    # merge folds a child registry's raw dump into the parent
+    other = MetricsRegistry()
+    other.inc("retries", 5)
+    other.observe("checkpoint_s.stub", 0.9)
+    m.merge(other.dump())
+    snap = m.snapshot()
+    assert snap["counters"]["retries"] == 8
+    assert snap["histograms"]["checkpoint_s.stub"]["count"] == 5
+
+
+def test_percentile_interpolates():
+    vals = [1.0, 2.0, 3.0, 4.0]
+    assert percentile(vals, 0.5) == 2.5
+    assert percentile(vals, 0.0) == 1.0
+    assert percentile(vals, 1.0) == 4.0
+    assert percentile([], 0.5) == 0.0
+
+
+def test_stage_summary_ignores_open_spans():
+    spans = [
+        Span(job="j", attempt=1, span=1, name="checkpoint", t0=0.0, t1=0.5),
+        Span(job="j", attempt=1, span=2, name="checkpoint", t0=1.0, t1=1.1),
+        Span(job="j", attempt=1, span=3, name="enforce", t0=2.0),  # open
+    ]
+    st = stage_summary(spans)
+    assert set(st) == {"checkpoint"}
+    assert st["checkpoint"]["count"] == 2
+    assert abs(st["checkpoint"]["total_s"] - 0.6) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# platform integration: span lifecycle, determinism, event-log view
+# ---------------------------------------------------------------------------
+
+
+def _span_index(platform):
+    return {s.span_id: s for s in platform.tracer.spans()}
+
+
+@pytest.mark.concurrency
+def test_platform_spans_cover_the_job_lifecycle():
+    p = Platform(total_devices=2, retry_backoff_s=0.001)
+    name = p.submit(JobSpec(kind="crashy", devices=1, max_retries=2,
+                            config={"fail_attempts": 1, "units": 2}))
+    rep = p.wait(name, deadline_s=60)
+    assert rep.state == "DONE", rep.error
+    spans = p.tracer.spans(name)
+    by_name: dict[str, list] = {}
+    for s in spans:
+        by_name.setdefault(s.name, []).append(s)
+    (root,) = by_name["job"]
+    assert root.tags["state"] == "DONE" and root.t1 is not None
+    attempts = sorted(by_name["attempt"], key=lambda s: s.attempt)
+    assert [a.attempt for a in attempts] == [1, 2]
+    assert attempts[0].tags["outcome"] == "container_failure"
+    assert attempts[1].tags["outcome"] == "done"
+    assert all(a.parent == root.span_id for a in attempts)
+    # one queue_wait per dispatch (initial + post-retry), closed retroactively
+    assert len(by_name["queue_wait"]) == 2
+    assert all(q.t1 is not None for q in by_name["queue_wait"])
+    # checkpoints nest under the attempt that ran them
+    for ck in by_name["checkpoint"]:
+        assert ck.parent == attempts[ck.attempt - 1].span_id
+        assert ck.tags["outcome"] == "continue"
+    # the structured stream and the rendered event log agree
+    assert any("resubmitting" in e for e in rep.events)
+    assert rep.metrics["obs"]["checkpoint"]["count"] == rep.checkpoints
+
+
+def _twin_run():
+    clock = VirtualClock()
+
+    def ckpt(name, token):
+        clock.advance(0.25)
+
+    p = Platform(total_devices=4, clock=clock, retry_backoff_s=0.001,
+                 hooks=ExecutorHooks(checkpoint=ckpt))
+    reports = p.run_batch([
+        JobSpec(kind="crashy", name="flaky", devices=2, max_retries=2,
+                config={"fail_attempts": 1, "units": 3}),
+        JobSpec(kind="sleeper", name="nap", devices=2,
+                config={"naps": 2, "nap_s": 0.0}),
+    ])
+    assert all(r.state == "DONE" for r in reports.values()), reports
+    return p
+
+
+@pytest.mark.concurrency
+def test_trace_sequence_byte_identical_across_seeded_twins():
+    """Two runs of the same seeded workload produce byte-identical
+    canonical span sequences — the determinism bar for the trace plane."""
+    a, b = _twin_run(), _twin_run()
+    seq_a = "\n".join(a.tracer.sequence())
+    seq_b = "\n".join(b.tracer.sequence())
+    assert seq_a == seq_b
+    assert len(a.tracer.spans()) >= 8  # job roots, attempts, checkpoints...
+
+
+@pytest.mark.concurrency
+def test_trace_off_platform_runs_clean():
+    p = Platform(total_devices=2, trace=False)
+    rep = p.wait(
+        p.submit(JobSpec(kind="sleeper", devices=1,
+                         config={"naps": 2, "nap_s": 0.0})),
+        deadline_s=60,
+    )
+    assert rep.state == "DONE", rep.error
+    assert p.tracer.spans() == []
+    assert "obs" not in rep.metrics  # no span summary without spans
+    # the rendered event log is unaffected by the tracer switch
+    assert rep.events[0].startswith("+") and rep.events[-1].endswith("s done")
+
+
+@pytest.mark.concurrency
+def test_event_log_renders_structured_records_with_virtual_clock():
+    """Satellite (a): structured records carry absolute (virtual-clock)
+    timestamps; the legacy ``+N.NNs`` rendering is a view over them."""
+    clock = VirtualClock()
+
+    def ckpt(name, token):
+        clock.advance(0.5)
+
+    p = Platform(total_devices=2, clock=clock, concurrent=False,
+                 hooks=ExecutorHooks(checkpoint=ckpt))
+    reports = p.run_batch([JobSpec(kind="sleeper", name="evt", devices=1,
+                                   config={"naps": 3, "nap_s": 0.0})])
+    rep = reports["evt"]
+    assert rep.state == "DONE", rep.error
+    assert rep.events[0].startswith("+0.00s")
+    assert rep.events[-1] == "+1.50s done"  # 3 checkpoints x 0.5s
+    # the structured records hold absolute clock values, not offsets
+    recs = p._records["evt"].records
+    assert recs[-1] == (1.5, "done")
+    assert recs[0][0] == 0.0
+    # the cross-tenant timeline renders the same records
+    assert any(line == "+1.50s [evt] done" for line in p.timeline())
+    # the job root span is pinned to the virtual clock too
+    root = next(s for s in p.tracer.spans("evt") if s.name == "job")
+    assert (root.t0, root.t1) == (0.0, 1.5)
+
+
+@pytest.mark.concurrency
+def test_metrics_snapshot_consistent_after_preempt_resume():
+    parked, release = Gate("parked"), Gate("release")
+
+    def ckpt(name, token):
+        if name.startswith("lo") and token.checkpoints == 1 \
+                and not release.is_open():
+            parked.open()
+            release.wait()
+
+    p = Platform(total_devices=2, hooks=ExecutorHooks(checkpoint=ckpt))
+    lo = p.submit(JobSpec(kind="sleeper", name="lo", devices=2, priority=0,
+                          config={"naps": 3, "nap_s": 0.0}))
+    box = {}
+    waiter = threading.Thread(
+        target=lambda: box.update(lo=p.wait(lo, deadline_s=60)), daemon=True
+    )
+    waiter.start()
+    parked.wait()
+    hi = p.submit(JobSpec(kind="sleeper", name="hi", devices=2, priority=10,
+                          config={"naps": 1, "nap_s": 0.0}))
+    release.open()
+    rep_hi = p.wait(hi, deadline_s=60)
+    waiter.join(60.0)
+    assert not waiter.is_alive() and "lo" in box
+    rep_lo = box["lo"]
+    assert rep_lo.state == "DONE" and rep_hi.state == "DONE"
+    assert rep_lo.preemptions >= 1 and rep_lo.resumes >= 1
+
+    snap = p.metrics_snapshot()
+    c = snap["counters"]
+    assert c["preempts"] >= 1 and c["resumes"] >= 1
+    assert c["jobs_done"] == 2
+    h = snap["histograms"]
+    # every checkpoint() across both tenants and all attempts is accounted
+    assert h["checkpoint_s.sleeper"]["count"] == \
+        rep_lo.checkpoints + rep_hi.checkpoints
+    # lo queued twice (initial + post-preempt), hi once
+    assert h["queue_wait_s.sleeper"]["count"] >= 3
+    # the preempted attempt and the resumed attempt both left spans
+    attempts = [s for s in p.tracer.spans(lo) if s.name == "attempt"]
+    outcomes = [s.tags["outcome"] for s in sorted(attempts, key=lambda s: s.attempt)]
+    assert outcomes[0] == "preempt" and outcomes[-1] == "done"
+    assert rep_lo.metrics["obs"]["checkpoint"]["count"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# IPC propagation: child spans cross the isolation boundary
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.subprocess
+def test_trace_ids_propagate_across_isolated_attempt(monkeypatch):
+    """The bootstrap frame stamps the parent span id into the child; the
+    child's spans (numbered from CHILD_SPAN_BASE) ride the terminal frame
+    back and nest under the supervising attempt span."""
+    monkeypatch.setenv("REPRO_ISOLATION_IMPORT", "chaos_driver_fixture")
+    p = Platform(total_devices=2)
+    name = p.submit(JobSpec(kind="sleeper", devices=1, isolation="process",
+                            config={"naps": 2, "nap_s": 0.0}))
+    rep = p.wait(name, deadline_s=300)
+    assert rep.state == "DONE", rep.error
+
+    spans = p.tracer.spans(name)
+    attempt = next(s for s in spans if s.name == "attempt")
+    assert attempt.tags["isolation"] == "process"
+    child = [s for s in spans if s.span >= CHILD_SPAN_BASE]
+    assert child, "no child-side spans crossed the IPC boundary"
+    ids = [s.span_id for s in spans]
+    assert len(ids) == len(set(ids)), "child span ids collided with parent"
+    import os
+
+    run = next(s for s in child if s.name == "isolated_run")
+    assert run.parent == attempt.span_id
+    assert run.tags["pid"] != os.getpid() and run.t1 is not None
+    ckpts = [s for s in child if s.name == "checkpoint"]
+    assert len(ckpts) == 2  # one per nap, traced inside the child
+    assert all(c.parent == run.span_id for c in ckpts)
+    assert all(c.tags["outcome"] == "continue" for c in ckpts)
+    # child clock is anchored to the parent's: nested, not wildly offset
+    assert attempt.t0 <= run.t0 <= run.t1 <= attempt.t1 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# chaos: every injection is a span event, exactly once, deterministically
+# ---------------------------------------------------------------------------
+
+_SCN = {"per_family": 2, "steps": 5, "chunks": 6}
+
+
+def _chaos_event_counts(platform) -> dict:
+    counts: dict = {}
+    for s in platform.tracer.spans():
+        for _t, n, _tags in s.events:
+            if n.startswith("chaos["):
+                k = n[len("chaos[") : -1]
+                counts[k] = counts.get(k, 0) + 1
+    return counts
+
+
+def _chaos_traced_run(seed: int):
+    plan = FaultPlan(seed=seed, faults=2,
+                     kinds=("fail_device", "stall_checkpoint"), stall_s=0.01)
+    holder = {}
+
+    def park(name, token):
+        if token.checkpoints != 1:
+            return
+        import time as _time
+
+        t0 = _time.monotonic()
+        while (len(holder["p"].chaos.injected) < 2
+               and _time.monotonic() - t0 < 60.0):
+            _time.sleep(0.005)
+
+    p = Platform(total_devices=4, chaos_plan=plan, retry_backoff_s=0.01,
+                 backoff_seed=seed, hooks=ExecutorHooks(checkpoint=park))
+    holder["p"] = p
+    rep = p.wait(
+        p.submit(JobSpec(kind="scenario", name="det", devices=2,
+                         max_retries=4, config=dict(_SCN))),
+        deadline_s=120,
+    )
+    assert rep.state == "DONE", rep.error
+    return p
+
+
+@pytest.mark.chaos
+def test_chaos_injections_appear_exactly_once_as_span_events():
+    p = _chaos_traced_run(seed=11)
+    s = p.chaos.summary()
+    assert s["injected"] == 2
+    assert _chaos_event_counts(p) == dict(s["by_kind"])
+    # counters track the same injections
+    c = p.metrics_snapshot()["counters"]
+    assert c["chaos_injections"] == s["injected"]
+    for kind, n in s["by_kind"].items():
+        assert c[f"chaos_injections.{kind}"] == n
+
+
+@pytest.mark.chaos
+def test_chaos_trace_sequence_deterministic():
+    """Same seed, same faults, byte-identical canonical span sequence."""
+    a = _chaos_traced_run(seed=11)
+    b = _chaos_traced_run(seed=11)
+    assert "\n".join(a.tracer.sequence()) == "\n".join(b.tracer.sequence())
+
+
+# ---------------------------------------------------------------------------
+# exporters: Chrome trace_event schema, text report, CLI
+# ---------------------------------------------------------------------------
+
+
+def _tiny_trace() -> Tracer:
+    clk = VirtualClock()
+    tr = Tracer(clock=clk)
+    root = tr.start("job", job="j1", kind="stub")
+    att = tr.start("attempt", job="j1", attempt=1, parent=root, container=0)
+    ck = tr.start("checkpoint", job="j1", attempt=1, parent=att, n=1)
+    tr.event(ck, "save", save_s=0.01)
+    clk.advance(0.2)
+    tr.end(ck)
+    tr.event(root, "chaos[fail_device]", target="j1")
+    tr.start("enforce", job="j1", attempt=1, parent=att)  # left unclosed
+    clk.advance(0.1)
+    tr.end(att)
+    tr.end(root)
+    other = tr.start("job", job="j2", kind="stub")
+    clk.advance(0.05)
+    tr.end(other)
+    return tr
+
+
+def test_chrome_export_is_schema_valid_and_json_serializable():
+    tr = _tiny_trace()
+    trace = to_chrome_trace(tr.spans())
+    validate_chrome(trace)
+    validate_chrome(json.loads(json.dumps(trace)))  # survives serialization
+    evs = trace["traceEvents"]
+    procs = {e["args"]["name"] for e in evs
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert procs == {"j1", "j2"}  # one process track per job
+    complete = [e for e in evs if e["ph"] == "X"]
+    assert {e["name"] for e in complete} >= {"job", "attempt", "checkpoint"}
+    unclosed = [e for e in complete if e["args"].get("unclosed")]
+    assert len(unclosed) == 1 and unclosed[0]["dur"] == 0.0
+    instants = [e for e in evs if e["ph"] == "i"]
+    assert {"save", "chaos[fail_device]"} <= {e["name"] for e in instants}
+
+
+def test_validate_chrome_rejects_schema_violations():
+    with pytest.raises(ValueError, match="traceEvents"):
+        validate_chrome({"traceEvents": None})
+    with pytest.raises(ValueError, match="missing"):
+        validate_chrome({"traceEvents": [{"name": "x", "ph": "X", "pid": 1}]})
+    with pytest.raises(ValueError, match="dur"):
+        validate_chrome({"traceEvents": [
+            {"name": "process_name", "ph": "M", "pid": 1, "tid": 0, "ts": 0,
+             "args": {"name": "j"}},
+            {"name": "thread_name", "ph": "M", "pid": 1, "tid": 1, "ts": 0,
+             "args": {"name": "t"}},
+            {"name": "x", "ph": "X", "pid": 1, "tid": 1, "ts": 0},
+        ]})
+    with pytest.raises(ValueError, match="process_name"):
+        validate_chrome({"traceEvents": [
+            {"name": "x", "ph": "X", "pid": 9, "tid": 1, "ts": 0, "dur": 1},
+        ]})
+
+
+def test_text_report_renders_stage_table_and_critical_path():
+    tr = _tiny_trace()
+    out = text_report(tr.spans())
+    assert "stage latency (s)" in out
+    assert "checkpoint" in out and "p50" in out and "p99" in out
+    assert "critical path by job" in out
+    assert "j1:" in out and "1 chaos events" in out
+    assert text_report([]) == "(no spans)"
+    # job filter narrows the report
+    assert "j2" not in text_report(tr.spans(), job="j1")
+
+
+def test_trace_report_cli(tmp_path, capsys):
+    from repro.launch.trace_report import main
+
+    tr = _tiny_trace()
+    trace_path = tmp_path / "t.jsonl"
+    chrome_path = tmp_path / "t.chrome.json"
+    write_jsonl(tr.spans(), str(trace_path))
+    rc = main([str(trace_path), "--chrome", str(chrome_path)])
+    captured = capsys.readouterr().out
+    assert rc == 0
+    assert "stage latency (s)" in captured and "perfetto" in captured.lower()
+    with open(chrome_path) as f:
+        validate_chrome(json.load(f))
+    # a filter that matches nothing reports and exits non-zero
+    assert main([str(trace_path), "--job", "nope"]) == 1

@@ -119,7 +119,8 @@ def test_submit_wait_done_report(stub):
     name = p.submit(JobSpec(kind="stub", config={"x": 21}, devices=4))
     report = p.wait(name)
     assert report.state == DONE
-    assert report.metrics == {"answer": 42}
+    assert report.metrics["answer"] == 42
+    assert "obs" in report.metrics  # per-job span-stage summary rides along
     assert report.devices_used == seen["devices"] == 4
     assert report.run_time_s >= 0 and report.wall_time_s >= report.run_time_s
     assert report.preemptions == 0 and report.retries == 0
@@ -183,7 +184,7 @@ def test_failed_container_resubmission(stub):
     name = p.submit(JobSpec(kind="flaky", devices=2, max_retries=1))
     report = p.wait(name)
     assert report.state == DONE
-    assert report.retries == 1 and report.metrics == {"attempt": 2}
+    assert report.retries == 1 and report.metrics["attempt"] == 2
     assert len(p.rm.quarantined) == 1  # the dead device is out of the pool
     assert not (set(attempts[1]) & p.rm.quarantined)  # retry avoided it
 
