@@ -557,6 +557,98 @@ def _chaos_mix() -> None:
     )
 
 
+_CAMPAIGN_SEED = 0
+_CAMPAIGN_FAULTS = 4
+
+
+def _campaign_mix() -> None:
+    """The five-leg qualification campaign (scenario sweep -> near-miss
+    mining -> train -> A/B qualify gate -> conditional serve rollout) run
+    twice through the CampaignDriver on a fresh 8-device pool: fault-free,
+    then under a seeded mid-campaign FaultPlan.  Every leg must end DONE in
+    both runs and — because artifacts are content-addressed — every final
+    artifact version must be bitwise-identical between the two runs: chaos
+    may cost retries, never results."""
+    from repro.campaign import (
+        LEG_DONE,
+        ArtifactStore,
+        CampaignDriver,
+        qualification_campaign,
+    )
+    from repro.launch.campaign import CHAOS_KINDS
+    from repro.platform import FaultPlan, Platform
+
+    def _run(root: str, chaos: bool):
+        platform = Platform(
+            total_devices=8,
+            chaos_plan=(FaultPlan(seed=_CAMPAIGN_SEED,
+                                  faults=_CAMPAIGN_FAULTS,
+                                  kinds=CHAOS_KINDS)
+                        if chaos else None),
+            retry_backoff_s=0.02, heal_after_s=0.5,
+            backoff_seed=_CAMPAIGN_SEED,
+        )
+        spec = qualification_campaign(ckpt_root=f"{root}/ckpt")
+        store = ArtifactStore(f"{root}/artifacts")
+        driver = CampaignDriver(platform, spec, store,
+                                backoff_seed=_CAMPAIGN_SEED)
+        t0 = time.perf_counter()
+        try:
+            report = driver.run()
+        finally:
+            store.flush()
+            store.close()
+        return platform, report, time.perf_counter() - t0
+
+    with tempfile.TemporaryDirectory() as root:
+        _, ff, ff_s = _run(root, chaos=False)
+    with tempfile.TemporaryDirectory() as root:
+        p, ch, chaos_s = _run(root, chaos=True)
+
+    s = p.chaos.summary()
+    retries = sum(leg.retries + leg.platform_retries
+                  for leg in ch.legs.values())
+    for rep in (ff, ch):
+        assert rep.state == "DONE", rep
+        bad = {n: leg.state for n, leg in rep.legs.items()
+               if leg.state != LEG_DONE}
+        assert not bad, bad
+    # the acceptance bar: faults actually landed mid-campaign, and the
+    # final artifacts are bitwise-equal to the fault-free run's (the
+    # version IS the content hash)
+    assert s["injected"] >= 2, s
+    assert ch.artifacts == ff.artifacts, (ch.artifacts, ff.artifacts)
+    assert chaos_s < ff_s * 5.0, (chaos_s, ff_s)
+
+    kinds_str = ",".join(f"{k}:{v}" for k, v in sorted(s["by_kind"].items()))
+    row(
+        "hetero_campaign", chaos_s,
+        f"legs={len(ch.legs)};artifacts={len(ch.artifacts)};"
+        f"faults_injected={s['injected']};retries={retries};"
+        f"critical_path={'>'.join(ch.critical_path)};"
+        f"ff_s={ff_s:.2f};bitwise_equal=1;{kinds_str}",
+    )
+
+    # structured-trace export: the chaos campaign's span stream — including
+    # the campaign / campaign.leg DAG spans the Perfetto timeline groups
+    # the critical path by — dumped next to BENCH.json for CI upload
+    from pathlib import Path
+
+    from repro.obs import text_report, write_jsonl
+
+    spans = p.tracer.spans()
+    write_jsonl(spans, "TRACE_8.jsonl")
+    Path("TRACE_8.txt").write_text(text_report(spans))
+    names = {sp.name for sp in spans}
+    assert "campaign" in names and "campaign.leg" in names, sorted(names)
+    leg_spans = sum(sp.name == "campaign.leg" for sp in spans)
+    row(
+        "campaign_trace_export", chaos_s,
+        f"spans={len(spans)};leg_spans={leg_spans};"
+        f"chaos_events={s['injected']}",
+    )
+
+
 def run() -> None:
     # order matters: the serial-vs-concurrent comparison runs first so its
     # serial leg pays the same cold jit compiles it always has (the resize
@@ -566,6 +658,7 @@ def run() -> None:
     _resize_proof()
     _elastic_mix()
     _chaos_mix()
+    _campaign_mix()
     channels = (16, 32, 64)
     model = PerceptionModel(channels=channels)
     params = model.init(jax.random.PRNGKey(0))

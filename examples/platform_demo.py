@@ -22,6 +22,15 @@ finishes, the next control step offers the *grow* back and it finishes
 full-width — either way its merged report is identical to an unresized
 run (the resize-equality proof in ``benchmarks/heterogeneous.py``).
 
+Scene 3 — the campaign DAG (``repro.campaign``): the five services become
+one closed-loop qualification factory.  A 5-leg DAG — A/B scenario sweep →
+near-miss mining → fine-tune on the mined set → A/B qualify gate →
+serve rollout from the new checkpoint (run only if the gate passes) — is
+planned and driven over the same pool, legs connected by typed,
+content-addressed artifacts.  The demo then reruns the campaign against
+the same artifact store: every leg's inputs are unchanged, so the whole
+DAG is memo-skipped (``SKIPPED_CACHED``) in milliseconds.
+
     PYTHONPATH=src python examples/platform_demo.py
 """
 
@@ -63,6 +72,42 @@ def elastic_scene():
     evs = " ".join(reports[sweep].events)
     assert "shrink-for-queue" in evs, "expected a queue-pressure shrink offer"
     assert reports[sweep].preemptions == 0, "elasticity, not preemption"
+
+
+def campaign_scene():
+    """Scene 3: the qualification campaign DAG, then a fully-cached rerun."""
+    from repro.campaign import (
+        LEG_SKIPPED_CACHED,
+        ArtifactStore,
+        CampaignDriver,
+        qualification_campaign,
+        render_report,
+    )
+
+    with tempfile.TemporaryDirectory() as root:
+        spec = qualification_campaign(
+            ckpt_root=f"{root}/ckpt", per_family=4, scenario_steps=30,
+            fan_out=2, train_steps=4, serve_gen=8,
+        )
+        print("\n=== scene 3: campaign DAG (sweep -> mine -> train -> "
+              "gate -> rollout) ===")
+        store = ArtifactStore(f"{root}/artifacts")
+        report = CampaignDriver(
+            Platform(total_devices=8), spec, store).run()
+        print(render_report(report))
+        assert report.state == "DONE", report
+
+        # rerun against the same artifact store: nothing changed, so every
+        # leg is a memo hit and no platform job is submitted at all
+        rerun = CampaignDriver(
+            Platform(total_devices=8), spec, store).run()
+        store.flush()
+        store.close()
+        print("\n=== scene 3b: rerun with unchanged inputs (all cached) ===")
+        print(render_report(rerun))
+        assert all(leg.state == LEG_SKIPPED_CACHED
+                   for leg in rerun.legs.values()), rerun
+        assert rerun.artifacts == report.artifacts
 
 
 def main():
@@ -108,6 +153,7 @@ def main():
         print("\n=== structured trace: per-stage latency + critical path ===")
         print(text_report(platform.tracer.spans()))
     elastic_scene()
+    campaign_scene()
 
 
 if __name__ == "__main__":

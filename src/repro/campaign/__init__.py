@@ -1,0 +1,63 @@
+"""Campaign DAG subsystem: artifact-edged job dependencies over the
+platform — the closed-loop qualification factory (see :mod:`.graph`,
+:mod:`.driver`, :mod:`.qualification`)."""
+
+from repro.campaign.driver import CampaignDriver
+from repro.campaign.graph import (
+    ARTIFACT_KINDS,
+    Artifact,
+    ArtifactRef,
+    ArtifactStore,
+    CampaignCycleError,
+    CampaignError,
+    CampaignSpec,
+    LegSpec,
+    default_shard,
+    leg_fingerprint,
+    plan_fan_out,
+)
+from repro.campaign.qualification import qualification_campaign
+from repro.campaign.report import (
+    LEG_CANCELLED,
+    LEG_DONE,
+    LEG_FAILED,
+    LEG_PENDING,
+    LEG_RUNNING,
+    LEG_SATISFIED,
+    LEG_SKIPPED_CACHED,
+    LEG_SKIPPED_GATE,
+    LEG_TERMINAL,
+    CampaignReport,
+    LegReport,
+    critical_path,
+    render_report,
+)
+
+__all__ = [
+    "ARTIFACT_KINDS",
+    "Artifact",
+    "ArtifactRef",
+    "ArtifactStore",
+    "CampaignCycleError",
+    "CampaignDriver",
+    "CampaignError",
+    "CampaignReport",
+    "CampaignSpec",
+    "LEG_CANCELLED",
+    "LEG_DONE",
+    "LEG_FAILED",
+    "LEG_PENDING",
+    "LEG_RUNNING",
+    "LEG_SATISFIED",
+    "LEG_SKIPPED_CACHED",
+    "LEG_SKIPPED_GATE",
+    "LEG_TERMINAL",
+    "LegReport",
+    "LegSpec",
+    "critical_path",
+    "default_shard",
+    "leg_fingerprint",
+    "plan_fan_out",
+    "qualification_campaign",
+    "render_report",
+]

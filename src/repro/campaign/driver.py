@@ -1,0 +1,403 @@
+"""The campaign driver: event-driven DAG execution over the platform.
+
+One :class:`CampaignDriver` drives a :class:`~repro.campaign.graph
+.CampaignSpec` to completion on a shared :class:`~repro.platform.client
+.Platform`:
+
+* legs are submitted the moment their dependencies' artifacts land —
+  the driver blocks in :meth:`Platform.wait_any`, which is event-driven
+  off the PR-5 ``ResourceManager`` listeners (no polling loop of its own);
+* fan-out legs expand into shard jobs planned from pool capacity
+  (:func:`~repro.campaign.graph.plan_fan_out`), keyed strictly by the
+  *returned* uniquified job names so concurrent campaigns can share one
+  platform;
+* a failed shard is **backfilled** — resubmitted alone after a seeded
+  exponential-backoff hold (the PR-6 retry curve), up to the leg's
+  ``max_retries``, while sibling shards keep running; a permanently
+  failed leg cancels its still-running siblings and cascade-cancels every
+  transitive dependent (independent branches continue);
+* gate legs consume a ``verdict`` artifact: a falsy ``passed`` skips the
+  leg (and, transitively, everything that needed its outputs) —
+  the conditional edge;
+* a leg whose fingerprint (bound spec + consumed versions) already has a
+  memo in the :class:`~repro.campaign.graph.ArtifactStore` is skipped and
+  its recorded artifacts reused;
+* every leg runs under a ``campaign.leg`` span (child of one ``campaign``
+  root span), with submit/retry/skip/artifact events — the Perfetto
+  timeline shows the whole DAG critical path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+import time
+from typing import Optional
+
+from repro.campaign.graph import (
+    Artifact,
+    ArtifactStore,
+    CampaignSpec,
+    LegSpec,
+    default_shard,
+    leg_fingerprint,
+    plan_fan_out,
+)
+from repro.campaign.report import (
+    LEG_CANCELLED,
+    LEG_DONE,
+    LEG_FAILED,
+    LEG_PENDING,
+    LEG_RUNNING,
+    LEG_SATISFIED,
+    LEG_SKIPPED_CACHED,
+    LEG_SKIPPED_GATE,
+    LEG_TERMINAL,
+    CampaignReport,
+    LegReport,
+    critical_path,
+    render_report,
+)
+from repro.platform.client import CANCELLED, DONE, FAILED, Platform
+from repro.platform.spec import JobSpec
+
+
+@dataclasses.dataclass
+class _Leg:
+    spec: LegSpec
+    state: str = LEG_PENDING
+    shard_specs: list = dataclasses.field(default_factory=list)
+    shard_jobs: list = dataclasses.field(default_factory=list)  # uniquified
+    shard_done: list = dataclasses.field(default_factory=list)
+    attempts: dict = dataclasses.field(default_factory=dict)  # shard -> subs
+    retries: int = 0  # campaign-level backfills across all shards
+    platform_retries: int = 0
+    inputs: dict = dataclasses.field(default_factory=dict)  # name -> Artifact
+    artifacts: dict = dataclasses.field(default_factory=dict)  # name -> ref
+    fingerprint: Optional[str] = None
+    error: Optional[str] = None
+    started_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    reused: bool = False
+    span: object = None
+
+
+class CampaignDriver:
+    """Plans and drives one campaign DAG on a platform + artifact store."""
+
+    def __init__(
+        self,
+        platform: Platform,
+        spec: CampaignSpec,
+        store: ArtifactStore,
+        *,
+        name: Optional[str] = None,
+        backoff_s: float = 0.05,
+        backoff_cap_s: float = 2.0,
+        backoff_seed: int = 0,
+        reuse: bool = True,
+        shard_timeout_s: float = 600.0,
+    ):
+        spec.validate()
+        self.platform = platform
+        self.spec = spec
+        self.store = store
+        self.name = name or spec.name
+        self.reuse = reuse
+        self.backoff_s = backoff_s
+        self.backoff_cap_s = backoff_cap_s
+        self.shard_timeout_s = shard_timeout_s
+        self._rng = random.Random(backoff_seed)
+        self._order = spec.topo_order()
+        self._deps = spec.leg_deps()
+        self._legs = {n: _Leg(spec.leg(n)) for n in self._order}
+        self._artifacts: dict[str, Artifact] = {}
+        self._outstanding: dict[str, tuple[str, int]] = {}  # job -> (leg, i)
+        self._holds: dict[tuple[str, int], float] = {}  # (leg, i) -> resub at
+        self._root = None
+
+    # -- public ---------------------------------------------------------
+    def run(self) -> CampaignReport:
+        """Drive the DAG until every leg is terminal; returns the report."""
+        p = self.platform
+        t0 = time.monotonic()
+        self._root = p.tracer.start(
+            "campaign", job=self.name, legs=len(self._order))
+        while True:
+            self._advance()
+            if all(l.state in LEG_TERMINAL for l in self._legs.values()):
+                break
+            bound = self._next_hold_delay()
+            outstanding = list(self._outstanding)
+            if not outstanding and bound is None:
+                # defense in depth: _advance must always either finish the
+                # campaign or leave work in flight / on a retry hold
+                raise RuntimeError(
+                    f"campaign {self.name}: no runnable legs but "
+                    f"{[n for n, l in self._legs.items() if l.state not in LEG_TERMINAL]} "
+                    "not terminal")
+            done = p.wait_any(
+                outstanding, timeout_s=self.shard_timeout_s,
+                return_after_s=bound)
+            self._release_holds()
+            for job in done:
+                self._on_job_terminal(job)
+        state = (
+            DONE
+            if all(l.state in (LEG_DONE, LEG_SKIPPED_CACHED, LEG_SKIPPED_GATE)
+                   for l in self._legs.values())
+            else FAILED
+        )
+        p.tracer.tag(self._root, state=state)
+        p.tracer.end(self._root)
+        p.obs.inc(f"campaigns_{state.lower()}")
+        wall = time.monotonic() - t0
+        legs = {
+            n: LegReport(
+                name=n, state=l.state, shards=list(l.shard_jobs),
+                retries=l.retries, platform_retries=l.platform_retries,
+                artifacts={a: f"{r.kind}@{r.version}"
+                           for a, r in sorted(l.artifacts.items())},
+                error=l.error, started_at=l.started_at,
+                finished_at=l.finished_at, reused=l.reused,
+            )
+            for n, l in ((n, self._legs[n]) for n in self._order)
+        }
+        return CampaignReport(
+            name=self.name, state=state, legs=legs, wall_s=wall,
+            critical_path=critical_path(legs, self._deps),
+        )
+
+    def render(self, report: CampaignReport) -> str:
+        return render_report(report)
+
+    # -- scheduling -----------------------------------------------------
+    def _advance(self) -> None:
+        """Start every leg whose dependencies are satisfied; cascade skips
+        and cancellations.  Loops to a fixed point so a chain of compute
+        legs completes in one call."""
+        progressed = True
+        while progressed:
+            progressed = False
+            for name in self._order:
+                leg = self._legs[name]
+                if leg.state != LEG_PENDING:
+                    continue
+                dep_states = [self._legs[d].state for d in self._deps[name]]
+                if any(s in (LEG_FAILED, LEG_CANCELLED) for s in dep_states):
+                    bad = [d for d in self._deps[name]
+                           if self._legs[d].state in (LEG_FAILED, LEG_CANCELLED)]
+                    self._settle(leg, LEG_CANCELLED,
+                                 error=f"upstream leg(s) failed: {bad}")
+                    progressed = True
+                elif any(s == LEG_SKIPPED_GATE for s in dep_states):
+                    self._settle(leg, LEG_SKIPPED_GATE)
+                    progressed = True
+                elif all(s in LEG_SATISFIED for s in dep_states):
+                    self._start_leg(leg)
+                    progressed = True
+
+    def _start_leg(self, leg: _Leg) -> None:
+        p = self.platform
+        spec = leg.spec
+        leg.inputs = {
+            a: self._artifacts[a] for a in spec.dependencies()
+        }
+        consumed = {a: art.ref for a, art in leg.inputs.items()}
+        leg.span = p.tracer.start(
+            "campaign.leg", job=self.name, parent=self._root,
+            leg=spec.name, track=spec.name,
+        )
+        # conditional edge: the gate verdict selects whether this leg runs
+        if spec.gate is not None:
+            verdict = leg.inputs[spec.gate]
+            if not verdict.payload.get("passed"):
+                p.tracer.event(
+                    leg.span, "leg_skip_gate", gate=spec.gate,
+                    version=verdict.ref.version)
+                self._settle(leg, LEG_SKIPPED_GATE)
+                return
+        bound = None
+        if spec.job is not None:
+            bound = dataclasses.replace(spec.job)
+            if spec.bind is not None:
+                bound = spec.bind(bound, leg.inputs)
+            if bound.name is None:
+                bound = dataclasses.replace(
+                    bound, name=f"{self.name}-{spec.name}")
+        leg.fingerprint = leg_fingerprint(spec, bound, consumed)
+        # artifact reuse: unchanged inputs -> the leg is skipped outright
+        if self.reuse:
+            refs = self.store.memo_get(spec.name, leg.fingerprint)
+            if refs is not None:
+                arts = {n: self.store.get(n, r.version) for n, r in refs.items()}
+                if all(a is not None for a in arts.values()):
+                    leg.started_at = leg.finished_at = time.monotonic()
+                    leg.reused = True
+                    for n, art in arts.items():
+                        self._register_artifact(leg, art)
+                    p.tracer.event(
+                        leg.span, "leg_reuse", fingerprint=leg.fingerprint)
+                    p.obs.inc("campaign_legs_reused")
+                    self._settle(leg, LEG_SKIPPED_CACHED)
+                    return
+        leg.started_at = time.monotonic()
+        if spec.compute is not None:
+            self._run_compute(leg)
+            return
+        self._submit_shards(leg, bound)
+
+    def _run_compute(self, leg: _Leg) -> None:
+        """Local decision/mining leg: runs inline, inside its span."""
+        p = self.platform
+        try:
+            produced = leg.spec.compute(dict(leg.inputs))
+            self._produce(leg, produced)
+        except Exception as e:
+            self._settle(leg, LEG_FAILED, error=f"{type(e).__name__}: {e}")
+            return
+        self._settle(leg, LEG_DONE)
+
+    def _submit_shards(self, leg: _Leg, bound: JobSpec) -> None:
+        p = self.platform
+        spec = leg.spec
+        n = plan_fan_out(p.rm, spec.fan_out, spec.devices_per_shard)
+        shard_fn = spec.shard or default_shard
+        leg.shard_specs, leg.shard_jobs, leg.shard_done = [], [], []
+        for i in range(n):
+            sspec = shard_fn(bound, i, n)
+            sspec = dataclasses.replace(sspec, labels={
+                **sspec.labels, "campaign": self.name,
+                "leg": spec.name, "shard": str(i),
+            })
+            # key by the *returned* uniquified name — a concurrent campaign
+            # submitting the same shard names must not cross our bookkeeping
+            job = p.submit(sspec)
+            leg.shard_specs.append(sspec)
+            leg.shard_jobs.append(job)
+            leg.shard_done.append(False)
+            leg.attempts[i] = 1
+            self._outstanding[job] = (spec.name, i)
+        leg.state = LEG_RUNNING
+        p.tracer.event(leg.span, "leg_submit", shards=n)
+        p.obs.inc("campaign_legs_submitted")
+
+    # -- completions ----------------------------------------------------
+    def _on_job_terminal(self, job: str) -> None:
+        p = self.platform
+        if job not in self._outstanding:
+            return
+        leg_name, i = self._outstanding.pop(job)
+        leg = self._legs[leg_name]
+        rep = p.results(job)
+        leg.platform_retries += rep.retries
+        if leg.state in LEG_TERMINAL:
+            return  # a cancelled sibling draining after the leg settled
+        if rep.state == DONE:
+            leg.shard_done[i] = True
+            if all(leg.shard_done):
+                self._harvest(leg)
+            return
+        # FAILED (or externally CANCELLED) shard: backfill it alone if the
+        # campaign-level retry budget allows, else fail the leg
+        retries_done = leg.attempts[i] - 1
+        if rep.state == FAILED and retries_done < leg.spec.max_retries:
+            delay = self._backoff(retries_done + 1)
+            self._holds[(leg_name, i)] = time.monotonic() + delay
+            leg.retries += 1
+            p.tracer.event(
+                leg.span, "leg_retry", shard=i, attempt=leg.attempts[i] + 1,
+                delay_s=round(delay, 4), error=str(rep.error))
+            p.obs.inc("campaign_backfills")
+            return
+        why = ("cancelled" if rep.state == CANCELLED
+               else f"retries exhausted: {rep.error}")
+        # cancel still-running siblings; their terminal events drain through
+        # _on_job_terminal and are ignored (leg already terminal)
+        for other, (ln, _si) in list(self._outstanding.items()):
+            if ln == leg_name:
+                p.cancel(other)
+        for key in [k for k in self._holds if k[0] == leg_name]:
+            del self._holds[key]
+        self._settle(leg, LEG_FAILED, error=f"shard {i} {why}")
+
+    def _harvest(self, leg: _Leg) -> None:
+        """All shards DONE: fold their reports into the produced artifacts
+        (exactly once — the leg settles before any duplicate event could
+        re-enter)."""
+        p = self.platform
+        reports = [p.results(j) for j in leg.shard_jobs]
+        if leg.spec.produces:
+            try:
+                produced = leg.spec.harvest(reports, dict(leg.inputs))
+                self._produce(leg, produced)
+            except Exception as e:
+                self._settle(leg, LEG_FAILED,
+                             error=f"harvest {type(e).__name__}: {e}")
+                return
+        self._settle(leg, LEG_DONE)
+
+    def _produce(self, leg: _Leg, produced: dict) -> None:
+        declared = set(leg.spec.produces)
+        if set(produced) != declared:
+            raise ValueError(
+                f"leg {leg.spec.name!r} declared {sorted(declared)} but "
+                f"produced {sorted(produced)}")
+        for aname in sorted(produced):
+            art = self.store.put(
+                aname, leg.spec.produces[aname], produced[aname])
+            self._register_artifact(leg, art)
+        if leg.fingerprint is not None:
+            self.store.memo_put(leg.spec.name, leg.fingerprint, leg.artifacts)
+
+    def _register_artifact(self, leg: _Leg, art: Artifact) -> None:
+        leg.artifacts[art.ref.name] = art.ref
+        self._artifacts[art.ref.name] = art
+        self.platform.tracer.event(
+            leg.span, "artifact", artifact=art.ref.name, kind=art.ref.kind,
+            version=art.ref.version)
+
+    def _settle(self, leg: _Leg, state: str, error: Optional[str] = None) -> None:
+        p = self.platform
+        leg.state = state
+        leg.error = error
+        if leg.started_at is not None and leg.finished_at is None:
+            leg.finished_at = time.monotonic()
+        if leg.span is None:  # cascaded skip/cancel before the leg started
+            leg.span = p.tracer.start(
+                "campaign.leg", job=self.name, parent=self._root,
+                leg=leg.spec.name, track=leg.spec.name)
+        p.tracer.tag(leg.span, state=state)
+        p.tracer.end(leg.span)
+        p.obs.inc(f"campaign_legs_{state.lower()}")
+
+    # -- backfill holds -------------------------------------------------
+    def _backoff(self, retry: int) -> float:
+        """Seeded exponential backoff + jitter for the ``retry``-th
+        campaign-level backfill — the same curve the platform uses for
+        container-failure resubmission."""
+        base = self.backoff_s
+        if base <= 0:
+            return 0.0
+        delay = min(self.backoff_cap_s, base * (2 ** (retry - 1)))
+        return delay * (0.5 + self._rng.random())
+
+    def _next_hold_delay(self) -> Optional[float]:
+        if not self._holds:
+            return None
+        return max(min(self._holds.values()) - time.monotonic(), 0.0) + 0.002
+
+    def _release_holds(self) -> None:
+        now = time.monotonic()
+        p = self.platform
+        for (leg_name, i), at in sorted(self._holds.items()):
+            if at > now:
+                continue
+            del self._holds[(leg_name, i)]
+            leg = self._legs[leg_name]
+            if leg.state in LEG_TERMINAL:
+                continue
+            job = p.submit(leg.shard_specs[i])
+            leg.shard_jobs[i] = job
+            leg.attempts[i] += 1
+            self._outstanding[job] = (leg_name, i)

@@ -1,0 +1,447 @@
+"""Campaign graphs: typed, versioned artifact edges between platform jobs.
+
+The paper's platform exists to run *pipelines* — simulation sweeps that
+gate algorithm deployment, offline training over mined data, HD-map
+generation — but a bare :class:`~repro.platform.spec.JobSpec` is an
+independent job.  This module declares the dependency structure:
+
+* an :class:`ArtifactRef` names a typed, **content-addressed** output
+  (``checkpoint``, ``dataset``, ``verdict``, ``tiles``, ``report``,
+  ``blob``) — the version is a hash of the payload bytes, so two runs that
+  produce the same data produce the same version, which is how the chaos
+  benchmark proves a faulted campaign bitwise-equal to a clean one;
+* an :class:`ArtifactStore` persists artifacts over the tiered store
+  (:mod:`repro.core.tiered_store`) with a per-leg **memo index**: a leg
+  whose fingerprint (bound job spec + consumed artifact versions) was
+  already produced is skipped on rerun and its recorded refs reused;
+* a :class:`LegSpec` is one campaign leg — a platform job template (or an
+  inline ``compute`` function for decision/mining legs) plus
+  ``consumes``/``produces`` declarations, optional fan-out expanded from
+  pool capacity (generalizing ``--shards auto``), and an optional
+  ``gate``: a verdict artifact whose falsy ``passed`` skips the leg;
+* a :class:`CampaignSpec` validates the DAG (unique producers, resolvable
+  edges, no cycles — a cycle error names the cycle) and yields the
+  deterministic topological order the driver schedules in.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import threading
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from repro.core import binpipe
+from repro.core.tiered_store import TieredStore
+from repro.platform.spec import JobSpec
+
+# artifact type vocabulary — the edges of the qualification factory
+ARTIFACT_KINDS = ("checkpoint", "dataset", "verdict", "tiles", "report", "blob")
+
+_KIND_FIELD = "__kind__"  # reserved payload field carrying the artifact kind
+
+
+class CampaignError(ValueError):
+    pass
+
+
+class CampaignCycleError(CampaignError):
+    """The leg graph has a dependency cycle; names one concrete cycle."""
+
+    def __init__(self, cycle: list[str]):
+        self.cycle = list(cycle)
+        super().__init__(
+            "campaign graph has a cycle: " + " -> ".join(cycle + cycle[:1])
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ArtifactRef:
+    """A typed, versioned artifact name — what flows along a DAG edge."""
+
+    name: str
+    kind: str
+    version: str  # content hash (hex) of the payload bytes
+
+    def __str__(self) -> str:
+        return f"{self.name}:{self.kind}@{self.version}"
+
+
+@dataclasses.dataclass
+class Artifact:
+    """A materialized artifact: its ref plus the decoded payload record."""
+
+    ref: ArtifactRef
+    payload: dict
+
+
+class ArtifactStore:
+    """Content-addressed artifact storage + leg memoization over a
+    :class:`~repro.core.tiered_store.TieredStore`.
+
+    ``put`` is idempotent per content: the version is a hash over the
+    canonically-encoded payload, and a blob that already exists is not
+    rewritten — exactly-once production even when chaos makes a leg run
+    twice.  ``created`` logs the keys actually written (the exactly-once
+    assertion surface for tests).
+    """
+
+    def __init__(self, store: Any, prefix: str = "campaign"):
+        if isinstance(store, str):
+            self.store = TieredStore(store, mem_capacity=1 << 30)
+            self._owned = True
+        else:
+            self.store = store
+            self._owned = False
+        self.prefix = prefix
+        self.created: list[str] = []  # "name@version" for each blob written
+        self._lock = threading.Lock()
+
+    # -- keys -----------------------------------------------------------
+    def _akey(self, name: str, version: str) -> str:
+        return f"{self.prefix}/art/{name}@{version}"
+
+    def _lkey(self, name: str) -> str:
+        return f"{self.prefix}/latest/{name}"
+
+    def _mkey(self, leg: str, fingerprint: str) -> str:
+        return f"{self.prefix}/memo/{leg}@{fingerprint}"
+
+    # -- artifacts ------------------------------------------------------
+    @staticmethod
+    def encode_payload(kind: str, payload: dict) -> bytes:
+        """Canonical bytes for a payload: kind folded in as a reserved
+        field, keys sorted — so the content hash is insertion-order-free."""
+        if kind not in ARTIFACT_KINDS:
+            raise CampaignError(
+                f"unknown artifact kind {kind!r}; known: {ARTIFACT_KINDS}")
+        if _KIND_FIELD in payload:
+            raise CampaignError(f"{_KIND_FIELD} is a reserved payload field")
+        full = dict(payload)
+        full[_KIND_FIELD] = kind
+        return binpipe.encode_record({k: full[k] for k in sorted(full)})
+
+    def put(self, name: str, kind: str, payload: dict) -> Artifact:
+        """Store (idempotently) and return the versioned artifact."""
+        data = self.encode_payload(kind, payload)
+        version = hashlib.sha256(data).hexdigest()[:16]
+        key = self._akey(name, version)
+        with self._lock:
+            if not self.store.exists(key):
+                self.store.put(key, data)
+                self.created.append(f"{name}@{version}")
+            self.store.put_record(
+                self._lkey(name), {"version": version, "kind": kind})
+        return Artifact(ArtifactRef(name, kind, version), dict(payload))
+
+    def get(self, name: str, version: Optional[str] = None) -> Optional[Artifact]:
+        """Fetch an artifact by name (``@latest`` when version is None)."""
+        if version is None:
+            latest = self.store.get_record(self._lkey(name))
+            if latest is None:
+                return None
+            version = str(latest["version"])
+        data = self.store.get(self._akey(name, version))
+        if data is None:
+            return None
+        payload = binpipe.decode_record(data)
+        kind = str(payload.pop(_KIND_FIELD))
+        return Artifact(ArtifactRef(name, kind, version), payload)
+
+    def exists(self, name: str, version: str) -> bool:
+        return self.store.exists(self._akey(name, version))
+
+    def versions(self, name: str) -> list[str]:
+        """All stored versions of an artifact (sorted)."""
+        pre = f"{self.prefix}/art/{name}@"
+        return sorted(
+            k[len(pre):] for k in self.store.keys() if k.startswith(pre))
+
+    # -- leg memoization ------------------------------------------------
+    def memo_put(self, leg: str, fingerprint: str,
+                 produced: dict[str, ArtifactRef]) -> None:
+        refs = {n: [r.kind, r.version] for n, r in sorted(produced.items())}
+        self.store.put_record(
+            self._mkey(leg, fingerprint), {"refs": json.dumps(refs)})
+
+    def memo_get(self, leg: str,
+                 fingerprint: str) -> Optional[dict[str, ArtifactRef]]:
+        """Recorded refs for an identical past run of this leg — or None if
+        there is no memo or any referenced blob has since been deleted."""
+        rec = self.store.get_record(self._mkey(leg, fingerprint))
+        if rec is None:
+            return None
+        refs = {
+            n: ArtifactRef(n, k, v)
+            for n, (k, v) in json.loads(rec["refs"]).items()
+        }
+        if not all(self.exists(n, r.version) for n, r in refs.items()):
+            return None
+        return refs
+
+    def flush(self) -> None:
+        self.store.flush()
+
+    def close(self) -> None:
+        if self._owned:
+            self.store.close()
+
+
+# ---------------------------------------------------------------------------
+# leg + campaign specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LegSpec:
+    """One campaign leg: a platform job template *or* an inline compute
+    function, plus its artifact edges.
+
+    ``bind(job, inputs)`` specializes the job template to the consumed
+    artifacts (e.g. point a serve job at the checkpoint artifact's
+    directory) and runs once per leg, before fan-out.  ``shard(job, i, n)``
+    derives shard ``i`` of ``n`` from the bound template (the default is
+    scenario-aware: it stamps ``shard_index``/``num_shards`` when the
+    config has them).  ``harvest(reports, inputs)`` folds the shard
+    :class:`JobReport`s (in shard order) into the produced payloads.
+    ``compute(inputs)`` replaces all three for local decision/mining legs
+    and returns the produced payloads directly.  ``gate`` names a verdict
+    artifact (an implicit dependency): a falsy ``passed`` field skips this
+    leg — the conditional edge.  ``max_retries`` bounds *campaign-level*
+    backfills per shard, on top of the platform's own container retries.
+    """
+
+    name: str
+    job: Optional[JobSpec] = None
+    compute: Optional[Callable[[dict], dict]] = None
+    consumes: tuple = ()
+    produces: dict = dataclasses.field(default_factory=dict)  # name -> kind
+    bind: Optional[Callable[[JobSpec, dict], JobSpec]] = None
+    harvest: Optional[Callable[[list, dict], dict]] = None
+    gate: Optional[str] = None
+    fan_out: Any = 1  # shard count, or "auto" (from the pool's free runs)
+    devices_per_shard: int = 2
+    shard: Optional[Callable[[JobSpec, int, int], JobSpec]] = None
+    max_retries: int = 2
+
+    def validate(self) -> None:
+        if (self.job is None) == (self.compute is None):
+            raise CampaignError(
+                f"leg {self.name!r}: exactly one of job/compute required")
+        if self.compute is not None and not self.produces:
+            raise CampaignError(
+                f"leg {self.name!r}: a compute leg must produce artifacts")
+        if self.job is not None and self.produces and self.harvest is None:
+            raise CampaignError(
+                f"leg {self.name!r}: a producing job leg needs a harvest fn")
+        for aname, kind in self.produces.items():
+            if kind not in ARTIFACT_KINDS:
+                raise CampaignError(
+                    f"leg {self.name!r} produces {aname!r} of unknown kind "
+                    f"{kind!r}; known: {ARTIFACT_KINDS}")
+        if not (self.fan_out == "auto"
+                or (isinstance(self.fan_out, int) and self.fan_out >= 1)):
+            raise CampaignError(
+                f"leg {self.name!r}: fan_out must be >= 1 or 'auto', "
+                f"got {self.fan_out!r}")
+
+    def dependencies(self) -> tuple[str, ...]:
+        """Artifact names this leg waits on (consumed + the gate verdict)."""
+        deps = list(self.consumes)
+        if self.gate is not None and self.gate not in deps:
+            deps.append(self.gate)
+        return tuple(deps)
+
+
+@dataclasses.dataclass
+class CampaignSpec:
+    """A named DAG of legs connected by artifact edges."""
+
+    name: str
+    legs: tuple = ()
+
+    def __post_init__(self):
+        self.legs = tuple(self.legs)
+
+    def validate(self) -> None:
+        names = [leg.name for leg in self.legs]
+        if len(set(names)) != len(names):
+            dupes = sorted({n for n in names if names.count(n) > 1})
+            raise CampaignError(f"duplicate leg names: {dupes}")
+        producers: dict[str, str] = {}
+        for leg in self.legs:
+            leg.validate()
+            for aname in leg.produces:
+                if aname in producers:
+                    raise CampaignError(
+                        f"artifact {aname!r} produced by both "
+                        f"{producers[aname]!r} and {leg.name!r}")
+                producers[aname] = leg.name
+        for leg in self.legs:
+            for aname in leg.dependencies():
+                if aname not in producers:
+                    raise CampaignError(
+                        f"leg {leg.name!r} consumes {aname!r}, which no leg "
+                        "produces")
+                if producers[aname] == leg.name:
+                    raise CampaignError(
+                        f"leg {leg.name!r} consumes its own output {aname!r}")
+        self.topo_order()  # raises CampaignCycleError on a cycle
+
+    def leg(self, name: str) -> LegSpec:
+        for leg in self.legs:
+            if leg.name == name:
+                return leg
+        raise KeyError(name)
+
+    def producer_of(self) -> dict[str, str]:
+        """Artifact name -> producing leg name."""
+        return {
+            aname: leg.name for leg in self.legs for aname in leg.produces
+        }
+
+    def leg_deps(self) -> dict[str, tuple[str, ...]]:
+        """Leg name -> the (sorted, deduplicated) leg names it depends on."""
+        producers = self.producer_of()
+        return {
+            leg.name: tuple(sorted({
+                producers[a] for a in leg.dependencies() if a in producers
+            }))
+            for leg in self.legs
+        }
+
+    def dependents_of(self, name: str) -> list[str]:
+        """Transitive downstream closure of a leg (sorted) — the legs to
+        cascade-cancel when it fails permanently."""
+        deps = self.leg_deps()
+        out: set[str] = set()
+        frontier = [name]
+        while frontier:
+            cur = frontier.pop()
+            for other, ds in deps.items():
+                if cur in ds and other not in out:
+                    out.add(other)
+                    frontier.append(other)
+        return sorted(out)
+
+    def topo_order(self) -> list[str]:
+        """Deterministic topological order (Kahn, lexicographic ready set).
+        Raises :class:`CampaignCycleError` naming a cycle when one exists."""
+        deps = self.leg_deps()
+        indeg = {n: len(ds) for n, ds in deps.items()}
+        dependents: dict[str, list[str]] = {n: [] for n in deps}
+        for n, ds in deps.items():
+            for d in ds:
+                dependents[d].append(n)
+        ready = sorted(n for n, d in indeg.items() if d == 0)
+        order: list[str] = []
+        while ready:
+            n = ready.pop(0)
+            order.append(n)
+            changed = False
+            for m in dependents[n]:
+                indeg[m] -= 1
+                if indeg[m] == 0:
+                    ready.append(m)
+                    changed = True
+            if changed:
+                ready.sort()
+        if len(order) != len(deps):
+            remaining = {n for n in deps if n not in order}
+            raise CampaignCycleError(_find_cycle(deps, remaining))
+        return order
+
+
+def _find_cycle(deps: dict[str, tuple[str, ...]], nodes: set) -> list[str]:
+    """Extract one concrete cycle from the unsortable remainder (DFS)."""
+    state: dict[str, int] = {}  # 0 visiting / 1 done
+    stack: list[str] = []
+
+    def visit(n: str) -> Optional[list[str]]:
+        state[n] = 0
+        stack.append(n)
+        for d in deps.get(n, ()):
+            if d not in nodes:
+                continue
+            if state.get(d) == 0:
+                return stack[stack.index(d):]
+            if d not in state:
+                cyc = visit(d)
+                if cyc is not None:
+                    return cyc
+        stack.pop()
+        state[n] = 1
+        return None
+
+    for n in sorted(nodes):
+        if n not in state:
+            cyc = visit(n)
+            if cyc is not None:
+                return cyc
+    return sorted(nodes)  # unreachable fallback
+
+
+# ---------------------------------------------------------------------------
+# fan-out planning + fingerprints
+# ---------------------------------------------------------------------------
+
+
+def plan_fan_out(rm, fan_out, devices_per_shard: int = 2) -> int:
+    """Shard count for a fan-out leg.  ``"auto"`` derives it from the
+    pool's free contiguous runs — the same plan ``--shards auto`` and the
+    serve-cell tier use (:func:`repro.launch.cells.serve_cell_plan`), so
+    every pool-saturation policy stays in sync."""
+    if isinstance(fan_out, str):
+        if fan_out.strip().lower() != "auto":
+            raise CampaignError(f"fan_out must be an int or 'auto', got {fan_out!r}")
+        from repro.launch.cells import serve_cell_plan
+
+        return len(serve_cell_plan(rm, devices_per_cell=devices_per_shard))
+    return max(1, int(fan_out))
+
+
+def default_shard(job: JobSpec, i: int, n: int) -> JobSpec:
+    """Derive shard ``i`` of ``n`` from a bound job template: uniquified
+    name, and ``shard_index``/``num_shards`` stamped when the config has
+    them (the scenario driver's seed-deterministic slicing)."""
+    cfg = job.config
+    if dataclasses.is_dataclass(cfg) and not isinstance(cfg, type):
+        fields = {f.name for f in dataclasses.fields(cfg)}
+        if {"shard_index", "num_shards"} <= fields:
+            cfg = dataclasses.replace(cfg, shard_index=i, num_shards=n)
+    elif isinstance(cfg, dict) and {"shard_index", "num_shards"} <= set(cfg):
+        cfg = {**cfg, "shard_index": i, "num_shards": n}
+    return dataclasses.replace(
+        job, name=f"{job.name or job.kind}-{i}", config=cfg)
+
+
+def _json_default(o: Any) -> Any:
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    if isinstance(o, (np.integer, np.floating)):
+        return o.item()
+    return str(o)
+
+
+def leg_fingerprint(leg: LegSpec, bound_job: Optional[JobSpec],
+                    consumed: dict[str, ArtifactRef]) -> str:
+    """Content fingerprint of a leg *invocation*: the bound (pre-fan-out)
+    job spec plus the exact versions it consumes.  Fan-out count is
+    deliberately excluded — shard outputs are partition-invariant, so the
+    same inputs on a differently-shaped pool still reuse.  For compute
+    legs only the function's name participates (a changed body needs a
+    renamed function or a cleared memo to invalidate)."""
+    body = {
+        "leg": leg.name,
+        "job": dataclasses.asdict(bound_job) if bound_job is not None else None,
+        "compute": (getattr(leg.compute, "__qualname__", repr(leg.compute))
+                    if leg.compute is not None else None),
+        "consumed": {n: [r.kind, r.version]
+                     for n, r in sorted(consumed.items())},
+        "produces": dict(sorted(leg.produces.items())),
+    }
+    blob = json.dumps(body, sort_keys=True, default=_json_default)
+    return hashlib.sha256(blob.encode("utf-8")).hexdigest()[:16]

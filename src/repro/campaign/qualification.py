@@ -1,0 +1,284 @@
+"""The closed-loop qualification campaign: the paper's five services wired
+into one DAG.
+
+    sweep ──rollouts_baseline──▶ dataset ──mined_dataset──▶ train
+      │                                                       │
+      ├─rollouts_candidate─▶ qualify ──verdict (gate)──┐      │checkpoint
+      └─rollouts_baseline──▶    │                      ▼      ▼
+                                └─────────────▶      rollout (serve)
+
+* **sweep** — one fan-out scenario leg that runs *both* policies: the
+  first ``ceil(n/2)`` shards cover the full scenario set with the deployed
+  baseline, the rest cover it again with the candidate.  Because each half
+  re-partitions the same seed-deterministic batch, the harvested rollout
+  records are partition-invariant — any shard count ≥ 2 produces
+  bitwise-identical artifacts.
+* **dataset** — a compute leg that mines the near-miss scenarios
+  (collision, low TTC, or rule violation) out of the baseline rollouts:
+  the "drive data in, model out" edge.
+* **train** — a train job whose checkpoint directory is derived from the
+  mined dataset's *version*, so retraining happens exactly when the mined
+  data changes; produces a ``checkpoint`` artifact versioned by the final
+  parameter digest.
+* **qualify** — a compute decision leg running the A/B gate
+  (:func:`repro.scenario.metrics.qualify`) over both rollout records; its
+  ``verdict`` artifact carries ``passed``.
+* **rollout** — a serve job **gated on the verdict**: it restores the
+  checkpoint artifact and generates with seeded sampling; the produced
+  report content-hashes the generated tokens.  A failed gate skips this
+  leg (and the campaign still completes DONE).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from types import SimpleNamespace
+
+import numpy as np
+
+from repro.campaign.graph import CampaignSpec, LegSpec
+from repro.platform.spec import JobSpec
+
+
+def _cat_rollouts(metric_dicts: list) -> tuple:
+    """Concatenate shard metrics (shard order == scenario order) into
+    (family_ids, family_names, rollout-like, steps)."""
+    fam = np.concatenate(
+        [np.asarray(m["_family_id"]) for m in metric_dicts])
+    roll = SimpleNamespace(**{
+        f: np.concatenate(
+            [np.asarray(getattr(m["_rollout"], f)) for m in metric_dicts])
+        for f in ("collided", "min_ttc", "min_dist", "violations")
+    })
+    return fam, metric_dicts[0]["_family_names"], roll, int(
+        metric_dicts[0]["steps"])
+
+
+def _sweep_shard(baseline: str, candidate: str):
+    """Shard fn: split ``n`` shards into a baseline half and a candidate
+    half, each independently re-sharding the full scenario batch."""
+
+    def shard(job: JobSpec, i: int, n: int) -> JobSpec:
+        if n < 2:
+            raise ValueError(
+                f"the A/B sweep needs fan_out >= 2 (one shard per policy "
+                f"half), got {n}")
+        b = (n + 1) // 2
+        policy, local_i, local_n, tag = (
+            (baseline, i, b, "base") if i < b
+            else (candidate, i - b, n - b, "cand"))
+        cfg = dataclasses.replace(
+            job.config, policy=policy, shard_index=local_i,
+            num_shards=local_n)
+        return dataclasses.replace(
+            job, name=f"{job.name or job.kind}-{tag}{local_i}", config=cfg)
+
+    return shard
+
+
+def _harvest_sweep(reports: list, inputs: dict) -> dict:
+    from repro.scenario.metrics import rollout_record
+
+    n = len(reports)
+    b = (n + 1) // 2  # mirrors _sweep_shard's split
+    out = {}
+    for aname, ms in (
+        ("rollouts_baseline", [r.metrics for r in reports[:b]]),
+        ("rollouts_candidate", [r.metrics for r in reports[b:]]),
+    ):
+        fam, names, roll, steps = _cat_rollouts(ms)
+        out[aname] = rollout_record(fam, names, roll, steps=steps)
+    return out
+
+
+def _mine_dataset(near_miss_ttc: float):
+    """Compute leg: near-miss mining over the baseline rollouts — the
+    scenarios worth retraining on (collision, TTC under threshold, or any
+    rule violation)."""
+
+    def mine(inputs: dict) -> dict:
+        rec = inputs["rollouts_baseline"].payload
+        collided = np.asarray(rec["collided"]).astype(bool)
+        min_ttc = np.asarray(rec["min_ttc"])
+        violations = np.asarray(rec["violations"])
+        hard = collided | (min_ttc < near_miss_ttc) | (violations > 0)
+        idx = np.flatnonzero(hard).astype(np.int64)
+        return {"mined_dataset": {
+            "indices": idx,
+            "count": int(idx.size),
+            "total": int(hard.size),
+            "near_miss_ttc": float(near_miss_ttc),
+            "source": str(inputs["rollouts_baseline"].ref),
+        }}
+
+    return mine
+
+
+def _bind_train(ckpt_root: str):
+    def bind(job: JobSpec, inputs: dict) -> JobSpec:
+        # the checkpoint directory is keyed by the mined dataset's version:
+        # a changed dataset gets a fresh directory (no stale resume), an
+        # unchanged one re-lands on the same deterministic path
+        sub = f"train-{inputs['mined_dataset'].ref.version}"
+        cfg = dataclasses.replace(
+            job.config, ckpt_dir=os.path.join(ckpt_root, sub))
+        return dataclasses.replace(job, config=cfg)
+
+    return bind
+
+
+def _harvest_train(reports: list, inputs: dict) -> dict:
+    m = reports[0].metrics
+    # the subpath (not the absolute dir) goes in the payload, so the
+    # artifact version is machine- and tmpdir-independent
+    return {"checkpoint": {
+        "ckpt": f"train-{inputs['mined_dataset'].ref.version}",
+        "step": int(m["steps"]),
+        "params_digest": str(m["params_digest"]),
+    }}
+
+
+def _qualify(inputs: dict) -> dict:
+    from repro.scenario.metrics import qualify, report_from_record
+
+    q = qualify(
+        report_from_record(inputs["rollouts_baseline"].payload),
+        report_from_record(inputs["rollouts_candidate"].payload),
+    )
+    return {"verdict": {
+        "passed": int(q.passed),
+        "baseline_collision_rate": float(q.baseline_collision_rate),
+        "candidate_collision_rate": float(q.candidate_collision_rate),
+        "reasons": json.dumps(q.reasons),
+    }}
+
+
+def _bind_rollout(ckpt_root: str):
+    def bind(job: JobSpec, inputs: dict) -> JobSpec:
+        cfg = dataclasses.replace(
+            job.config,
+            ckpt_dir=os.path.join(ckpt_root, inputs["checkpoint"].payload["ckpt"]))
+        return dataclasses.replace(job, config=cfg)
+
+    return bind
+
+
+def _harvest_rollout(reports: list, inputs: dict) -> dict:
+    m = reports[0].metrics
+    # generated token ids only — seeded sampling makes them a pure function
+    # of the checkpoint params; timing metrics stay out of the payload
+    return {"serve_rollout": {
+        "tokens_out": np.asarray(m["_tokens"]),
+        "tokens": int(m["tokens"]),
+        "checkpoint": str(inputs["checkpoint"].ref),
+    }}
+
+
+def qualification_campaign(
+    *,
+    ckpt_root: str,
+    name: str = "qualification",
+    arch: str = "qwen2-0.5b",
+    families=None,
+    per_family: int = 8,
+    scenario_steps: int = 40,
+    baseline_policy: str = "baseline",
+    candidate_policy: str = "aeb",
+    fan_out=4,
+    devices_per_shard: int = 2,
+    train_steps: int = 6,
+    train_batch: int = 4,
+    train_seq: int = 64,
+    serve_gen: int = 8,
+    seed: int = 0,
+    max_retries: int = 2,
+) -> CampaignSpec:
+    """Build the five-leg closed-loop qualification campaign.
+
+    Swapping ``baseline_policy``/``candidate_policy`` (so the candidate is
+    the *worse* planner) exercises the gate's false branch: ``qualify``
+    rejects, the ``rollout`` leg is skipped, and the campaign still
+    completes.
+    """
+    from repro.platform.services import (
+        ScenarioJobConfig,
+        ServeJobConfig,
+        TrainJobConfig,
+    )
+
+    vocab = 512
+    sweep = LegSpec(
+        name="sweep",
+        job=JobSpec(
+            kind="scenario",
+            name=f"{name}-sweep",
+            config=ScenarioJobConfig(
+                families=families, per_family=per_family,
+                steps=scenario_steps, seed=seed, policy=baseline_policy,
+            ),
+            devices=devices_per_shard,
+        ),
+        produces={"rollouts_baseline": "dataset",
+                  "rollouts_candidate": "dataset"},
+        harvest=_harvest_sweep,
+        shard=_sweep_shard(baseline_policy, candidate_policy),
+        fan_out=fan_out,
+        devices_per_shard=devices_per_shard,
+        max_retries=max_retries,
+    )
+    dataset = LegSpec(
+        name="dataset",
+        compute=_mine_dataset(near_miss_ttc=2.0),
+        consumes=("rollouts_baseline",),
+        produces={"mined_dataset": "dataset"},
+    )
+    train = LegSpec(
+        name="train",
+        job=JobSpec(
+            kind="train",
+            name=f"{name}-train",
+            config=TrainJobConfig(
+                arch=arch, steps=train_steps, batch=train_batch,
+                seq=train_seq, vocab=vocab, ckpt_every=max(train_steps // 2, 1),
+                log_every=max(train_steps // 2, 1),
+            ),
+            devices=devices_per_shard,
+        ),
+        consumes=("mined_dataset",),
+        produces={"checkpoint": "checkpoint"},
+        bind=_bind_train(ckpt_root),
+        harvest=_harvest_train,
+        devices_per_shard=devices_per_shard,
+        max_retries=max_retries,
+    )
+    gate = LegSpec(
+        name="qualify",
+        compute=_qualify,
+        consumes=("rollouts_baseline", "rollouts_candidate"),
+        produces={"verdict": "verdict"},
+    )
+    rollout = LegSpec(
+        name="rollout",
+        job=JobSpec(
+            kind="serve",
+            name=f"{name}-rollout",
+            config=ServeJobConfig(
+                arch=arch, engine="static", temperature=0.0, seed=seed,
+                batch=2, prompt_len=16, gen=serve_gen, vocab=vocab,
+                # the model config is shaped by (arch, vocab, seq): restore
+                # only round-trips when these match the train job's
+                seq=train_seq,
+            ),
+            devices=devices_per_shard,
+        ),
+        consumes=("checkpoint",),
+        gate="verdict",
+        produces={"serve_rollout": "report"},
+        bind=_bind_rollout(ckpt_root),
+        harvest=_harvest_rollout,
+        devices_per_shard=devices_per_shard,
+        max_retries=max_retries,
+    )
+    return CampaignSpec(name=name, legs=(sweep, dataset, train, gate, rollout))

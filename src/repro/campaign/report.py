@@ -1,0 +1,120 @@
+"""Human-readable campaign reports: per-leg status, retries, artifact
+versions, and the DAG critical path.
+
+The :class:`CampaignReport` is the campaign analog of the per-job
+:class:`~repro.platform.spec.JobReport`: one uniform record the CLI, the
+benchmark and CI smoke all render with :func:`render_report` — the
+orchestrator/reporter "daily experiment report" shape.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+# leg states (campaign level; a leg's shards are platform jobs underneath)
+LEG_PENDING = "PENDING"
+LEG_RUNNING = "RUNNING"
+LEG_DONE = "DONE"
+LEG_FAILED = "FAILED"
+LEG_CANCELLED = "CANCELLED"
+LEG_SKIPPED_GATE = "SKIPPED_GATE"    # gate verdict said no
+LEG_SKIPPED_CACHED = "SKIPPED_CACHED"  # unchanged inputs: artifacts reused
+LEG_TERMINAL = (LEG_DONE, LEG_FAILED, LEG_CANCELLED,
+                LEG_SKIPPED_GATE, LEG_SKIPPED_CACHED)
+# states that satisfy a downstream dependency (artifacts are available)
+LEG_SATISFIED = (LEG_DONE, LEG_SKIPPED_CACHED)
+
+
+@dataclasses.dataclass
+class LegReport:
+    """One leg's outcome: shards, campaign-level retries, artifacts."""
+
+    name: str
+    state: str
+    shards: list[str] = dataclasses.field(default_factory=list)
+    retries: int = 0  # campaign-level backfills (beyond platform retries)
+    platform_retries: int = 0  # container-failure retries inside the shards
+    artifacts: dict[str, str] = dataclasses.field(default_factory=dict)
+    # name -> "kind@version"
+    error: Optional[str] = None
+    started_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    reused: bool = False
+
+    @property
+    def wall_s(self) -> float:
+        if self.started_at is None or self.finished_at is None:
+            return 0.0
+        return max(self.finished_at - self.started_at, 0.0)
+
+
+@dataclasses.dataclass
+class CampaignReport:
+    """The whole campaign's outcome, legs in topological order."""
+
+    name: str
+    state: str  # DONE | FAILED
+    legs: dict[str, LegReport] = dataclasses.field(default_factory=dict)
+    wall_s: float = 0.0
+    critical_path: list[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def artifacts(self) -> dict[str, str]:
+        out: dict[str, str] = {}
+        for leg in self.legs.values():
+            out.update(leg.artifacts)
+        return out
+
+
+def critical_path(legs: dict[str, LegReport],
+                  deps: dict[str, tuple]) -> list[str]:
+    """The chain of legs that determined the campaign's end time: start
+    from the leg that finished last, repeatedly step to the dependency
+    that finished last, and reverse.  Legs that never started (skipped or
+    cancelled before running) are transparent — the walk continues through
+    their dependencies."""
+    finished = {
+        n: r.finished_at for n, r in legs.items() if r.finished_at is not None
+    }
+    if not finished:
+        return []
+    path: list[str] = []
+    cur: Optional[str] = max(sorted(finished), key=lambda n: finished[n])
+    while cur is not None:
+        if legs[cur].started_at is not None or not path:
+            path.append(cur)
+        prev = [d for d in deps.get(cur, ()) if d in finished]
+        cur = max(sorted(prev), key=lambda n: finished[n]) if prev else None
+    return list(reversed(path))
+
+
+def render_report(report: CampaignReport) -> str:
+    """Render the campaign report — the artifact CI uploads."""
+    lines = [
+        f"campaign {report.name}: {report.state} "
+        f"({len(report.legs)} legs, wall {report.wall_s:.2f}s)",
+        "",
+        f"{'leg':<12} {'state':<15} {'shards':>6} {'retries':>8} "
+        f"{'wall_s':>8}  artifacts",
+    ]
+    for name, leg in report.legs.items():
+        arts = " ".join(
+            f"{a}={v}" for a, v in sorted(leg.artifacts.items())) or "-"
+        retries = f"{leg.retries}+{leg.platform_retries}"
+        lines.append(
+            f"{name:<12} {leg.state:<15} {len(leg.shards):>6} "
+            f"{retries:>8} {leg.wall_s:>8.2f}  {arts}"
+        )
+        if leg.error:
+            lines.append(f"{'':<12} error: {leg.error}")
+    lines.append("")
+    if report.critical_path:
+        lines.append("critical path: " + " -> ".join(report.critical_path))
+        cp_wall = sum(report.legs[n].wall_s for n in report.critical_path
+                      if n in report.legs)
+        lines.append(
+            f"critical path wall: {cp_wall:.2f}s of {report.wall_s:.2f}s "
+            "campaign wall"
+        )
+    return "\n".join(lines)

@@ -272,6 +272,18 @@ class TieredStore:
             self._writer.join(timeout=10)
             self._async = False
 
+    def keys(self) -> list[str]:
+        """Sorted union of keys across every cache tier and the persist
+        store — the listing surface directory-style consumers (e.g. the
+        campaign ``ArtifactStore``'s version index) need.  Blocks still in
+        the async persist queue are covered by their cache-tier copy."""
+        with self._lock:
+            ks: set[str] = set()
+            for t in self.TIERS:
+                ks.update(self.tiers[t].keys())
+            ks.update(self.persist.keys())
+            return sorted(ks)
+
     def drop_caches(self) -> None:
         """Simulate losing every cache tier (node restart); persist survives."""
         with self._lock:

@@ -65,12 +65,18 @@ def _sweep(platform: Platform, args, policy: str, prefix: str):
         )
         for i in range(num_shards)
     ]
-    reports = platform.run_batch(specs)
-    bad = {n: r.error for n, r in reports.items() if r.state != "DONE"}
+    # key strictly by the *returned* (uniquified) names, in shard order:
+    # a concurrent sweep submitting the same shard names on a shared
+    # platform gets "-2"-suffixed jobs, and keying by the request-side
+    # names would cross-merge the two sweeps' reports
+    names = platform.submit_batch(specs)
+    reports = platform.wait(names)
+    assert isinstance(reports, dict)
+    bad = {n: reports[n].error for n in names if reports[n].state != "DONE"}
     if bad:
         raise RuntimeError(f"scenario shards failed: {bad}")
     return aggregate_scenario_metrics(
-        [r.metrics for r in reports.values()], time.perf_counter() - t0
+        [reports[n].metrics for n in names], time.perf_counter() - t0
     )
 
 

@@ -129,14 +129,19 @@ def main(argv=None):
     print(f"[serve_cells] assignment: {router.routed} requests/cell")
 
     # one serve job per non-empty cell, scheduled independently on the pool
-    specs, cell_of = [], {}
+    specs, spec_cells = [], []
     for ci, cell in enumerate(planned):
         if not cell.assigned:
             continue
-        spec = _cell_spec(args, ci, cell.devices, len(cell.assigned))
-        cell_of[spec.name] = ci
-        specs.append(spec)
-    reports = platform.run_batch(specs)
+        specs.append(_cell_spec(args, ci, cell.devices, len(cell.assigned)))
+        spec_cells.append(ci)
+    # the cell map keys by the *returned* uniquified names: on a shared
+    # platform a same-named tenant shifts ours to "-2" suffixes, and the
+    # request-side spec.name would no longer match the report keys
+    names = platform.submit_batch(specs)
+    cell_of = dict(zip(names, spec_cells))
+    reports = platform.wait(names)
+    assert isinstance(reports, dict)
 
     # whole-cell salvage with a retry cap + exponential backoff: a cell job
     # that failed terminally has its requests rerouted across the surviving
@@ -176,15 +181,20 @@ def main(argv=None):
         before = list(router.routed)
         _assign(router, salvaged)  # JSQ across the surviving cells
         router.salvaged += len(salvaged)
-        salvage_specs = []
+        salvage_specs, salvage_cells = [], []
         for si in survivors:
             extra = router.routed[si] - before[si]
             if extra > 0:
-                spec = _cell_spec(args, si, plan[si], extra,
-                                  suffix=f"-salvage{round_no}")
-                cell_of[spec.name] = si
-                salvage_specs.append(spec)
-        fresh = platform.run_batch(salvage_specs) if salvage_specs else {}
+                salvage_specs.append(_cell_spec(
+                    args, si, plan[si], extra, suffix=f"-salvage{round_no}"))
+                salvage_cells.append(si)
+        if salvage_specs:
+            salvage_names = platform.submit_batch(salvage_specs)
+            cell_of.update(zip(salvage_names, salvage_cells))
+            fresh = platform.wait(salvage_names)
+            assert isinstance(fresh, dict)
+        else:
+            fresh = {}
         reports.update(fresh)
         failed = {n: r for n, r in fresh.items() if r.state != DONE}
     if failed:

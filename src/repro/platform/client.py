@@ -292,6 +292,7 @@ class Platform:
                 "job", job=name, t=rec.submitted_at, kind=spec.kind,
                 devices=spec.devices, priority=spec.priority,
                 isolation=spec.isolation,
+                **{f"label_{k}": v for k, v in sorted(spec.labels.items())},
             )
             rec.log(f"submitted kind={spec.kind} want={spec.devices} "
                     f"priority={spec.priority}", self._clock())
@@ -785,6 +786,109 @@ class Platform:
         if single:
             return self.results(targets[0])
         return {n: self.results(n) for n in targets}
+
+    def wait_any(
+        self,
+        names: Sequence[str],
+        timeout_s: float = 600.0,
+        return_after_s: Optional[float] = None,
+    ) -> list[str]:
+        """Drive the executor until *any* of ``names`` is terminal; returns
+        the terminal subset (possibly several at once).  Unlike :meth:`wait`
+        this hands control back as soon as one job settles, which is what a
+        DAG driver needs: harvest the finished leg's artifacts and submit its
+        dependents while sibling legs keep running.
+
+        ``return_after_s`` bounds the wait: on expiry an empty list is
+        returned even though nothing finished — the caller's cue to do
+        time-based work (e.g. resubmit a leg whose retry hold lapsed) and
+        call back in.  With it set, an empty ``names`` is a bounded sleep
+        that still drives dispatch/chaos/elastic; without it, empty
+        ``names`` returns immediately.  ``timeout_s`` bounds foreign-tenant
+        stall detection exactly as in :meth:`wait`.
+        """
+        targets = list(names)
+        if not targets and return_after_s is None:
+            return []
+        t0 = time.monotonic()
+        if not self.concurrent:
+            return self._wait_any_serial(targets, timeout_s, t0, return_after_s)
+        with self._cond:
+            while True:
+                self._observe()
+                done = [
+                    n for n in targets
+                    if self._records[n].state in TERMINAL
+                    and n not in self._active
+                ]
+                if done:
+                    return done
+                if return_after_s is not None and \
+                        time.monotonic() - t0 >= return_after_s:
+                    return []
+                self._tick_controllers()
+                if self._dispatch():
+                    continue
+                self.elastic.maybe_step()
+                timeout = self._wait_timeout(None)
+                if return_after_s is not None:
+                    timeout = min(
+                        timeout,
+                        max(return_after_s - (time.monotonic() - t0), 0.001))
+                if self._active or self.rm.earliest_hold() is not None:
+                    self._cond.wait(timeout=timeout)
+                    continue
+                foreign = self.rm.running_jobs(exclude=self._records)
+                if foreign and time.monotonic() - t0 < timeout_s:
+                    self._cond.wait(timeout=timeout)
+                    continue
+                if return_after_s is not None:
+                    # nothing of ours runnable, but the caller polls with a
+                    # bound: it may be about to submit more work (a DAG
+                    # driver between legs), so this is not a stall yet
+                    self._cond.wait(timeout=timeout)
+                    continue
+                raise self._stall(targets, foreign)
+
+    def _wait_any_serial(
+        self, targets: Sequence[str], timeout_s: float, t0: float,
+        return_after_s: Optional[float],
+    ) -> list[str]:
+        while True:
+            with self._cond:
+                self._observe()
+                done = [
+                    n for n in targets
+                    if self._records[n].state in TERMINAL
+                    and n not in self._active
+                ]
+                if done:
+                    return done
+                if return_after_s is not None and \
+                        time.monotonic() - t0 >= return_after_s:
+                    return []
+            if self.step():
+                continue
+            with self._cond:
+                if self._tick_controllers():
+                    continue
+                self.elastic.maybe_step()
+                timeout = self._wait_timeout(None)
+                if return_after_s is not None:
+                    timeout = min(
+                        timeout,
+                        max(return_after_s - (time.monotonic() - t0), 0.001))
+                if self._active or self.rm.earliest_hold() is not None:
+                    self._cond.wait(timeout=timeout)
+                    continue
+                foreign = self.rm.running_jobs(exclude=self._records)
+                if foreign and time.monotonic() - t0 < timeout_s:
+                    self._cond.wait(timeout=timeout)
+                    continue
+                if return_after_s is not None:
+                    self._cond.wait(timeout=timeout)
+                    continue
+                raise self._stall(targets, foreign)
 
     def _stall(self, targets: Sequence[str], foreign: Sequence[str]) -> RuntimeError:
         stuck = [n for n in targets if self._records[n].state not in TERMINAL]

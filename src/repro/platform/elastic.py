@@ -24,13 +24,18 @@ Signals sampled (all read under the platform lock):
   queue depth), used to rank shrink victims (least busy first) and grow
   beneficiaries (most busy first).
 
-Policy (deterministic, one offer per control step so every decision is
-observable in the job's event log):
+Policy (deterministic; every decision lands in the job's event log):
 
-1. **Queue pressure -> shrink.**  While some pending job's ``min_devices``
-   exceeds the largest free run, offer the least-busy running elastic
-   tenant a shrink to ``max(size // 2, min_devices)``.  Its freed devices
-   go straight to the queue (``ResourceManager.resize`` reschedules).
+1. **Queue pressure -> shrink (batched).**  While some pending job's
+   ``min_devices`` exceeds the largest free run, offer running elastic
+   tenants — least busy first — a shrink to ``max(size // 2,
+   min_devices)``, *accumulating coordinated offers in one poll* until the
+   projected pool (free devices plus every offered victim's to-be-freed
+   block) seats the widest unmet job.  A single sufficient victim
+   degenerates to one offer; a wide job behind several small tenants gets
+   them all shrinking at once, and the batch decision is event-logged on
+   every victim.  Freed devices go straight to the queue
+   (``ResourceManager.resize`` reschedules).
 2. **Free pool -> grow.**  With no pressure, offer the busiest tenant
    running below its requested ``devices`` a grow to the largest
    contiguous size reachable (its own block plus adjacent free runs),
@@ -176,9 +181,10 @@ class ElasticController:
         return self.step()
 
     def step(self) -> list[ResizeOffer]:
-        """One control decision: shrink under queue pressure, else grow into
-        free space.  At most one offer per step (observability beats
-        convergence speed; the next poll continues the adjustment)."""
+        """One control decision: shrink under queue pressure (a coordinated
+        batch when one victim can't seat the widest unmet job), else grow
+        into free space (at most one grow per step; the next poll continues
+        the adjustment)."""
         p = self.platform
         issued: list[ResizeOffer] = []
         with p._cond, p.rm._lock:  # platform -> ResourceManager order
@@ -211,12 +217,24 @@ class ElasticController:
             if unmet:
                 if not self.shrink_enabled:
                     return issued
-                # shrink: least busy first, then largest container, then name
+                # batched shrink: walk victims least-busy-first (then largest
+                # container, then name) and keep offering until the
+                # *projected* pool — current free devices plus every offered
+                # victim's to-be-freed tail — can seat the widest unmet job.
+                # One victim sufficing degenerates to the old single-offer
+                # behavior; several shrinking in one poll is what seats a
+                # wide campaign leg parked behind a crowd of small tenants.
+                need = max(j.min_devices for j in unmet)
+                beneficiary = min(
+                    (j.name for j in unmet if j.min_devices == need))
+                hypo = set(rm.free)
                 for _, name in sorted(
                     candidates,
                     key=lambda bn: (bn[0], -rm.jobs[bn[1]].container.size,
                                     bn[1]),
                 ):
+                    if rm._max_run(hypo) >= need:
+                        break  # projection already fits: stop shrinking
                     job = rm.jobs[name]
                     target = max(job.min_devices, job.container.size // 2)
                     if target >= job.container.size:
@@ -224,7 +242,25 @@ class ElasticController:
                     off = self._offer_locked(name, target, "shrink-for-queue")
                     if off is not None:
                         issued.append(off)
-                        break
+                        # optimistic projection: on acceptance the victim
+                        # keeps a `target`-sized block and frees the rest
+                        hypo.update(list(job.container.device_ids)[target:])
+                if len(issued) > 1:
+                    # event-log the coordinated batch on every victim so the
+                    # decision is reconstructible from any one job's log
+                    for off in issued:
+                        vrec = p._records.get(off.job)
+                        if vrec is not None:
+                            vrec.log(
+                                f"batched shrink: {len(issued)} coordinated "
+                                f"offers to seat {beneficiary} "
+                                f"(needs {need} devices)", p._clock())
+                    p.obs.inc("resize_offer_batches")
+                    p.tracer.event(
+                        p._records[issued[0].job].root, "resize_offer_batch",
+                        offers=len(issued), beneficiary=beneficiary,
+                        need=need,
+                    )
                 return issued
             # grow: busiest first, then name, into the adjacent free space
             if not self.grow_enabled:

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
 import os
 import time
 from typing import Any, Optional, Sequence
@@ -153,11 +154,20 @@ class TrainDriver:
             t0 = time.perf_counter()
             tokens_done = 0
             step_i = start_step
+            # replay determinism: the synthetic stream restarts at batch 0
+            # every attempt, so a resumed run fast-forwards past the batches
+            # the checkpointed steps already consumed — batch k always pairs
+            # with step k and a faulted run's final params are bitwise-equal
+            # to an uninterrupted one's (the campaign artifact-version story)
+            skip = start_step
             last = {}
             try:
                 for nb in loader.batches(epochs=1_000_000):
                     if step_i >= cfg.steps:
                         break
+                    if skip > 0:
+                        skip -= 1
+                        continue
                     if token is not None:
                         # load signal for the elastic controller, then the
                         # cancellation point between steps; a preempt saves a
@@ -199,6 +209,14 @@ class TrainDriver:
                 f"[train] done at step {step_i}; "
                 f"speculative_fetches={loader.speculative_fetches}"
             )
+            # content fingerprint of the final parameters: the campaign
+            # layer versions checkpoint artifacts by it, and the chaos
+            # benchmark asserts faulted == fault-free through it
+            h = hashlib.sha256()
+            final = state["params"] if isinstance(state, dict) \
+                and "params" in state else state
+            for leaf in jax.tree_util.tree_leaves(jax.device_get(final)):
+                h.update(np.asarray(leaf).tobytes())
             return {
                 "steps": step_i,
                 "resumed_from_step": start_step,
@@ -206,6 +224,7 @@ class TrainDriver:
                 "accuracy": last.get("accuracy", float("nan")),
                 "tokens_per_s": tokens_done / max(dt, 1e-9),
                 "speculative_fetches": loader.speculative_fetches,
+                "params_digest": h.hexdigest(),
             }
 
 
@@ -966,4 +985,8 @@ class ServeDriver:
             "engine": "static",
             "tokens": toks,
             "tokens_per_s": toks / max(dt, 1e-9),
+            # raw generated token ids (seeded sampling => deterministic for
+            # fixed params); the campaign rollout artifact content-hashes
+            # this so fault-free and chaos legs can be compared bitwise
+            "_tokens": np.asarray(jax.device_get(out)),
         }

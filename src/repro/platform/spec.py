@@ -41,6 +41,10 @@ class JobSpec:
     # then SIGKILLed (see repro.platform.isolation)
     isolation: str = "thread"
     grace_s: float = 5.0  # enforcement grace window (process isolation)
+    # free-form labels stamped by orchestration layers (the campaign driver
+    # tags campaign/leg/shard here); opaque to the platform itself but
+    # surfaced on the job's root span so traces group by campaign
+    labels: dict = dataclasses.field(default_factory=dict)
 
     def validate(self) -> None:
         """Fail-fast checks beyond the dataclass types (run at submit)."""

@@ -10,6 +10,7 @@ verification before on-road testing".
 from __future__ import annotations
 
 import dataclasses
+import json
 
 import numpy as np
 
@@ -102,6 +103,45 @@ def aggregate(
         collision_rate=float(collided.mean()) if S else 0.0,
         families=families,
         ttc_bin_edges=ttc_bins,
+    )
+
+
+# ---------------------------------------------------------------------------
+# rollout <-> record round-trip (campaign artifact payloads)
+# ---------------------------------------------------------------------------
+
+
+def rollout_record(family_ids, family_names, rollout, *, steps: int) -> dict:
+    """Flatten a sweep's raw rollout outputs into a flat record the BinPipe
+    codec can encode (str/int/ndarray values only).  Deliberately carries
+    **no timing fields**, so the record's content hash — and therefore a
+    campaign artifact version built from it — is identical across runs that
+    differ only in wall clock (the bitwise chaos-equality story)."""
+    rec: dict = {
+        "family_ids": np.asarray(family_ids),
+        "family_names": json.dumps(list(family_names)),
+        "steps": int(steps),
+    }
+    for f in ("collided", "min_ttc", "min_dist", "violations"):
+        a = np.asarray(getattr(rollout, f))
+        # BinPipe round-trips raw dtypes; normalize only bool (flag) arrays
+        rec[f] = a.astype(np.uint8) if a.dtype == np.bool_ else a
+    return rec
+
+
+def report_from_record(rec: dict, *, wall_time_s: float = 1.0) -> ScenarioReport:
+    """Rebuild a :class:`ScenarioReport` from a :func:`rollout_record`.
+    ``wall_time_s`` defaults to a fixed 1.0 so the derived throughput fields
+    are deterministic — the record intentionally has no timing of its own."""
+    return aggregate(
+        np.asarray(rec["family_ids"]),
+        list(json.loads(rec["family_names"])),
+        np.asarray(rec["collided"]).astype(bool),
+        np.asarray(rec["min_ttc"]),
+        np.asarray(rec["min_dist"]),
+        np.asarray(rec["violations"]),
+        steps=int(rec["steps"]),
+        wall_time_s=wall_time_s,
     )
 
 

@@ -1,0 +1,426 @@
+"""Campaign DAG subsystem: graph validation + cycle detection, topological
+readiness, artifact content addressing, gate semantics, campaign-level
+backfills, cascade cancellation, memoized leg reuse, and exactly-once
+artifact production under injected chaos.
+
+Fast tier: every leg here is a stub/sleeper compute — the real five-service
+qualification campaign runs in ``repro.launch.campaign`` and the
+``hetero_campaign`` benchmark."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+import pytest
+
+import chaos_driver_fixture  # noqa: F401 — registers the sleeper kind
+from repro.campaign import (
+    LEG_CANCELLED,
+    LEG_DONE,
+    LEG_FAILED,
+    LEG_SKIPPED_CACHED,
+    LEG_SKIPPED_GATE,
+    ArtifactStore,
+    CampaignCycleError,
+    CampaignDriver,
+    CampaignError,
+    CampaignSpec,
+    LegSpec,
+    render_report,
+)
+from repro.platform import (
+    DONE,
+    ExecutorHooks,
+    FAILED,
+    FaultPlan,
+    JobSpec,
+    Platform,
+    register_driver,
+    unregister_driver,
+)
+from repro.platform.chaos import FAIL_DEVICE, KILL_WORKER
+
+pytestmark = pytest.mark.concurrency
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _compute_leg(name, produces_name, value=1, consumes=(), trail=None,
+                 gate=None):
+    """A compute leg producing one blob; optionally records its execution
+    order into ``trail``."""
+
+    def compute(inputs):
+        if trail is not None:
+            trail.append(name)
+        total = value + sum(
+            int(a.payload.get("value", 0)) for a in inputs.values())
+        return {produces_name: {"value": total}}
+
+    compute.__qualname__ = f"compute_{name}_{value}"
+    return LegSpec(name=name, compute=compute, consumes=tuple(consumes),
+                   produces={produces_name: "blob"}, gate=gate)
+
+
+@pytest.fixture
+def store(tmp_path):
+    s = ArtifactStore(str(tmp_path / "artifacts"))
+    yield s
+    s.close()
+
+
+@pytest.fixture
+def fragile():
+    """Driver kind failing the first ``fail_first`` *submissions* per key —
+    a permanent (non-retryable) job failure, so recovery must come from the
+    campaign driver's backfill, not the platform's container retries."""
+    calls: dict[str, int] = {}
+
+    class Fragile:
+        kind = "fragile"
+
+        def prepare(self, spec):
+            return dict(spec.config or {})
+
+        def run(self, container, cfg, token=None):
+            key = cfg.get("key", "k")
+            n = calls[key] = calls.get(key, 0) + 1
+            if n <= int(cfg.get("fail_first", 0)):
+                raise RuntimeError(f"fragile {key} submission {n} died")
+            return {"submissions": n, "units": int(cfg.get("units", 1))}
+
+    register_driver(Fragile)
+    yield calls
+    unregister_driver("fragile")
+
+
+# ---------------------------------------------------------------------------
+# graph validation + cycle detection
+# ---------------------------------------------------------------------------
+
+
+def test_cycle_detection_names_the_cycle():
+    spec = CampaignSpec("cyclic", legs=(
+        _compute_leg("a", "out_a", consumes=("out_c",)),
+        _compute_leg("b", "out_b", consumes=("out_a",)),
+        _compute_leg("c", "out_c", consumes=("out_b",)),
+    ))
+    with pytest.raises(CampaignCycleError) as ei:
+        spec.validate()
+    assert set(ei.value.cycle) == {"a", "b", "c"}
+    assert "->" in str(ei.value)
+
+
+def test_graph_validation_rejects_bad_shapes():
+    with pytest.raises(CampaignError, match="exactly one"):
+        CampaignSpec("x", legs=(LegSpec(name="l"),)).validate()
+    with pytest.raises(CampaignError, match="no leg\n?.*produces|which no leg"):
+        CampaignSpec("x", legs=(
+            _compute_leg("a", "out_a", consumes=("missing",)),
+        )).validate()
+    with pytest.raises(CampaignError, match="own output"):
+        CampaignSpec("x", legs=(
+            _compute_leg("a", "out_a", consumes=("out_a",)),
+        )).validate()
+    with pytest.raises(CampaignError, match="produced by both"):
+        CampaignSpec("x", legs=(
+            _compute_leg("a", "dup"), _compute_leg("b", "dup"),
+        )).validate()
+    with pytest.raises(CampaignError, match="harvest"):
+        CampaignSpec("x", legs=(LegSpec(
+            name="j", job=JobSpec(kind="sleeper"), produces={"o": "blob"},
+        ),)).validate()
+
+
+def test_topo_order_is_deterministic_and_respects_dependencies():
+    spec = CampaignSpec("diamond", legs=(
+        _compute_leg("d", "out_d", consumes=("out_b", "out_c")),
+        _compute_leg("c", "out_c", consumes=("out_a",)),
+        _compute_leg("b", "out_b", consumes=("out_a",)),
+        _compute_leg("a", "out_a"),
+    ))
+    spec.validate()
+    order = spec.topo_order()
+    assert order == ["a", "b", "c", "d"]  # lexicographic among ready legs
+    assert spec.dependents_of("a") == ["b", "c", "d"]
+    assert spec.dependents_of("b") == ["d"]
+
+
+# ---------------------------------------------------------------------------
+# artifact store: content addressing + memoization
+# ---------------------------------------------------------------------------
+
+
+def test_artifact_store_content_addressed_and_idempotent(store):
+    a1 = store.put("x", "blob", {"v": 1, "arr": np.arange(4)})
+    a2 = store.put("x", "blob", {"arr": np.arange(4), "v": 1})  # key order
+    assert a1.ref.version == a2.ref.version  # canonical encoding
+    assert store.created == [f"x@{a1.ref.version}"]  # written exactly once
+    a3 = store.put("x", "blob", {"v": 2, "arr": np.arange(4)})
+    assert a3.ref.version != a1.ref.version
+    assert store.versions("x") == sorted([a1.ref.version, a3.ref.version])
+    got = store.get("x")  # latest pointer
+    assert got.ref.version == a3.ref.version and got.payload["v"] == 2
+    got = store.get("x", a1.ref.version)
+    np.testing.assert_array_equal(got.payload["arr"], np.arange(4))
+    store.memo_put("leg", "fp", {"x": a1.ref})
+    refs = store.memo_get("leg", "fp")
+    assert refs == {"x": a1.ref}
+    assert store.memo_get("leg", "other-fp") is None
+
+
+# ---------------------------------------------------------------------------
+# the driver: readiness, gates, reuse, failure handling
+# ---------------------------------------------------------------------------
+
+
+def test_compute_dag_runs_in_dependency_order(store):
+    trail: list[str] = []
+    spec = CampaignSpec("diamond", legs=(
+        _compute_leg("d", "out_d", consumes=("out_b", "out_c"), trail=trail),
+        _compute_leg("b", "out_b", consumes=("out_a",), trail=trail),
+        _compute_leg("c", "out_c", consumes=("out_a",), trail=trail),
+        _compute_leg("a", "out_a", trail=trail),
+    ))
+    p = Platform(total_devices=2)
+    report = CampaignDriver(p, spec, store).run()
+    assert report.state == DONE
+    assert trail == ["a", "b", "c", "d"]
+    # values flow along the edges: d = 1 + (b = 1 + 1) + (c = 1 + 1)
+    assert store.get("out_d").payload["value"] == 5
+    assert report.critical_path[-1] == "d"
+    assert "DONE" in render_report(report)
+
+
+def test_fan_out_leg_harvests_in_shard_order(store):
+    def harvest(reports, inputs):
+        assert all(r.state == DONE for r in reports)
+        return {"naps": {"per_shard": np.asarray(
+            [r.metrics["naps"] for r in reports]), "shards": len(reports)}}
+
+    spec = CampaignSpec("fan", legs=(LegSpec(
+        name="sleep",
+        job=JobSpec(kind="sleeper", name="nap",
+                    config={"naps": 2, "nap_s": 0.001}),
+        produces={"naps": "blob"}, harvest=harvest,
+        fan_out=3, devices_per_shard=2,
+    ),))
+    p = Platform(total_devices=8)
+    report = CampaignDriver(p, spec, store).run()
+    assert report.state == DONE
+    leg = report.legs["sleep"]
+    assert len(leg.shards) == 3
+    # shards were labeled for the trace and uniquified by the platform
+    assert p._records[leg.shards[0]].spec.labels["leg"] == "sleep"
+    assert store.get("naps").payload["shards"] == 3
+
+
+def test_gate_false_skips_leg_and_cascades(store):
+    def verdict_no(inputs):
+        return {"verdict": {"passed": 0, "reason_count": 1}}
+
+    spec = CampaignSpec("gated", legs=(
+        _compute_leg("a", "out_a"),
+        LegSpec(name="judge", compute=verdict_no,
+                produces={"verdict": "verdict"}),
+        _compute_leg("deploy", "out_deploy", consumes=("out_a",),
+                     gate="verdict"),
+        _compute_leg("announce", "out_announce", consumes=("out_deploy",)),
+    ))
+    p = Platform(total_devices=2)
+    report = CampaignDriver(p, spec, store).run()
+    assert report.state == DONE  # a skipped gate is success, not failure
+    assert report.legs["deploy"].state == LEG_SKIPPED_GATE
+    assert report.legs["announce"].state == LEG_SKIPPED_GATE  # cascades
+    assert report.legs["a"].state == LEG_DONE
+    assert store.get("out_deploy") is None  # gated leg produced nothing
+
+
+def test_gate_true_runs_the_leg(store):
+    spec = CampaignSpec("gated", legs=(
+        LegSpec(name="judge", compute=lambda i: {"verdict": {"passed": 1}},
+                produces={"verdict": "verdict"}),
+        _compute_leg("deploy", "out_deploy", gate="verdict"),
+    ))
+    report = CampaignDriver(Platform(total_devices=2), spec, store).run()
+    assert report.state == DONE
+    assert report.legs["deploy"].state == LEG_DONE
+    assert store.get("out_deploy").payload["value"] == 1
+
+
+def test_backfill_resubmits_failed_shard(store, fragile):
+    def harvest(reports, inputs):
+        return {"out": {"units": int(reports[0].metrics["units"])}}
+
+    spec = CampaignSpec("flaky", legs=(LegSpec(
+        name="work",
+        job=JobSpec(kind="fragile", name="frail",
+                    config={"key": "w", "fail_first": 1}),
+        produces={"out": "blob"}, harvest=harvest, max_retries=2,
+    ),))
+    p = Platform(total_devices=2)
+    driver = CampaignDriver(p, spec, store, backoff_s=0.01)
+    report = driver.run()
+    assert report.state == DONE
+    leg = report.legs["work"]
+    assert leg.state == LEG_DONE
+    assert leg.retries == 1  # one campaign-level backfill
+    assert fragile["w"] == 2  # first submission died, second landed
+    assert store.created == [f"out@{store.get('out').ref.version}"]
+
+
+def test_permanent_failure_cascades_but_spares_independent_legs(store, fragile):
+    spec = CampaignSpec("doomed", legs=(
+        LegSpec(name="bad",
+                job=JobSpec(kind="fragile", name="doom",
+                            config={"key": "d", "fail_first": 99}),
+                produces={"out_bad": "blob"},
+                harvest=lambda r, i: {"out_bad": {"v": 1}},
+                max_retries=1),
+        _compute_leg("down", "out_down", consumes=("out_bad",)),
+        _compute_leg("free", "out_free"),
+    ))
+    p = Platform(total_devices=2)
+    report = CampaignDriver(p, spec, store, backoff_s=0.01).run()
+    assert report.state == FAILED
+    assert report.legs["bad"].state == LEG_FAILED
+    assert "retries exhausted" in report.legs["bad"].error
+    assert report.legs["bad"].retries == 1
+    assert report.legs["down"].state == LEG_CANCELLED  # cascade-cancelled
+    assert "upstream" in report.legs["down"].error
+    assert report.legs["free"].state == LEG_DONE  # independent branch lives
+    assert store.get("out_free") is not None
+    assert store.get("out_bad") is None
+
+
+def test_artifact_reuse_skips_unchanged_legs(store):
+    spec = CampaignSpec("memo", legs=(
+        _compute_leg("a", "out_a", value=3),
+        _compute_leg("b", "out_b", consumes=("out_a",)),
+    ))
+    p = Platform(total_devices=2)
+    first = CampaignDriver(p, spec, store).run()
+    assert first.state == DONE
+    created = list(store.created)
+
+    rerun = CampaignDriver(p, spec, store).run()
+    assert rerun.state == DONE
+    assert all(l.state == LEG_SKIPPED_CACHED for l in rerun.legs.values())
+    assert all(l.reused for l in rerun.legs.values())
+    assert store.created == created  # nothing rewritten
+    assert rerun.artifacts == first.artifacts
+
+    # a changed input invalidates downstream legs but not unrelated ones
+    changed = CampaignSpec("memo", legs=(
+        _compute_leg("a", "out_a", value=4),  # new compute fingerprint
+        _compute_leg("b", "out_b", consumes=("out_a",)),
+    ))
+    third = CampaignDriver(p, changed, store).run()
+    assert third.state == DONE
+    assert third.legs["a"].state == LEG_DONE
+    assert third.legs["b"].state == LEG_DONE  # out_a's version changed
+    assert store.get("out_b").payload["value"] == 5
+
+
+def test_reuse_disabled_runs_everything(store):
+    spec = CampaignSpec("memo", legs=(_compute_leg("a", "out_a"),))
+    p = Platform(total_devices=2)
+    assert CampaignDriver(p, spec, store).run().state == DONE
+    rerun = CampaignDriver(p, spec, store, reuse=False).run()
+    assert rerun.legs["a"].state == LEG_DONE  # recomputed, not cached
+
+
+# ---------------------------------------------------------------------------
+# exactly-once artifacts under chaos
+# ---------------------------------------------------------------------------
+
+
+def _chaos_campaign():
+    def harvest(reports, inputs):
+        return {"naps": {
+            "per_shard": np.asarray([r.metrics["naps"] for r in reports]),
+        }}
+
+    return CampaignSpec("chaotic", legs=(
+        LegSpec(
+            name="sleep",
+            job=JobSpec(kind="sleeper", name="nap",
+                        config={"naps": 4, "nap_s": 0.01}, max_retries=4),
+            produces={"naps": "blob"}, harvest=harvest,
+            fan_out=2, devices_per_shard=2, max_retries=2,
+        ),
+        _compute_leg("fold", "folded", consumes=("naps",)),
+    ))
+
+
+@pytest.mark.chaos
+def test_exactly_once_artifacts_under_chaos(tmp_path):
+    """A seeded kill_worker/fail_device plan injected mid-campaign: every
+    leg still converges, every artifact is produced exactly once, and the
+    artifact versions are identical to a fault-free run's."""
+    ff_store = ArtifactStore(str(tmp_path / "ff"))
+    ff = CampaignDriver(
+        Platform(total_devices=8), _chaos_campaign(), ff_store).run()
+    assert ff.state == DONE
+
+    plan = FaultPlan(seed=3, faults=2, kinds=(KILL_WORKER, FAIL_DEVICE),
+                     max_step_gap=2)
+    holder = {}
+    hook = {"armed": True}
+
+    def park(name, token):
+        # park each worker at its first checkpoint until the plan has fully
+        # fired, so injection can't lose the race to a fast job
+        if token.checkpoints != 1 or not hook["armed"]:
+            return
+        t0 = time.monotonic()
+        while (len(holder["p"].chaos.injected) < plan.faults
+               and time.monotonic() - t0 < 30.0):
+            time.sleep(0.005)
+        hook["armed"] = False
+
+    p = Platform(total_devices=8, chaos_plan=plan, retry_backoff_s=0.01,
+                 hooks=ExecutorHooks(checkpoint=park))
+    holder["p"] = p
+    store = ArtifactStore(str(tmp_path / "chaos"))
+    report = CampaignDriver(p, _chaos_campaign(), store,
+                            backoff_s=0.01).run()
+    assert report.state == DONE
+    assert len(p.chaos.injected) == plan.faults
+    # exactly-once: each artifact blob written a single time, despite the
+    # faulted shards re-running
+    assert sorted(store.created) == sorted(set(store.created))
+    assert {c.split("@")[0] for c in store.created} == {"naps", "folded"}
+    # bitwise equality with the fault-free campaign, via content versions
+    assert report.artifacts == ff.artifacts
+    ff_store.close()
+    store.close()
+
+
+# ---------------------------------------------------------------------------
+# report rendering
+# ---------------------------------------------------------------------------
+
+
+def test_report_renders_states_retries_and_critical_path(store, fragile):
+    spec = CampaignSpec("mixed", legs=(
+        LegSpec(name="work",
+                job=JobSpec(kind="fragile", name="w",
+                            config={"key": "r", "fail_first": 1}),
+                produces={"out": "blob"},
+                harvest=lambda r, i: {"out": {"v": 1}}, max_retries=2),
+        _compute_leg("after", "out_after", consumes=("out",)),
+    ))
+    p = Platform(total_devices=2)
+    report = CampaignDriver(p, spec, store, backoff_s=0.01).run()
+    text = render_report(report)
+    assert "campaign mixed: DONE" in text
+    assert "critical path: work -> after" in text
+    assert "1+0" in text  # campaign retries + platform retries column
+    v = report.legs["work"].artifacts["out"]
+    assert v.startswith("blob@") and v.split("@")[1] in text

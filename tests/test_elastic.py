@@ -401,3 +401,69 @@ def test_serve_cell_plan_derives_cells_from_pool():
     assert serve_cell_plan(rm, devices_per_cell=2) == [2]
     with pytest.raises(ValueError):
         serve_cell_plan(rm, devices_per_cell=0)
+
+
+# ---------------------------------------------------------------------------
+# batched shrink offers (coordinated multi-victim decisions)
+# ---------------------------------------------------------------------------
+
+
+def test_batched_shrink_offers_coordinate_to_seat_wide_job(stub):
+    """Two elastic tenants split the pool 4+4; a rigid 3-device job queues.
+    No single shrink frees 3 devices, so one controller step issues a
+    coordinated 2-offer batch (event-logged on both victims); once both
+    victims accept, their re-granted containers compact and the wide job
+    seats on the merged free run."""
+    at = {n: {i: Gate(f"{n}@{i}") for i in range(1, 12)} for n in ("a", "b")}
+    go = {n: {i: Gate(f"{n}-go{i}") for i in range(1, 12)} for n in ("a", "b")}
+    counts = {"a": 0, "b": 0}
+
+    def pace(name, token):
+        if name not in counts:
+            return
+        counts[name] += 1
+        i = counts[name]
+        if i in at[name]:
+            at[name][i].open()
+            go[name][i].wait()
+
+    stub("unit", run_fn=_sized_unit_driver(units=6))
+    stub("quick")
+    p = Platform(total_devices=8, hooks=ExecutorHooks(checkpoint=pace))
+    a = p.submit(JobSpec(kind="unit", name="a", devices=4, min_devices=1))
+    b = p.submit(JobSpec(kind="unit", name="b", devices=4, min_devices=1))
+    waiter = threading.Thread(
+        target=lambda: p.wait([a, b], timeout_s=60.0), daemon=True)
+    waiter.start()
+    at["a"][1].wait()
+    at["b"][1].wait()  # both tenants mid-run, pool fully held
+
+    assert p.elastic.step() == []  # no pressure, no offers
+
+    wide = p.submit(JobSpec(kind="quick", name="wide", devices=3,
+                            elastic=False))
+    offers = p.elastic.step()
+    # one coordinated batch: neither tenant alone frees a 3-run
+    assert [(o.job, o.target_devices) for o in offers] == [(a, 2), (b, 2)]
+    assert all(o.reason == "shrink-for-queue" for o in offers)
+    assert p.elastic.step() == []  # offers pending: no double-issue
+    assert p.obs.snapshot()["counters"]["resize_offer_batches"] == 1.0
+    for name in (a, b):
+        evs = " ".join(p.results(name).events)
+        assert "batched shrink: 2 coordinated offers to seat wide " \
+            "(needs 3 devices)" in evs
+
+    go["a"][1].open()
+    go["b"][1].open()  # both accept: 2+2 freed, re-grants compact the pool
+    assert p.wait(wide, timeout_s=30.0).state == DONE  # seats on the batch
+
+    for n in ("a", "b"):  # let the remaining checkpoints sail through
+        for i in range(2, 12):
+            go[n][i].open()
+    waiter.join(60.0)
+    assert not waiter.is_alive()
+    ra, rb = p.results(a), p.results(b)
+    assert ra.state == DONE and rb.state == DONE
+    assert ra.metrics["sizes"][:2] == [4, 2] and rb.metrics["sizes"] == [4, 2]
+    assert ra.metrics["units"] == list(range(6))
+    assert rb.metrics["units"] == list(range(6))

@@ -271,6 +271,34 @@ def test_scenario_shards_aggregate_to_full_sweep():
     }
 
 
+def test_sweep_merge_survives_shard_name_collisions():
+    """A sweep whose request-side shard names are already taken must merge
+    by the *returned* uniquified names — keying the aggregation by request
+    names would pull the stranger job's metrics into the report."""
+    import argparse
+
+    from repro.launch.scenario_job import _sweep
+    from repro.platform import ScenarioJobConfig
+
+    p = Platform(total_devices=4)
+    # a stranger job squats on the name the sweep's shard 0 will request
+    decoy = p.submit(JobSpec(
+        kind="scenario", name="sweep-0",
+        config=ScenarioJobConfig(per_family=1, steps=5),
+        devices=2,
+    ))
+    assert decoy == "sweep-0"
+    args = argparse.Namespace(
+        families=None, per_family=4, steps=10, dt=0.1, seed=0,
+        shards="2", devices_per_shard=2, pallas_collision=False,
+        isolation="thread",
+    )
+    rep = _sweep(p, args, "baseline", "sweep")
+    # complete, non-overlapping 2-shard sweep — not cross-merged with decoy
+    assert rep.scenarios == 4 * 5
+    assert p.wait(decoy).state == DONE
+
+
 def test_heterogeneous_batch_shares_one_pool():
     rm = ResourceManager(4)
     p = Platform(rm=rm)
