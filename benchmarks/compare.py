@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import re
 import sys
 
 
@@ -33,6 +34,20 @@ def load_rows(path: str) -> dict[str, float]:
     with open(path) as f:
         data = json.load(f)
     return {r["name"]: float(r["us_per_call"]) for r in data.get("results", [])}
+
+
+def load_miss_rates(path: str) -> dict[str, float]:
+    """The deadline-miss column: rows whose ``derived`` string carries a
+    ``miss_rate=<frac>`` figure (the deadline-aware serving legs).  Missing
+    on most rows — only rows present in *both* snapshots are diffed."""
+    out: dict[str, float] = {}
+    with open(path) as f:
+        data = json.load(f)
+    for r in data.get("results", []):
+        m = re.search(r"(?:^|;)miss_rate=([0-9.]+)", r.get("derived", "") or "")
+        if m:
+            out[r["name"]] = float(m.group(1))
+    return out
 
 
 def load_meta(path: str) -> dict:
@@ -58,8 +73,13 @@ def compare(
     prefix: str,
     threshold: float,
     fail_on_vanished: bool = False,
+    old_miss: dict[str, float] | None = None,
+    new_miss: dict[str, float] | None = None,
+    miss_threshold: float = 0.05,
 ) -> tuple[list[str], list[str], list[str]]:
     """Returns (report lines, gate-able warnings, informational notices)."""
+    old_miss = old_miss or {}
+    new_miss = new_miss or {}
     lines, warnings, notices = [], [], []
     shared = sorted(n for n in new if n.startswith(prefix) and n in old)
     for name in shared:
@@ -74,9 +94,20 @@ def compare(
             )
         elif ratio < 1.0 - threshold:
             verdict = "improved"
+        miss_col = ""
+        if name in old_miss and name in new_miss:
+            om, nm = old_miss[name], new_miss[name]
+            miss_col = f" miss_rate {om:.3f} -> {nm:.3f}"
+            if nm > om + miss_threshold:
+                verdict = "REGRESSION"
+                warnings.append(
+                    f"::warning title=deadline-miss regression::{name} "
+                    f"miss rate {om:.3f} -> {nm:.3f} "
+                    f"(threshold +{miss_threshold:.3f} absolute)"
+                )
         lines.append(
             f"{name}: {old[name] / 1e6:.2f}s -> {new[name] / 1e6:.2f}s "
-            f"({ratio:.2f}x) {verdict}"
+            f"({ratio:.2f}x){miss_col} {verdict}"
         )
     added = sorted(n for n in new if n.startswith(prefix) and n not in old)
     for name in added:
@@ -112,11 +143,18 @@ def main(argv=None) -> int:
                     help="treat rows present in the previous snapshot but "
                          "missing from the new run as gate-able warnings "
                          "(default: informational notice)")
+    ap.add_argument("--miss-threshold", type=float, default=0.05,
+                    help="absolute deadline-miss-rate increase that counts "
+                         "as a regression on rows carrying a miss_rate= "
+                         "column (default: 0.05)")
     args = ap.parse_args(argv)
 
     lines, warnings, notices = compare(
         load_rows(args.old), load_rows(args.new), args.prefix, args.threshold,
         fail_on_vanished=args.fail_on_vanished,
+        old_miss=load_miss_rates(args.old),
+        new_miss=load_miss_rates(args.new),
+        miss_threshold=args.miss_threshold,
     )
     print(f"# perf trajectory: {args.old} -> {args.new}")
     print(f"#   old: {describe_meta(load_meta(args.old))}")

@@ -7,8 +7,13 @@
 paged-KV continuous-batching engine (transformer families only) and reports
 per-token latency percentiles next to throughput.  ``--replicas N`` fans the
 tenant out over N engine replicas behind the join-shortest-queue router
-(``repro.serving.router``).  ``--ckpt-dir`` serves the params of a previous
-``launch.train`` run instead of random init.  The engines live in
+(``repro.serving.router``).  ``--deadline-s`` attaches a per-request
+latency budget (deadline-aware shed/degrade admission; with
+``--hedge-threshold`` and ``--cells >= 2``, p99-at-risk requests are
+hedged to a second cell, first win cancels the loser), and
+``--predictive-autoscale`` scales replicas on the forecast arrival rate.
+``--ckpt-dir`` serves the params of a previous ``launch.train`` run
+instead of random init.  The engines live in
 :class:`repro.platform.services.ServeDriver`.
 """
 
@@ -41,6 +46,21 @@ def main(argv=None):
     ap.add_argument("--max-replicas", type=int, default=0,
                     help="per-cell autoscale ceiling on sustained queue "
                          "depth (0 disables)")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="per-request latency budget in seconds; requests "
+                         "projected past it are degraded or shed "
+                         "(0 disables)")
+    ap.add_argument("--deadline-min-tokens", type=int, default=1,
+                    help="degrade floor: shed rather than truncate below "
+                         "this many generated tokens")
+    ap.add_argument("--hedge-threshold", type=float, default=0.0,
+                    help="hedge admitted requests projected past this "
+                         "fraction of their budget to a second cell "
+                         "(0 disables; needs --cells >= 2)")
+    ap.add_argument("--predictive-autoscale", action="store_true",
+                    help="scale replicas on the forecast arrival rate "
+                         "instead of queue-depth hysteresis "
+                         "(needs --max-replicas > --replicas)")
     ap.add_argument("--vocab", type=int, default=512, help="smoke-scale vocab")
     ap.add_argument("--seq", type=int, default=512,
                     help="smoke-scale max_seq_len (match the train job's "
@@ -60,6 +80,10 @@ def main(argv=None):
             temperature=args.temperature, seed=args.seed, engine=args.engine,
             page_size=args.page_size, slots=args.slots, replicas=args.replicas,
             cells=args.cells, max_replicas=args.max_replicas,
+            deadline_s=args.deadline_s,
+            deadline_min_tokens=args.deadline_min_tokens,
+            hedge_threshold=args.hedge_threshold,
+            predictive_autoscale=args.predictive_autoscale,
             vocab=args.vocab, seq=args.seq, ckpt_dir=args.ckpt_dir,
         ),
         devices=args.job_devices,

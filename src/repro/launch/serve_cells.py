@@ -77,6 +77,12 @@ def _cell_spec(args, ci: int, devices: int, batch: int, suffix: str = "") -> Job
             prompt_len=args.prompt_len, gen=args.gen, seed=args.seed + ci,
             engine="continuous", page_size=args.page_size, slots=args.slots,
             replicas=args.replicas, max_replicas=args.max_replicas,
+            deadline_s=args.deadline_s,
+            # predictive scaling only makes sense with autoscale headroom
+            predictive_autoscale=(
+                args.predictive_autoscale
+                and args.max_replicas > args.replicas
+            ),
         ),
         devices=devices,
         priority=args.priority,
@@ -98,6 +104,12 @@ def main(argv=None):
                     help="engine replicas each cell starts with")
     ap.add_argument("--max-replicas", type=int, default=0,
                     help="autoscale ceiling per cell (0 disables)")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="per-request latency budget each cell job's "
+                         "deadline admission enforces (0 disables)")
+    ap.add_argument("--predictive-autoscale", action="store_true",
+                    help="cells scale replicas on forecast arrival rate "
+                         "(needs --max-replicas above --replicas)")
     ap.add_argument("--cells", default="auto",
                     help="cell count, or 'auto' to derive from free runs")
     ap.add_argument("--devices-per-cell", type=int, default=2)

@@ -20,6 +20,8 @@ serve_prefill_s         histogram  per-request prefill compute
 serve_decode_step_s     histogram  one engine decode step
 serve_ttft_s            histogram  arrival -> first token
 serve_tokens_per_s      histogram  per-attempt decode throughput
+deadline_miss           counter    outputs delivered past their budget
+deadline_shed           counter    requests shed at deadline admission
 preempts / resumes      counter    scheduler preemption round-trips
 resize_offers           counter    elastic offers posted
 resizes_committed       counter    offers accepted + re-granted

@@ -48,7 +48,6 @@ driven.
 
 from __future__ import annotations
 
-import time
 from typing import TYPE_CHECKING, Optional
 
 from repro.core.scheduler import JOB_PENDING, JOB_PREEMPTED, JOB_RUNNING
@@ -72,7 +71,8 @@ class ElasticController:
         self.shrink_enabled = True
         self.grow_enabled = True
         self.offered: list[ResizeOffer] = []  # full offer history
-        self._last_step: Optional[float] = None
+        self._next_due: Optional[float] = None
+        self.steps_taken = 0  # rate-limited steps actually run
 
     # -- signals --------------------------------------------------------
     def sample(self) -> dict:
@@ -115,12 +115,23 @@ class ElasticController:
 
     @staticmethod
     def _busy(rec) -> float:
-        """Normalized 0..1 load published by the driver (0.5 when silent)."""
+        """Normalized 0..1 load published by the driver (0.5 when silent).
+
+        A deadline-serving tenant also publishes ``slo_pressure`` (its
+        miss+shed fraction); the controller takes the max, so a tenant
+        bleeding its latency budget ranks as busy — protected from shrink
+        victims, first in line for grows — even while its queue is short
+        (the misses already shed the queue)."""
         load = rec.driver_state.get("load") or {}
         try:
-            return max(0.0, min(1.0, float(load.get("busy", 0.5))))
+            busy = max(0.0, min(1.0, float(load.get("busy", 0.5))))
         except (TypeError, ValueError):
-            return 0.5
+            busy = 0.5
+        try:
+            slo = max(0.0, min(1.0, float(load.get("slo_pressure", 0.0))))
+        except (TypeError, ValueError):
+            slo = 0.0
+        return max(busy, slo)
 
     # -- offers ---------------------------------------------------------
     def offer(
@@ -171,13 +182,24 @@ class ElasticController:
     # -- control loop ---------------------------------------------------
     def maybe_step(self) -> list[ResizeOffer]:
         """Rate-limited :meth:`step`, driven from the executor's wait loop
-        when the platform was built with ``elastic_poll_s``."""
+        when the platform was built with ``elastic_poll_s``.
+
+        The cadence runs on the *platform clock* against an absolute
+        next-due schedule, not on wall time between calls: the wait loop
+        wakes at ``min(elastic_poll_s, chaos_poll_s)`` whenever a chaos
+        plan is armed, and the old wall-clock guard made the number of
+        controller steps per unit of platform time depend on which poll
+        happened to be shorter (and nondeterministic under an injected
+        virtual clock).  Now the controller steps once per elapsed
+        ``poll_s`` of platform time no matter how often the loop spins —
+        ``steps_taken`` is pinnable by the regression tier."""
         if self.poll_s is None:
             return []
-        now = time.monotonic()
-        if self._last_step is not None and now - self._last_step < self.poll_s:
+        now = self.platform._clock()
+        if self._next_due is not None and now < self._next_due:
             return []
-        self._last_step = now
+        self._next_due = now + self.poll_s
+        self.steps_taken += 1
         return self.step()
 
     def step(self) -> list[ResizeOffer]:

@@ -604,6 +604,21 @@ class ServeJobConfig:
     # this many fresh cells per attempt before giving up (0 = fail as soon
     # as the last cell dies, the pre-chaos behavior)
     cell_rebuild_retries: int = 1
+    # deadline-aware serving (continuous only): per-request latency budget
+    # in seconds (0 disables).  Requests whose projected completion — from
+    # the live queue-wait/prefill/decode estimator (serving.deadline) —
+    # cannot make the budget are degraded (generation truncated to what
+    # fits, >= deadline_min_tokens) or shed before touching an engine
+    deadline_s: float = 0.0
+    deadline_min_tokens: int = 1
+    # hedged dispatch (cell tier): admitted requests projected past this
+    # fraction of their budget are duplicated to a second cell; first win
+    # delivers, the loser is cancelled.  0 disables; sensible: 0.7-0.9
+    hedge_threshold: float = 0.0
+    # SLO-driven predictive autoscaling: replica scaling follows the
+    # forecast arrival rate (windowed rate + slope, Little's-law sizing)
+    # instead of queue-depth hysteresis (requires max_replicas > replicas)
+    predictive_autoscale: bool = False
     vocab: int = 512  # smoke-scale vocab (must match a ckpt's train job)
     seq: int = 512  # smoke-scale max_seq_len (match the train job's --seq
     #                 when restoring from ckpt_dir; params depend on it)
@@ -645,6 +660,30 @@ class ServeDriver:
         if cfg.max_replicas and cfg.max_replicas < cfg.replicas:
             raise ValueError(
                 f"max_replicas {cfg.max_replicas} below replicas {cfg.replicas}"
+            )
+        if cfg.deadline_s < 0:
+            raise ValueError(f"deadline_s must be >= 0, got {cfg.deadline_s}")
+        if not 0.0 <= cfg.hedge_threshold <= 1.0:
+            raise ValueError(
+                f"hedge_threshold must be in [0, 1], got {cfg.hedge_threshold}"
+            )
+        if cfg.deadline_min_tokens < 1:
+            raise ValueError(
+                f"deadline_min_tokens must be >= 1, got {cfg.deadline_min_tokens}"
+            )
+        if (cfg.deadline_s or cfg.hedge_threshold or cfg.predictive_autoscale) \
+                and cfg.engine != "continuous":
+            raise ValueError(
+                "deadline/hedging/predictive autoscaling require "
+                "engine='continuous'"
+            )
+        if cfg.hedge_threshold and cfg.cells < 2:
+            raise ValueError("hedge_threshold requires cells >= 2")
+        if cfg.predictive_autoscale and not (
+            cfg.max_replicas and cfg.max_replicas > cfg.replicas
+        ):
+            raise ValueError(
+                "predictive_autoscale requires max_replicas > replicas"
             )
         return cfg
 
@@ -715,6 +754,12 @@ class ServeDriver:
                 NoCellsAlive,
             )
             from repro.serving.continuous import ContinuousBatchingEngine
+            from repro.serving.deadline import (
+                ArrivalForecaster,
+                CompletionEstimator,
+                DeadlineAdmission,
+                count_misses,
+            )
             from repro.serving.router import ServeRouter
             from repro.serving.scheduler import Request, token_latencies
 
@@ -729,6 +774,24 @@ class ServeDriver:
             tspan = getattr(token, "span", None) if token is not None else None
             obs = getattr(token, "obs", None) if token is not None else None
 
+            # deadline-aware serving: the completion estimator feeds on the
+            # same stage events the obs histograms record, warm-started
+            # from any prior attempt's serve_* series in the registry
+            deadline_on = cfg.deadline_s > 0
+            estimator = CompletionEstimator()
+            if deadline_on and obs is not None:
+                estimator.seed_from_histograms(
+                    obs.dump().get("histograms", {}), nominal_prompt_len=S,
+                )
+            admission = DeadlineAdmission(
+                estimator,
+                min_tokens=cfg.deadline_min_tokens,
+                hedge_threshold=cfg.hedge_threshold,
+            ) if deadline_on else None
+            forecaster = (
+                ArrivalForecaster() if cfg.predictive_autoscale else None
+            )
+
             def on_trace(name, **tags):
                 # router/cell-router lifecycle events (failover, salvage,
                 # continuation reroute, scale) onto the attempt span
@@ -739,6 +802,14 @@ class ServeDriver:
                 # engine stage callback: queue-wait/prefill per admission,
                 # one decode span per engine step
                 d = float(info.get("dur_s", 0.0))
+                if deadline_on:  # the estimator eats the same events
+                    if stage == "prefill":
+                        estimator.observe_prefill(
+                            int(info.get("plen") or 0), d)
+                        if "queue_wait_s" in info:
+                            estimator.observe_queue_wait(info["queue_wait_s"])
+                    elif stage == "decode":
+                        estimator.observe_decode_step(d)
                 if obs is not None:
                     obs.observe(f"serve_{stage}_s", d)
                     if "queue_wait_s" in info:
@@ -760,7 +831,11 @@ class ServeDriver:
                         )
                         tr.end(qs, t=t1 - d)
 
-            stage_sink = on_stage if (tr is not None or obs is not None) else None
+            stage_sink = (
+                on_stage
+                if (tr is not None or obs is not None or deadline_on)
+                else None
+            )
             trace_sink = on_trace if tr is not None else None
 
             def make_engine():
@@ -798,11 +873,15 @@ class ServeDriver:
                     # instead of raising out of a router step
                     shed_stranded=cfg.cell_rebuild_retries > 0,
                     on_trace=trace_sink,
+                    admission=admission,
+                    forecaster=forecaster,
+                    per_replica_slots=cfg.slots or B,
                 )
             else:
                 router = ServeRouter(
                     [make_engine() for _ in range(cfg.replicas)],
                     on_trace=trace_sink,
+                    admission=admission,
                 )
             # a preempted attempt left its unfinished work as continuation
             # requests in the token state; completed outputs carry over too
@@ -817,6 +896,7 @@ class ServeDriver:
                     Request(
                         rid=i, tokens=np.asarray(prompt["tokens"][i]),
                         max_new_tokens=cfg.gen, temperature=cfg.temperature,
+                        deadline_s=cfg.deadline_s if deadline_on else None,
                     )
                     for i in range(B)
                     if i not in done_rids
@@ -894,6 +974,21 @@ class ServeDriver:
                             "queue_depth": router.queue_depth(),
                             "load_tokens": router.load_tokens(),
                         }
+                        if deadline_on:
+                            # SLO signal: the miss+shed fraction so far —
+                            # the controller treats a tenant bleeding its
+                            # budget as busy even when its queue is short
+                            shed_n = len(router.deadline_shed)
+                            miss_n = count_misses(outs)
+                            state["load"]["slo_pressure"] = (
+                                (miss_n + shed_n)
+                                / max(1, len(outs) + shed_n)
+                            )
+                            if forecaster is not None:
+                                state["load"]["forecast_rate"] = (
+                                    forecaster.rate(
+                                        base + time.perf_counter() - t0)
+                                )
                         # cancellation point between engine steps; a preempt
                         # drains in-flight sequences into resumable requests
                         token.checkpoint(save=preempt_save)
@@ -911,8 +1006,14 @@ class ServeDriver:
                 )
             dt = state["wall_s"]
             toks = sum(len(o.tokens) for o in outs)
+            # a deadline policy may have shed every request: no outputs is
+            # a legal (if degenerate) serve result, not a crash
             lat = token_latencies(outs)
-            p50, p99 = np.percentile(lat, 50) * 1e3, np.percentile(lat, 99) * 1e3
+            if len(lat):
+                p50 = np.percentile(lat, 50) * 1e3
+                p99 = np.percentile(lat, 99) * 1e3
+            else:
+                p50 = p99 = 0.0
             # per-request spans for this attempt's completions: the engine's
             # relative trace clock (base + elapsed) mapped back onto the
             # tracer timeline by anchoring "now" to the end of the attempt
@@ -947,20 +1048,39 @@ class ServeDriver:
                     obs.observe(
                         "serve_ttft_s", max(o.token_times[0] - arr, 0.0))
                 obs.observe("serve_tokens_per_s", toks / max(dt, 1e-9))
+                if deadline_on:
+                    new_miss = count_misses(new_outs)
+                    new_shed = len(router.deadline_shed)
+                    if new_miss:
+                        obs.inc("deadline_miss", new_miss)
+                    if new_shed:
+                        obs.inc("deadline_shed", new_shed)
             print(
                 f"[serve/continuous] {toks} tokens in {dt:.2f}s "
                 f"({toks/dt:,.1f} tok/s) p50/p99 token latency "
                 f"{p50:.1f}/{p99:.1f} ms replicas={cfg.replicas} "
                 f"routed={router.routed}"
             )
-            first = min(outs, key=lambda o: o.rid)
-            print("[serve/continuous] first sequence:", first.tokens[:16])
+            if outs:
+                first = min(outs, key=lambda o: o.rid)
+                print("[serve/continuous] first sequence:", first.tokens[:16])
+            deadline_metrics = {}
+            if deadline_on:
+                deadline_metrics = {
+                    "deadline_miss": count_misses(outs),
+                    "deadline_shed": int(
+                        state["router_stats"].get("deadline_shed", 0)),
+                    "deadline_degraded": int(
+                        state["router_stats"].get("deadline_degraded", 0)),
+                    "hedges": int(state["router_stats"].get("hedges", 0)),
+                }
             return {
                 "engine": "continuous",
                 "tokens": toks,
                 "tokens_per_s": toks / max(dt, 1e-9),
                 "p50_token_ms": float(p50),
                 "p99_token_ms": float(p99),
+                **deadline_metrics,
                 **{f"replica_{k}": v
                    for k, v in state["router_stats"].items()},
             }

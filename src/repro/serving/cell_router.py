@@ -23,18 +23,34 @@ N of them:
   prompt + generated so far) is rerouted across the surviving cells.
   :meth:`salvage` is the same hook for work stranded by a cell *job*
   preempted off the pool entirely.
+* **Deadline admission + hedged dispatch** — with a
+  :class:`~repro.serving.deadline.DeadlineAdmission` attached, fresh
+  requests carrying a ``deadline_s`` budget are judged before placement
+  (shed or degraded when the projected finish cannot make the budget),
+  and admitted requests whose projection crosses the p99-at-risk
+  threshold are *hedged*: a duplicate goes to the second-least-loaded
+  cell, the first copy to finish wins, and the loser is cancelled
+  through the same rid-keyed bookkeeping the salvage path uses — so a
+  cell death mid-hedge still yields exactly one output per rid.
+* **Predictive autoscaling** — with an
+  :class:`~repro.serving.deadline.ArrivalForecaster` attached, replica
+  scaling follows the *forecast* arrival rate (windowed rate + slope,
+  sized by Little's law) instead of queue-depth hysteresis: capacity
+  moves before the queue the ramp would build exists.
 
 Cells are duck-typed (``submit / step / has_work / load_tokens /
-queue_depth / drain_continuations / scale_to / replicas``), so the
-deterministic tier tests run against fakes while
+queue_depth / drain_continuations / scale_to / replicas``, optionally
+``cancel``), so the deterministic tier tests run against fakes while
 :class:`InProcessCell` wraps real continuous engines for the serve driver
 and the ``launch.serve_cells`` CLI.
 """
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Optional, Sequence
 
+from repro.serving.deadline import advise_replicas_predictive
 from repro.serving.router import ServeRouter
 from repro.serving.scheduler import Request, RequestOutput, remaining_new_tokens
 
@@ -130,6 +146,9 @@ class InProcessCell:
     def drain_finished(self) -> list[RequestOutput]:
         return self.router.drain_finished()
 
+    def cancel(self, rid: int) -> bool:
+        return self.router.cancel(rid)
+
     def stats(self) -> dict:
         return self.router.stats()
 
@@ -149,6 +168,9 @@ class CellRouter:
         max_replicas: int = 4,
         shed_stranded: bool = False,
         on_trace: Optional[Callable[..., None]] = None,
+        admission=None,
+        forecaster=None,
+        per_replica_slots: int = 1,
     ):
         if not cells:
             raise ValueError("cell router needs at least one cell")
@@ -182,6 +204,29 @@ class CellRouter:
         self.scale_events: list[tuple[int, int, int]] = []  # (cell, from, to)
         self._depth_hist: list[list[int]] = [[] for _ in self.cells]
         self._injected_failures: set[int] = set()  # chaos: fail on next step
+        # deadline policy (serving.deadline.DeadlineAdmission): fresh
+        # budgeted requests are shed/degraded before placement, and
+        # admitted-but-at-risk ones are hedged to a second cell when the
+        # policy's hedge_threshold is armed
+        self.admission = admission
+        self.deadline_shed: list[int] = []  # rids shed at admission
+        self.deadline_degraded = 0  # requests truncated to fit budget
+        self.deadline_miss = 0  # delivered outputs past their budget
+        # hedge bookkeeping, keyed by rid like the PR-6 shed replay: the
+        # cells currently holding a live copy, and rids already delivered
+        # (anything further for those — a straggler output, a salvage
+        # continuation off a dead cell — is dropped, never double-counted)
+        self._hedges: dict[int, set[int]] = {}
+        self._hedge_done: set[int] = set()
+        self.hedges = 0  # hedged submissions (pairs created)
+        self.hedge_wins = 0  # hedged rids delivered
+        self.hedge_cancels = 0  # loser copies cancelled after a win
+        self.hedge_dropped = 0  # duplicate outputs / stale salvage dropped
+        # predictive autoscaling (serving.deadline.ArrivalForecaster):
+        # when attached, autoscale() follows the arrival-rate forecast
+        # instead of queue-depth hysteresis
+        self.forecaster = forecaster
+        self.per_replica_slots = max(1, int(per_replica_slots))
 
     # ------------------------------------------------------------------
     def _emit(self, name: str, **tags) -> None:
@@ -208,10 +253,22 @@ class CellRouter:
             raise NoCellsAlive(f"all {len(self.cells)} serve cells have failed")
         return min(alive, key=lambda i: (self.load(i), i))
 
-    def submit(self, req: Request) -> int:
+    def _place(self, i: int, req: Request) -> None:
+        self.cells[i].submit(req)
+        self.routed[i] += 1
+        self.routed_tokens[i] += req.prompt_len + remaining_new_tokens(req)
+        if req.rid in self._hedges:  # a salvaged hedge member moved here
+            self._hedges[req.rid].add(i)
+
+    def submit(self, req: Request, *, _salvage: bool = False) -> int:
         """Route to the least-loaded alive cell; returns the cell index.
         With ``shed_stranded`` and no cells alive, the request is parked in
-        ``stranded`` instead (returns -1) — shed, not lost."""
+        ``stranded`` instead (returns -1) — shed, not lost.  With a
+        deadline policy, a fresh budgeted request may be shed before
+        placement (returns -1), degraded (generation truncated to fit its
+        budget), or hedged (a duplicate placed on a second cell when its
+        projection is p99-at-risk); salvage resubmissions skip the policy —
+        their budget was judged at first admission."""
         try:
             i = self.pick()
         except NoCellsAlive:
@@ -220,21 +277,74 @@ class CellRouter:
                 self.shed += 1
                 return -1
             raise
-        self.cells[i].submit(req)
-        self.routed[i] += 1
-        self.routed_tokens[i] += req.prompt_len + remaining_new_tokens(req)
+        if self.forecaster is not None and not _salvage:
+            self.forecaster.record(req.arrival_time)
+        judge = (
+            self.admission is not None and not _salvage
+            and not self.admission.exempt(req)
+        )
+        hedge = False
+        if judge:
+            d = self.admission.decide(req, queued_tokens=self.load(i))
+            if d.action == "shed":
+                self.deadline_shed.append(req.rid)
+                self._emit(
+                    "serve.shed_deadline", rid=req.rid,
+                    projected_ms=int(d.est_s * 1e3),
+                )
+                return -1
+            if d.action == "degrade":
+                req.max_new_tokens = d.fit_tokens
+                self.deadline_degraded += 1
+                self._emit(
+                    "serve.degrade_deadline", rid=req.rid, fit=d.fit_tokens,
+                )
+            hedge = self.admission.at_risk(d, req)
+        self._place(i, req)
+        if hedge:
+            others = [
+                k for k, a in enumerate(self.alive) if a and k != i
+            ]
+            if others:
+                j = min(others, key=lambda k: (self.load(k), k))
+                self._hedges[req.rid] = {i}
+                self._place(j, dataclasses.replace(req))
+                self.hedges += 1
+                self._emit(
+                    "serve.hedge", rid=req.rid, primary=i, secondary=j,
+                )
         return i
 
     # ------------------------------------------------------------------
+    def _hedge_keep(self, req: Request) -> bool:
+        """Salvage filter for a rid that was hedged: keep the continuation
+        only when no other live copy covers it (first-win semantics carry
+        through failures — a delivered or still-running twin makes this
+        copy redundant, never a second output)."""
+        h = self._hedges.get(req.rid)
+        if h is None:
+            return req.rid not in self._hedge_done
+        if req.rid in self._hedge_done:
+            return False
+        if any(self.alive[k] for k in h):
+            return False  # a live twin still runs; drop this copy
+        h.clear()  # orphaned rid: this continuation revives it
+        return True
+
     def salvage(self, conts: Sequence[Request]) -> int:
         """Reroute continuations stranded on a lost cell (a dead cell here,
         or a whole serve *job* preempted off the pool) across the
         survivors; returns how many were placed (the rest shed to
-        ``stranded`` under graceful degradation, or NoCellsAlive without)."""
+        ``stranded`` under graceful degradation, or NoCellsAlive without).
+        Hedged rids are deduplicated: a continuation whose twin already
+        delivered or still runs on a live cell is dropped, not replayed."""
         placed = 0
         for cont in conts:
-            if self.submit(cont) < 0:  # raises NoCellsAlive unless shedding
+            if not self._hedge_keep(cont):
+                self.hedge_dropped += 1
                 continue
+            if self.submit(cont, _salvage=True) < 0:
+                continue  # raises NoCellsAlive unless shedding
             placed += 1
             self.salvaged += 1
         if conts:
@@ -247,12 +357,14 @@ class CellRouter:
         self.alive[i] = False
         self.failures.append((i, f"{type(err).__name__}: {err}"))
         self._emit("cell_failover", cell=i, error=type(err).__name__)
+        for h in self._hedges.values():  # dead cell holds no live copies
+            h.discard(i)
         cell = self.cells[i]
         finished: list[RequestOutput] = []
         drain_finished = getattr(cell, "drain_finished", None)
         if drain_finished is not None:
             try:
-                finished = drain_finished()
+                finished = [o for o in drain_finished() if self._deliver(o, i)]
             except Exception:
                 finished = []
         try:
@@ -275,11 +387,46 @@ class CellRouter:
             raise IndexError(f"no cell {i} (have {len(self.cells)})")
         self._injected_failures.add(i)
 
+    def _deliver(self, out: RequestOutput, cell_idx: int) -> bool:
+        """First-win gate on every output leaving a cell: unhedged rids
+        pass through; a hedged rid's first output wins (the losing copy is
+        cancelled on its cell), later ones are dropped.  Also the single
+        place deadline misses are counted — once per delivered rid."""
+        h = self._hedges.get(out.rid)
+        if h is None and out.rid not in self._hedge_done:
+            self._count_miss(out)
+            return True
+        if out.rid in self._hedge_done:
+            self.hedge_dropped += 1  # straggler twin: already delivered
+            return False
+        self._hedge_done.add(out.rid)
+        del self._hedges[out.rid]
+        self.hedge_wins += 1
+        self._emit("serve.hedge_win", rid=out.rid, cell=cell_idx)
+        for k in h:
+            if k == cell_idx or not self.alive[k]:
+                continue
+            cancel = getattr(self.cells[k], "cancel", None)
+            if cancel is not None and cancel(out.rid):
+                self.hedge_cancels += 1
+                self._emit("serve.hedge_cancel", rid=out.rid, cell=k)
+        self._count_miss(out)
+        return True
+
+    def _count_miss(self, out: RequestOutput) -> None:
+        budget = getattr(out, "deadline_s", None)
+        if budget is None:
+            return
+        if out.finish_time > out.arrival_time + float(budget):
+            self.deadline_miss += 1
+
     def step(self, now: float = float("inf")) -> list[RequestOutput]:
         """Advance every alive cell one step (scaling first when enabled);
-        cells that raise are failed over.  Returns completed requests."""
+        cells that raise are failed over.  Returns completed requests,
+        deduplicated by rid for hedged pairs (first win delivers, the
+        loser is cancelled)."""
         if self.autoscale_enabled:
-            self.autoscale()
+            self.autoscale(now)
         outs: list[RequestOutput] = []
         for i, cell in enumerate(self.cells):
             if not self.alive[i]:
@@ -293,7 +440,9 @@ class CellRouter:
             if not cell.has_work():
                 continue
             try:
-                outs.extend(cell.step(now))
+                outs.extend(
+                    o for o in cell.step(now) if self._deliver(o, i)
+                )
             except Exception as e:  # noqa: BLE001 — whole-cell loss is the point
                 outs.extend(self._fail_cell(i, e))
         return outs
@@ -317,21 +466,45 @@ class CellRouter:
         out, self.stranded = self.stranded, []
         return out
 
-    def autoscale(self) -> list[tuple[int, int, int]]:
-        """Sample queue depth per cell and apply the hysteresis policy;
-        returns the (cell, from, to) scale events this pass produced."""
+    def autoscale(self, now: float = float("inf")) -> list[tuple[int, int, int]]:
+        """Per-cell scale decision; returns (cell, from, to) events.
+
+        With an :class:`~repro.serving.deadline.ArrivalForecaster`
+        attached (predictive mode), the replica target follows the
+        forecast arrival rate through Little's law — the pool's share of
+        predicted in-flight demand per cell, using the admission policy's
+        typical service time — so capacity moves before queues build.
+        Without one, the original sustained-queue-depth hysteresis
+        applies."""
         events = []
+        predictive = (
+            self.forecaster is not None and self.admission is not None
+            and now != float("inf")
+        )
+        if predictive:
+            per_cell_rate = (
+                self.forecaster.forecast(now) / max(self.num_alive, 1)
+            )
+            service_s = self.admission.typical_service_s()
         for i, cell in enumerate(self.cells):
             if not self.alive[i]:
                 continue
             self._depth_hist[i].append(int(cell.queue_depth()))
             cur = int(cell.replicas)
-            want = advise_replicas(
-                self._depth_hist[i], cur,
-                high_water=self.high_water, low_water=self.low_water,
-                window=self.window, min_replicas=self.min_replicas,
-                max_replicas=self.max_replicas,
-            )
+            if predictive:
+                want = advise_replicas_predictive(
+                    per_cell_rate, service_s, cur,
+                    per_replica_slots=self.per_replica_slots,
+                    min_replicas=self.min_replicas,
+                    max_replicas=self.max_replicas,
+                )
+            else:
+                want = advise_replicas(
+                    self._depth_hist[i], cur,
+                    high_water=self.high_water, low_water=self.low_water,
+                    window=self.window, min_replicas=self.min_replicas,
+                    max_replicas=self.max_replicas,
+                )
             if want != cur:
                 cell.scale_to(want)
                 self._depth_hist[i].clear()  # new capacity: fresh window
@@ -356,12 +529,28 @@ class CellRouter:
 
     def drain_continuations(self) -> list[Request]:
         """Evict all in-flight work from every alive cell — the serve
-        driver's preempt-mid-run hand-off, one tier up."""
+        driver's preempt-mid-run hand-off, one tier up.  Hedged pairs
+        collapse to one continuation per rid (the copy with the most
+        progress), and rids whose winner already delivered are dropped, so
+        a preempt/resume never replays a hedge into a double output."""
         conts: list[Request] = []
         for a, cell in zip(self.alive, self.cells):
             if a:
                 conts.extend(cell.drain_continuations())
-        return conts
+        best: dict[int, Request] = {}
+        for c in conts:
+            if c.rid in self._hedge_done:
+                self.hedge_dropped += 1
+                continue
+            prev = best.get(c.rid)
+            if prev is None:
+                best[c.rid] = c
+            else:
+                self.hedge_dropped += 1
+                if c.prompt_len > prev.prompt_len:
+                    best[c.rid] = c
+        self._hedges.clear()  # drained work is no longer placed anywhere
+        return list(best.values())
 
     def stats(self) -> dict:
         return {
@@ -374,6 +563,13 @@ class CellRouter:
             "stranded": len(self.stranded),
             "revivals": self.revivals,
             "cell_failures": len(self.failures),
+            "deadline_shed": len(self.deadline_shed),
+            "deadline_degraded": self.deadline_degraded,
+            "deadline_miss": self.deadline_miss,
+            "hedges": self.hedges,
+            "hedge_wins": self.hedge_wins,
+            "hedge_cancels": self.hedge_cancels,
+            "hedge_dropped": self.hedge_dropped,
             "scale_events": [list(e) for e in self.scale_events],
             "replicas_per_cell": [
                 int(getattr(c, "replicas", 1)) if a else 0

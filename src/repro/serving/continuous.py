@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 from typing import Any, Callable, Optional
 
 import jax
@@ -211,6 +212,7 @@ class ContinuousBatchingEngine:
                 tokens=s.generated,
                 arrival_time=s.req.arrival_time,
                 token_times=s.token_times,
+                deadline_s=s.req.deadline_s,
             )
         )
         self.alloc.release(slot)
@@ -242,7 +244,10 @@ class ContinuousBatchingEngine:
             )
             carry.generated.append(int(tok))  # admission-time sync, not per-step
             if self._on_stage is not None:
-                info = {"rid": req.rid, "dur_s": time.perf_counter() - pt0}
+                info = {
+                    "rid": req.rid, "plen": plen,
+                    "dur_s": time.perf_counter() - pt0,
+                }
                 if np.isfinite(now) and np.isfinite(req.arrival_time):
                     info["queue_wait_s"] = max(now - req.arrival_time, 0.0)
                 self._on_stage("prefill", info)
@@ -271,6 +276,7 @@ class ContinuousBatchingEngine:
             temperature=s.req.temperature,
             arrival_time=0.0,
             eos_id=s.req.eos_id,
+            deadline_s=s.req.deadline_s,
         )
         cont._carry = s  # type: ignore[attr-defined]
         self.alloc.release(slot)
@@ -297,6 +303,26 @@ class ContinuousBatchingEngine:
         conts.extend(self.scheduler.pending)
         self.scheduler.pending.clear()
         return conts
+
+    def cancel(self, rid: int) -> bool:
+        """Drop every trace of request ``rid`` — queued copies (including
+        requeued continuations) and its decode slot — without emitting an
+        output.  The hedged-dispatch loser path: the winning cell already
+        delivered this rid, so the work is abandoned, not salvaged.
+        Returns whether anything was removed."""
+        hit = False
+        if any(r.rid == rid for r in self.scheduler.pending):
+            self.scheduler.pending = deque(
+                r for r in self.scheduler.pending if r.rid != rid
+            )
+            hit = True
+        for i, s in enumerate(self._slots):
+            if s is not None and s.req.rid == rid:
+                self.alloc.release(i)
+                self._slots[i] = None
+                self._temps[i] = 0.0
+                hit = True
+        return hit
 
     def load_tokens(self) -> int:
         """Live tokens in decode slots plus queued prompt tokens — the

@@ -1,0 +1,388 @@
+"""Deadline-aware serving policies: estimate, shed/degrade, hedge, forecast.
+
+A vehicle-facing answer that misses its latency budget is a useless
+answer (Schafhalter et al., *Leveraging Cloud Computing to Make
+Autonomous Vehicles Safer*), so requests carry ``deadline_s`` — a budget
+in seconds from ``arrival_time`` — and the serving tiers act on it
+*before* spending capacity:
+
+* :class:`CompletionEstimator` — an online completion-time model built
+  from the same signals the ``repro.obs`` stage histograms record
+  (queue wait, per-token prefill, per-token decode).  It is a pure
+  function of its observed state: estimates are always finite,
+  non-negative, and monotone in prompt length and output budget — the
+  invariants the hypothesis property tier pins.
+* :class:`DeadlineAdmission` — the shed-or-degrade decision taken at
+  router admission: a request whose projected finish fits its budget is
+  admitted as-is; one that can still make the budget with a *truncated*
+  generation is degraded (``max_new_tokens`` cut to what fits — an
+  on-time partial answer beats a late complete one); one that cannot
+  make it even at the floor is shed without ever touching an engine.
+* hedging risk — :meth:`DeadlineAdmission.at_risk` flags admitted
+  requests whose projected finish eats more than ``hedge_threshold`` of
+  the budget; the cell router duplicates those to a second cell and
+  cancels the loser on first win (``serving.cell_router``).
+* :class:`ArrivalForecaster` + :func:`advise_replicas_predictive` —
+  SLO-driven predictive autoscaling: a windowed arrival-rate estimate
+  with slope extrapolation is turned into a replica target through
+  Little's law (demand = rate x service time), so capacity moves on the
+  *forecast* rather than on queue depth that has already built.
+
+Everything here is host-side policy over plain floats — no jax — so the
+deterministic deadline test tier runs it under a virtual clock.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from bisect import insort
+from collections import deque
+from typing import Optional, Sequence
+
+from repro.serving.scheduler import Request, remaining_new_tokens
+
+ADMIT = "admit"
+DEGRADE = "degrade"
+SHED = "shed"
+
+
+def _clean(x) -> Optional[float]:
+    """A usable observation: finite and non-negative, else None."""
+    try:
+        v = float(x)
+    except (TypeError, ValueError):
+        return None
+    if not math.isfinite(v) or v < 0.0:
+        return None
+    return v
+
+
+class _P50Window:
+    """Median over a bounded sliding window of sanitized observations.
+
+    Small enough to sort on demand (windows are <= a few hundred), and
+    the median — unlike the mean — ignores the one compile-stall outlier
+    that would otherwise poison every estimate after it."""
+
+    def __init__(self, window: int, prior: float = 0.0):
+        self._buf: deque[float] = deque(maxlen=max(1, int(window)))
+        self._prior = max(0.0, float(prior))
+
+    def observe(self, x) -> None:
+        v = _clean(x)
+        if v is not None:
+            self._buf.append(v)
+
+    def value(self) -> float:
+        if not self._buf:
+            return self._prior
+        s = sorted(self._buf)
+        n = len(s)
+        mid = n // 2
+        return s[mid] if n % 2 else 0.5 * (s[mid - 1] + s[mid])
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+
+class CompletionEstimator:
+    """Online completion-time estimate for a (prompt_len, new_tokens) shape.
+
+    Tracks three medians — queue wait per request, prefill seconds *per
+    prompt token*, decode seconds per generated token — and projects::
+
+        eta = queue_wait + prompt_len * prefill_rate
+            + (new_tokens + queued_tokens) * decode_rate
+
+    ``queued_tokens`` folds the head-of-line displacement of work already
+    routed to the chosen target (each queued token costs about one decode
+    step before this request's tokens emerge).  With no observations the
+    priors (default 0) apply, so a cold estimator admits everything and
+    the policy only starts biting once the PR-7 stage signals flow.
+
+    Invariants (property-tested): for any observation history — including
+    hostile NaN/inf/negative inputs, which are dropped — ``estimate_s``
+    is finite, >= 0, and monotone non-decreasing in both ``prompt_len``
+    and ``new_tokens``.
+    """
+
+    def __init__(
+        self,
+        *,
+        window: int = 256,
+        prior_queue_wait_s: float = 0.0,
+        prior_prefill_tok_s: float = 0.0,
+        prior_decode_tok_s: float = 0.0,
+    ):
+        self._queue = _P50Window(window, prior_queue_wait_s)
+        self._prefill = _P50Window(window, prior_prefill_tok_s)
+        self._decode = _P50Window(window, prior_decode_tok_s)
+
+    # -- feeding (the same events the obs histograms see) ---------------
+    def observe_queue_wait(self, dur_s) -> None:
+        self._queue.observe(dur_s)
+
+    def observe_prefill(self, prompt_len: int, dur_s) -> None:
+        v = _clean(dur_s)
+        if v is not None and prompt_len and prompt_len > 0:
+            self._prefill.observe(v / int(prompt_len))
+
+    def observe_decode_step(self, dur_s) -> None:
+        self._decode.observe(dur_s)
+
+    def seed_from_histograms(
+        self, hists: dict, *, nominal_prompt_len: int = 1
+    ) -> int:
+        """Warm-start from a ``MetricsRegistry.dump()['histograms']`` dict
+        (the PR-7 ``serve_queue_wait_s`` / ``serve_prefill_s`` /
+        ``serve_decode_step_s`` series) — how a resumed or co-scheduled
+        serve tenant inherits a previous attempt's latency model.
+        Returns how many samples were ingested."""
+        n = 0
+        for x in (hists or {}).get("serve_queue_wait_s", []):
+            self.observe_queue_wait(x)
+            n += 1
+        for x in (hists or {}).get("serve_prefill_s", []):
+            self.observe_prefill(max(1, int(nominal_prompt_len)), x)
+            n += 1
+        for x in (hists or {}).get("serve_decode_step_s", []):
+            self.observe_decode_step(x)
+            n += 1
+        return n
+
+    # -- rates ----------------------------------------------------------
+    def queue_wait_s(self) -> float:
+        return self._queue.value()
+
+    def prefill_tok_s(self) -> float:
+        return self._prefill.value()
+
+    def decode_tok_s(self) -> float:
+        return self._decode.value()
+
+    def samples(self) -> int:
+        return len(self._queue) + len(self._prefill) + len(self._decode)
+
+    # -- projection ------------------------------------------------------
+    def estimate_s(
+        self, prompt_len: int, new_tokens: int, *, queued_tokens: int = 0
+    ) -> float:
+        """Projected seconds from arrival to last token; see class doc."""
+        p = max(0, int(prompt_len))
+        n = max(0, int(new_tokens))
+        q = max(0, int(queued_tokens))
+        est = (
+            self.queue_wait_s()
+            + p * self.prefill_tok_s()
+            + (n + q) * self.decode_tok_s()
+        )
+        return est if math.isfinite(est) and est >= 0.0 else 0.0
+
+    def fit_tokens(
+        self, prompt_len: int, budget_s: float, *, queued_tokens: int = 0
+    ) -> int:
+        """Largest generation budget whose projection fits ``budget_s``
+        (the degrade target).  May be 0 — then not even one token fits."""
+        budget = _clean(budget_s)
+        if budget is None:
+            return 0
+        fixed = self.estimate_s(prompt_len, 0, queued_tokens=queued_tokens)
+        rate = self.decode_tok_s()
+        if fixed > budget:
+            return 0
+        if rate <= 0.0:
+            return 1 << 30  # free decode: any budget fits
+        return int((budget - fixed) / rate)
+
+
+@dataclasses.dataclass
+class Decision:
+    """One admission verdict: what to do and why (the event tag payload)."""
+
+    action: str  # ADMIT | DEGRADE | SHED
+    est_s: float  # projected completion at the original budget
+    fit_tokens: int  # generation budget that fits (DEGRADE target)
+
+
+class DeadlineAdmission:
+    """Shed-or-degrade policy the routers consult before enqueueing.
+
+    ``min_tokens`` is the degrade floor: a request that cannot get at
+    least that many tokens inside its budget is shed.  ``hedge_threshold``
+    in (0, 1] arms hedging: an admitted request whose projection exceeds
+    ``threshold * budget`` is flagged p99-at-risk (0 disables).
+    Continuations (requests carrying ``_carry``) are never re-judged:
+    their budget was spent at first admission and re-shedding a half-
+    generated sequence would drop delivered work.
+    """
+
+    def __init__(
+        self,
+        estimator: CompletionEstimator,
+        *,
+        min_tokens: int = 1,
+        hedge_threshold: float = 0.0,
+    ):
+        if min_tokens < 1:
+            raise ValueError(f"min_tokens must be >= 1, got {min_tokens}")
+        if not 0.0 <= hedge_threshold <= 1.0:
+            raise ValueError(
+                f"hedge_threshold must be in [0, 1], got {hedge_threshold}"
+            )
+        self.estimator = estimator
+        self.min_tokens = int(min_tokens)
+        self.hedge_threshold = float(hedge_threshold)
+        # running mean of admitted shapes: the predictive autoscaler's
+        # "typical request" for Little's-law sizing
+        self._shape_n = 0
+        self._mean_prompt = 0.0
+        self._mean_new = 0.0
+
+    @staticmethod
+    def exempt(req: Request) -> bool:
+        """No budget, or a continuation: admission does not apply."""
+        return getattr(req, "deadline_s", None) is None or \
+            getattr(req, "_carry", None) is not None
+
+    def _note_shape(self, prompt_len: int, new_tokens: int) -> None:
+        self._shape_n += 1
+        k = 1.0 / self._shape_n
+        self._mean_prompt += (prompt_len - self._mean_prompt) * k
+        self._mean_new += (new_tokens - self._mean_new) * k
+
+    def decide(self, req: Request, *, queued_tokens: int = 0) -> Decision:
+        """Judge one fresh request against its budget (see class doc)."""
+        est = self.estimator
+        want = remaining_new_tokens(req)
+        self._note_shape(req.prompt_len, want)
+        if self.exempt(req):
+            return Decision(ADMIT, 0.0, want)
+        budget = _clean(req.deadline_s)
+        projected = est.estimate_s(
+            req.prompt_len, want, queued_tokens=queued_tokens
+        )
+        if budget is None or projected <= budget:
+            return Decision(ADMIT, projected, want)
+        fit = min(
+            want, est.fit_tokens(
+                req.prompt_len, budget, queued_tokens=queued_tokens
+            )
+        )
+        if fit >= self.min_tokens:
+            return Decision(DEGRADE, projected, fit)
+        return Decision(SHED, projected, fit)
+
+    def at_risk(self, decision: Decision, req: Request) -> bool:
+        """p99-at-risk: an as-is admission already projected past the
+        hedge threshold's share of the budget.  Degraded requests are
+        not hedged — their budget is already spent to the edge, and a
+        duplicate would double the very load that put them at risk."""
+        if self.hedge_threshold <= 0.0 or decision.action != ADMIT:
+            return False
+        budget = _clean(getattr(req, "deadline_s", None))
+        if budget is None or budget <= 0.0:
+            return False
+        return decision.est_s > self.hedge_threshold * budget
+
+    def typical_service_s(self) -> float:
+        """Projected service seconds for the mean admitted shape — the
+        predictive autoscaler's Little's-law service time."""
+        return self.estimator.estimate_s(
+            int(round(self._mean_prompt)), int(round(self._mean_new))
+        )
+
+
+class ArrivalForecaster:
+    """Windowed arrival rate + slope over recorded arrival times.
+
+    ``forecast(now)`` compares the rate over the most recent window with
+    the window before it and extrapolates one ``horizon_s`` ahead:
+    ``rate + slope * horizon``.  A ramp is seen while it is still a ramp
+    — before the queue it would build exists — which is the whole point
+    of predictive scaling.  Pure function of (recorded times, now):
+    deterministic under the virtual clock.
+    """
+
+    def __init__(self, *, window_s: float = 1.0, horizon_s: float = 0.5):
+        if window_s <= 0.0:
+            raise ValueError(f"window_s must be > 0, got {window_s}")
+        self.window_s = float(window_s)
+        self.horizon_s = max(0.0, float(horizon_s))
+        self._times: list[float] = []  # kept sorted; bounded by _trim
+
+    def record(self, t) -> None:
+        v = _clean(t)
+        if v is not None:
+            insort(self._times, v)
+
+    def _count(self, lo: float, hi: float) -> int:
+        # times are sorted; linear scan is fine at these sizes but keep
+        # it honest for long runs by trimming anything two windows old
+        return sum(1 for t in self._times if lo < t <= hi)
+
+    def _trim(self, now: float) -> None:
+        cut = now - 2.0 * self.window_s
+        keep = [t for t in self._times if t > cut]
+        if len(keep) != len(self._times):
+            self._times = keep
+
+    def rate(self, now: float) -> float:
+        """Arrivals/sec over the most recent window."""
+        return self._count(now - self.window_s, now) / self.window_s
+
+    def forecast(self, now: float) -> float:
+        """Rate one horizon ahead (>= 0): recent rate + window slope."""
+        w = self.window_s
+        r1 = self._count(now - w, now) / w
+        r0 = self._count(now - 2 * w, now - w) / w
+        self._trim(now)
+        slope = (r1 - r0) / w
+        f = r1 + slope * self.horizon_s
+        return f if math.isfinite(f) and f > 0.0 else 0.0
+
+
+def advise_replicas_predictive(
+    forecast_rate: float,
+    service_s: float,
+    current: int,
+    *,
+    per_replica_slots: int = 1,
+    headroom: float = 1.2,
+    min_replicas: int = 1,
+    max_replicas: int = 4,
+) -> int:
+    """Forecast-driven replica target (replaces queue-depth hysteresis).
+
+    Little's law sizes the fleet: ``forecast_rate * service_s`` requests
+    are concurrently in flight at the predicted rate, each replica holds
+    ``per_replica_slots`` of them, and ``headroom`` pads the forecast so
+    the SLO survives the forecast being a little low.  Unlike the
+    hysteresis policy this jumps straight to the target — the forecast
+    already smoothed the signal, so there is nothing left to damp.
+    """
+    lo = max(1, int(min_replicas))
+    hi = max(lo, int(max_replicas))
+    rate = _clean(forecast_rate)
+    svc = _clean(service_s)
+    if rate is None or svc is None or svc <= 0.0 or per_replica_slots < 1:
+        return max(lo, min(int(current), hi))
+    demand = rate * headroom * svc  # concurrent requests in flight
+    want = math.ceil(demand / per_replica_slots) if demand > 0.0 else lo
+    return max(lo, min(int(want), hi))
+
+
+def count_misses(
+    outs: Sequence, *, slack_s: float = 0.0
+) -> int:
+    """Completed requests that finished after ``arrival + deadline``
+    (requests without a budget never miss).  The one accounting rule the
+    driver counters, the chaos drift test and the benchmark must share."""
+    missed = 0
+    for o in outs:
+        budget = _clean(getattr(o, "deadline_s", None))
+        if budget is None:
+            continue
+        if o.finish_time > o.arrival_time + budget + slack_s:
+            missed += 1
+    return missed

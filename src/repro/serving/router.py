@@ -44,6 +44,7 @@ class ServeRouter:
         replicas: Sequence,
         *,
         on_trace: Optional[Callable[..., None]] = None,
+        admission=None,
     ):
         if not replicas:
             raise ValueError("router needs at least one replica")
@@ -52,6 +53,13 @@ class ServeRouter:
         # routing lifecycle transitions (failover, retirement).  None costs
         # nothing; a raising sink must not take the router down with it.
         self._on_trace = on_trace
+        # optional deadline policy (serving.deadline.DeadlineAdmission):
+        # fresh requests with a budget are judged before enqueueing —
+        # shed (never placed, rid recorded) or degraded (generation
+        # truncated to what fits).  Continuations are exempt.
+        self.admission = admission
+        self.deadline_shed: list[int] = []  # rids shed at admission
+        self.deadline_degraded = 0  # requests truncated to fit budget
         self.alive = [True] * len(self.replicas)
         self.routed = [0] * len(self.replicas)  # requests admitted per replica
         self.routed_tokens = [0] * len(self.replicas)  # prompt+gen budget routed
@@ -123,8 +131,27 @@ class ServeRouter:
         return min(alive, key=lambda i: (self.load(i), i))
 
     def submit(self, req: Request) -> int:
-        """Route one request; returns the chosen replica index."""
+        """Route one request; returns the chosen replica index, or -1 when
+        the deadline policy shed it (projected finish past its budget even
+        degraded to the floor — never enqueued)."""
         i = self.pick()
+        if self.admission is not None and not self.admission.exempt(req):
+            d = self.admission.decide(req, queued_tokens=self.load(i))
+            if d.action == "shed":
+                self.deadline_shed.append(req.rid)
+                self._emit(
+                    "serve.shed_deadline", rid=req.rid,
+                    projected_ms=int(d.est_s * 1e3),
+                )
+                return -1
+            if d.action == "degrade":
+                req.max_new_tokens = (
+                    req.max_new_tokens - remaining_new_tokens(req)
+                ) + d.fit_tokens
+                self.deadline_degraded += 1
+                self._emit(
+                    "serve.degrade_deadline", rid=req.rid, fit=d.fit_tokens,
+                )
         self.replicas[i].submit(req)
         self.routed[i] += 1
         # remaining cost, not face value: a rerouted continuation's prompt
@@ -188,6 +215,20 @@ class ServeRouter:
         cell tier collects these when failing a whole cell over."""
         finished, self._pending_outputs = self._pending_outputs, []
         return finished
+
+    def cancel(self, rid: int) -> bool:
+        """Abandon request ``rid`` wherever it sits (replica queues, decode
+        slots, the stranded list) without emitting an output — the hedged-
+        dispatch loser path, one tier down from the cell router."""
+        hit = False
+        for a, eng in zip(self.alive, self.replicas):
+            eng_cancel = getattr(eng, "cancel", None)
+            if a and eng_cancel is not None and eng_cancel(rid):
+                hit = True
+        if any(r.rid == rid for r in self.stranded):
+            self.stranded = [r for r in self.stranded if r.rid != rid]
+            hit = True
+        return hit
 
     def has_work(self) -> bool:
         return any(
@@ -264,4 +305,6 @@ class ServeRouter:
             "retired": self.retired,
             "rebalanced": self.rebalanced,
             "replica_failures": len(self.failures),
+            "deadline_shed": len(self.deadline_shed),
+            "deadline_degraded": self.deadline_degraded,
         }

@@ -28,6 +28,10 @@ class Request:
     temperature: float = 0.0
     arrival_time: float = 0.0  # seconds on the trace clock (0 = already queued)
     eos_id: Optional[int] = None
+    # latency budget in seconds from arrival_time (None = no deadline);
+    # acted on by the deadline-aware routers (serving.deadline), carried
+    # through continuations so a preempted sequence keeps its budget
+    deadline_s: Optional[float] = None
 
     @property
     def prompt_len(self) -> int:
@@ -53,6 +57,7 @@ class RequestOutput:
     tokens: list[int]
     arrival_time: float
     token_times: list[float]  # trace-clock time each token became available
+    deadline_s: Optional[float] = None  # the request's budget, for miss accounting
 
     @property
     def finish_time(self) -> float:

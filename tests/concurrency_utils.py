@@ -264,6 +264,95 @@ class FakeReplica:
         return drained
 
 
+def tokens_for(rid: int, n: int) -> list[int]:
+    """The deterministic token stream a request generates in the timed
+    fakes — a pure function of (rid, n), like greedy decode in the real
+    engine, so a hedged twin produces bitwise-identical output."""
+    return [(rid * 31 + k) % 997 for k in range(n)]
+
+
+class TimedCell:
+    """A serve-cell fake with *deterministic service times* for the
+    deadline tier: one sequential server whose completion times are a pure
+    function of submission order and request shape —
+
+        finish = max(busy_until, arrival) + prefill_tok_s * prompt_len
+                                          + decode_tok_s * max_new_tokens
+
+    — entirely off the wall clock, so budget/miss assertions are exact.
+    Tokens come from :func:`tokens_for` (pure in rid), outputs carry the
+    request's ``deadline_s`` through for miss accounting, and ``cancel``
+    drops a queued rid without emitting output (the hedge-loser path).
+    ``replicas``/``scale_to`` bound how many requests one ``step`` drains,
+    so autoscale decisions stay observable like with ``FakeCell``."""
+
+    def __init__(self, prefill_tok_s: float = 0.0, decode_tok_s: float = 0.01,
+                 replicas: int = 1, base_load: int = 0):
+        self.prefill_tok_s = prefill_tok_s
+        self.decode_tok_s = decode_tok_s
+        self.replicas = replicas
+        self.base_load = base_load
+        self.queue: list = []
+        self.busy_until = 0.0
+        self.completed: list = []
+        self.cancelled: list[int] = []
+        self.scale_calls: list[int] = []
+
+    def submit(self, req) -> None:
+        self.queue.append(req)
+
+    def load_tokens(self) -> int:
+        return self.base_load + sum(
+            r.prompt_len + r.max_new_tokens for r in self.queue
+        )
+
+    def queue_depth(self) -> int:
+        return len(self.queue)
+
+    def has_work(self) -> bool:
+        return bool(self.queue)
+
+    def scale_to(self, n: int) -> int:
+        self.scale_calls.append(n)
+        self.replicas = max(1, int(n))
+        return self.replicas
+
+    def service_s(self, req) -> float:
+        return (self.prefill_tok_s * req.prompt_len
+                + self.decode_tok_s * req.max_new_tokens)
+
+    def cancel(self, rid: int) -> bool:
+        kept = [r for r in self.queue if r.rid != rid]
+        hit = len(kept) != len(self.queue)
+        if hit:
+            self.queue = kept
+            self.cancelled.append(rid)
+        return hit
+
+    def step(self, now: float = float("inf")):
+        from repro.serving.scheduler import RequestOutput
+
+        outs = []
+        for _ in range(min(self.replicas, len(self.queue))):
+            req = self.queue.pop(0)
+            start = max(self.busy_until, req.arrival_time)
+            finish = start + self.service_s(req)
+            self.busy_until = finish
+            out = RequestOutput(
+                rid=req.rid, prompt_len=req.prompt_len,
+                tokens=tokens_for(req.rid, req.max_new_tokens),
+                arrival_time=req.arrival_time, token_times=[finish],
+                deadline_s=req.deadline_s,
+            )
+            self.completed.append(out)
+            outs.append(out)
+        return outs
+
+    def drain_continuations(self):
+        drained, self.queue = self.queue, []
+        return drained
+
+
 class FakeCell(FakeReplica):
     """A fake serve *cell*: FakeReplica's routing surface plus the
     ``replicas``/``scale_to`` knob the pool-level CellRouter drives.  Each

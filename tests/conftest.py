@@ -14,6 +14,7 @@ except ImportError:
     collect_ignore = [
         "test_attention_layers.py",
         "test_binpipe.py",
+        "test_deadline_props.py",
         "test_moe.py",
         "test_paged_cache_props.py",
         "test_pool_props.py",
@@ -28,6 +29,8 @@ def pytest_configure(config):
         "subprocess: spawns a fresh python with fake XLA devices",
         "chaos: seeded fault-injection tests (deterministic chaos tier; "
         "CI runs chaos+subprocess 5x)",
+        "deadline: deterministic deadline/hedging tests (virtual clock, "
+        "no sleeps; CI runs this tier 20x)",
         "slow: long-running integration tests",
     ):
         config.addinivalue_line("markers", line)

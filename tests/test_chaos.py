@@ -237,6 +237,56 @@ def test_inject_cell_failure_uses_real_failover_path():
     assert sorted(o.rid for o in done) == [0, 1, 2, 3]
 
 
+def test_kill_cell_mid_hedge_one_output_per_rid_no_accounting_drift():
+    """kill_cell while a hedged pair is in flight: the dead cell's copies
+    are dropped (a live twin covers them), every rid still completes
+    exactly once, and the router's miss counter agrees with the shared
+    ``count_misses`` rule — no deadline accounting drift through the
+    failover."""
+    from concurrency_utils import TimedCell
+    from repro.serving.deadline import (
+        CompletionEstimator,
+        DeadlineAdmission,
+        count_misses,
+    )
+    from repro.serving.scheduler import Request
+
+    # the estimator believes decode costs 0.01 s/tok; the cells actually
+    # run at 0.02 — a mis-calibrated model, so admitted requests can miss
+    est = CompletionEstimator()
+    for _ in range(8):
+        est.observe_decode_step(0.01)
+        est.observe_queue_wait(0.0)
+    router = CellRouter(
+        [TimedCell(decode_tok_s=0.02), TimedCell(decode_tok_s=0.02)],
+        admission=DeadlineAdmission(est, hedge_threshold=0.5),
+    )
+
+    def req(rid, budget):
+        return Request(rid=rid, tokens=np.zeros((8,), np.int32),
+                       max_new_tokens=10, deadline_s=budget)
+
+    router.submit(req(0, 0.15))  # projected 0.10 > 0.075: hedged
+    router.submit(req(1, 0.50))  # projected 0.28 > 0.25: hedged too
+    assert router.hedges == 2  # both rids hold copies on both cells
+    router.inject_cell_failure(0)  # kill a cell mid-hedge
+    done = []
+    while router.has_work():
+        done.extend(router.step())
+    assert router.alive == [False, True]
+    # exactly one output per rid — the dead cell's copies were dropped,
+    # not replayed into duplicates
+    assert sorted(o.rid for o in done) == [0, 1]
+    assert router.hedge_dropped == 2 and router.salvaged == 0
+    assert router.hedge_wins == 2 and router.hedge_cancels == 0
+    # accounting drift check: the survivor really ran at 0.02 s/tok, so
+    # rid0 (0.2s > 0.15 budget) missed and rid1 (0.4s <= 0.5) made it —
+    # and the router counted exactly what the shared rule counts
+    assert count_misses(done) == 1
+    assert router.deadline_miss == 1
+    assert router.stats()["deadline_shed"] == 0
+
+
 def test_serve_driver_rebuilds_after_all_cells_die():
     """kill_cell chaos on a 2-cell serve tenant, twice: the second kill
     leaves no cells alive, graceful degradation sheds + rebuilds, and every

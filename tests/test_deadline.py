@@ -1,0 +1,430 @@
+"""Deterministic deadline tier: estimator projections, shed/degrade
+admission, hedged dispatch with first-win cancellation, predictive
+autoscaling, and twin-run span byte-identity.
+
+Everything runs on virtual time against :class:`concurrency_utils.
+TimedCell` (service times are a pure function of submission order and
+request shape) — no sleeps, no wall-clock reads — so the ``-m deadline``
+CI tier can repeat the suite 20x and every assertion is exact.
+"""
+
+import numpy as np
+import pytest
+
+from concurrency_utils import TimedCell, VirtualClock, tokens_for
+from repro.obs.trace import Tracer
+from repro.serving.cell_router import CellRouter
+from repro.serving.deadline import (
+    ADMIT,
+    DEGRADE,
+    SHED,
+    ArrivalForecaster,
+    CompletionEstimator,
+    DeadlineAdmission,
+    advise_replicas_predictive,
+    count_misses,
+)
+from repro.serving.router import ServeRouter
+from repro.serving.scheduler import Request, RequestOutput
+
+pytestmark = pytest.mark.deadline
+
+
+def _req(rid, prompt=8, gen=10, budget=None, arrival=0.0):
+    return Request(rid=rid, tokens=np.zeros((prompt,), np.int32),
+                   max_new_tokens=gen, arrival_time=arrival,
+                   deadline_s=budget)
+
+
+def _est(decode=0.01, prefill=0.0, qw=0.0, samples=8):
+    """An estimator whose three medians are pinned to exact rates."""
+    est = CompletionEstimator()
+    for _ in range(samples):
+        est.observe_queue_wait(qw)
+        est.observe_decode_step(decode)
+        est.observe_prefill(100, prefill * 100)
+    return est
+
+
+def _drain(router):
+    outs = []
+    while router.has_work():
+        outs.extend(router.step())
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# CompletionEstimator: projections from observed medians
+# ---------------------------------------------------------------------------
+
+
+def test_estimator_cold_starts_permissive():
+    """With no observations the priors (0) apply: everything projects to
+    0s, so a cold policy admits the lot instead of guessing sheds."""
+    est = CompletionEstimator()
+    assert est.estimate_s(4096, 4096, queued_tokens=10**6) == 0.0
+    adm = DeadlineAdmission(est)
+    assert adm.decide(_req(0, budget=1e-9)).action == ADMIT
+
+
+def test_estimator_projects_from_observed_medians():
+    est = _est(decode=0.01, prefill=0.001, qw=0.05)
+    # qw + plen * prefill_rate + (ntok + queued) * decode_rate
+    assert est.estimate_s(100, 10) == pytest.approx(0.25)
+    assert est.estimate_s(100, 10, queued_tokens=5) == pytest.approx(0.30)
+    assert est.queue_wait_s() == pytest.approx(0.05)
+    assert est.prefill_tok_s() == pytest.approx(0.001)
+    assert est.decode_tok_s() == pytest.approx(0.01)
+
+
+def test_estimator_drops_hostile_observations():
+    est = _est(decode=0.01)
+    before = est.estimate_s(64, 64)
+    for bad in (float("nan"), float("inf"), -1.0, None, "oops"):
+        est.observe_queue_wait(bad)
+        est.observe_decode_step(bad)
+        est.observe_prefill(64, bad)
+    est.observe_prefill(0, 0.5)  # zero-length prompt: no rate to learn
+    assert est.estimate_s(64, 64) == before
+
+
+def test_fit_tokens_is_the_degrade_target():
+    est = _est(decode=0.01)
+    assert est.fit_tokens(0, 0.055) == 5
+    # fixed cost (queue wait) already exceeds the budget: nothing fits
+    assert _est(decode=0.01, qw=0.1).fit_tokens(0, 0.05) == 0
+    # free decode (cold estimator): any budget fits
+    assert CompletionEstimator().fit_tokens(0, 1.0) == 1 << 30
+    assert est.fit_tokens(0, float("nan")) == 0
+
+
+def test_seed_from_histograms_warm_starts_the_model():
+    est = CompletionEstimator()
+    n = est.seed_from_histograms(
+        {
+            "serve_queue_wait_s": [0.05] * 3,
+            "serve_prefill_s": [0.1] * 3,
+            "serve_decode_step_s": [0.01] * 3,
+        },
+        nominal_prompt_len=100,
+    )
+    assert n == 9
+    assert est.estimate_s(100, 10) == pytest.approx(0.25)
+    assert CompletionEstimator().seed_from_histograms({}) == 0
+
+
+# ---------------------------------------------------------------------------
+# DeadlineAdmission: the shed/degrade/admit verdict
+# ---------------------------------------------------------------------------
+
+
+def test_admission_verdicts_by_budget():
+    adm = DeadlineAdmission(_est(decode=0.01))
+    assert adm.decide(_req(0, gen=10, budget=1.0)).action == ADMIT
+    d = adm.decide(_req(1, gen=10, budget=0.055))
+    assert (d.action, d.fit_tokens) == (DEGRADE, 5)
+    assert adm.decide(_req(2, gen=10, budget=0.004)).action == SHED
+    # the degrade floor: below min_tokens a truncation becomes a shed
+    strict = DeadlineAdmission(_est(decode=0.01), min_tokens=6)
+    assert strict.decide(_req(3, gen=10, budget=0.055)).action == SHED
+
+
+def test_admission_exempts_continuations_and_unbudgeted():
+    adm = DeadlineAdmission(_est(decode=0.01))
+    assert adm.exempt(_req(0, budget=None))
+    import types
+
+    cont = _req(1, budget=1e-12)
+    # a rerouted continuation (generated prefix carried): budget already spent
+    cont._carry = types.SimpleNamespace(generated=[7, 7])
+    assert adm.exempt(cont)
+    assert adm.decide(cont).action == ADMIT
+
+
+def test_at_risk_flags_only_admitted_requests_above_threshold():
+    adm = DeadlineAdmission(_est(decode=0.01), hedge_threshold=0.5)
+    risky = _req(0, gen=10, budget=0.15)  # est 0.1 > 0.5 * 0.15
+    assert adm.at_risk(adm.decide(risky), risky)
+    safe = _req(1, gen=10, budget=0.30)  # est 0.1 <= 0.5 * 0.30
+    assert not adm.at_risk(adm.decide(safe), safe)
+    tight = _req(2, gen=10, budget=0.055)  # degraded: never hedged
+    assert not adm.at_risk(adm.decide(tight), tight)
+    disarmed = DeadlineAdmission(_est(decode=0.01))  # threshold 0: off
+    assert not disarmed.at_risk(disarmed.decide(risky), risky)
+
+
+def test_admission_validates_knobs():
+    with pytest.raises(ValueError, match="min_tokens"):
+        DeadlineAdmission(CompletionEstimator(), min_tokens=0)
+    with pytest.raises(ValueError, match="hedge_threshold"):
+        DeadlineAdmission(CompletionEstimator(), hedge_threshold=1.5)
+
+
+# ---------------------------------------------------------------------------
+# CellRouter admission: sheds exactly the over-budget set, degraded
+# requests finish inside budget
+# ---------------------------------------------------------------------------
+
+
+def test_cell_router_sheds_exactly_the_over_budget_requests():
+    events = []
+    router = CellRouter(
+        [TimedCell(decode_tok_s=0.01)],
+        admission=DeadlineAdmission(_est(decode=0.01)),
+        on_trace=lambda name, **tags: events.append((name, tags)),
+    )
+    # one cell, decode 0.01 s/tok, every request (prompt 8, gen 10):
+    # queued_tokens at judge time is the cell's routed load so far
+    budgets = [10.0, 0.5, 0.2, 0.45, 0.1]
+    picks = [router.submit(_req(i, budget=b)) for i, b in enumerate(budgets)]
+    # rid2 (0.36s fixed > 0.2) and rid4 (0.52s fixed > 0.1) cannot fit even
+    # truncated; rid3 fits 8 of its 10 tokens and is degraded instead
+    assert picks == [0, 0, -1, 0, -1]
+    assert router.deadline_shed == [2, 4]
+    assert router.deadline_degraded == 1
+    assert [n for n, _ in events] == [
+        "serve.shed_deadline", "serve.degrade_deadline", "serve.shed_deadline",
+    ]
+    outs = _drain(router)
+    assert sorted(o.rid for o in outs) == [0, 1, 3]
+    # every admitted/degraded request made its budget (the estimator is
+    # conservative: it charges queued prompt tokens at the decode rate)
+    assert count_misses(outs) == 0
+    assert router.deadline_miss == 0
+    assert router.stats()["deadline_shed"] == 2
+
+
+def test_degraded_request_finishes_inside_its_budget():
+    router = CellRouter(
+        [TimedCell(decode_tok_s=0.01)],
+        admission=DeadlineAdmission(_est(decode=0.01)),
+    )
+    router.submit(_req(0, gen=100, budget=0.5))  # est 1.0s: over budget
+    assert router.deadline_degraded == 1
+    (out,) = _drain(router)
+    assert 0 < len(out.tokens) < 100  # a truncated answer, not a late one
+    assert out.finish_time <= out.arrival_time + 0.5
+    assert count_misses([out]) == 0
+
+
+def test_serve_router_admission_sheds_and_degrades():
+    """The replica tier enforces the same policy one level down."""
+    from concurrency_utils import FakeReplica
+
+    router = ServeRouter([FakeReplica()],
+                         admission=DeadlineAdmission(_est(decode=0.01)))
+    assert router.submit(_req(0, budget=10.0)) == 0
+    degraded = _req(1, gen=100, budget=0.5)
+    assert router.submit(degraded) == 0
+    assert degraded.max_new_tokens < 100
+    assert router.submit(_req(2, budget=1e-6)) == -1
+    s = router.stats()
+    assert s["deadline_shed"] == 1 and s["deadline_degraded"] == 1
+
+
+# ---------------------------------------------------------------------------
+# hedged dispatch: fires only above the risk threshold, first win cancels
+# the loser, exactly one output per rid, bitwise-equal to unhedged
+# ---------------------------------------------------------------------------
+
+
+def _hedge_pair():
+    cells = [TimedCell(decode_tok_s=0.01), TimedCell(decode_tok_s=0.01)]
+    router = CellRouter(
+        cells,
+        admission=DeadlineAdmission(_est(decode=0.01), hedge_threshold=0.5),
+    )
+    return cells, router
+
+
+def test_hedge_fires_only_above_risk_threshold():
+    (c0, c1), router = _hedge_pair()
+    router.submit(_req(0, budget=1.0))  # est 0.1 <= 0.5: plain admission
+    assert router.hedges == 0
+    router.submit(_req(1, budget=0.15))  # est 0.1 > 0.075: at risk
+    assert router.hedges == 1
+    # the duplicate landed on the *other* cell
+    assert {r.rid for r in c0.queue} == {0, 1}
+    assert {r.rid for r in c1.queue} == {1}
+
+
+def test_first_win_cancels_loser_one_output_per_rid():
+    (c0, c1), router = _hedge_pair()
+    router.submit(_req(0, budget=1.0))
+    router.submit(_req(1, budget=0.15))
+    outs = _drain(router)
+    # exactly one output per rid: the hedged pair collapsed to its winner
+    assert sorted(o.rid for o in outs) == [0, 1]
+    assert router.hedge_wins == 1 and router.hedge_cancels == 1
+    assert router.hedge_dropped == 0
+    assert c0.cancelled == [1]  # the loser copy never produced output
+    assert router.stats()["hedges"] == 1
+
+
+def test_hedged_outputs_bitwise_equal_to_unhedged():
+    _, hedged = _hedge_pair()
+    reqs = [(0, 1.0), (1, 0.15), (2, 0.5)]
+    for rid, b in reqs:
+        hedged.submit(_req(rid, budget=b))
+    assert hedged.hedges >= 1
+    plain = CellRouter([TimedCell(decode_tok_s=0.01)])
+    for rid, b in reqs:
+        plain.submit(_req(rid, budget=b))
+    got = {o.rid: o.tokens for o in _drain(hedged)}
+    want = {o.rid: o.tokens for o in _drain(plain)}
+    assert got == want  # hedging changed placement, never a single token
+    assert want[0] == tokens_for(0, 10)
+
+
+def test_straggler_twin_output_is_dropped_not_double_counted():
+    """When the loser cell cannot cancel (its copy is already past the
+    queue), the straggler output is swallowed by the first-win gate."""
+
+    class _NoCancelCell(TimedCell):
+        cancel = None  # duck-typing: this cell offers no cancel path
+
+    c0, c1 = TimedCell(decode_tok_s=0.01), _NoCancelCell(decode_tok_s=0.01)
+    router = CellRouter(
+        [c0, c1],
+        admission=DeadlineAdmission(_est(decode=0.01), hedge_threshold=0.5),
+    )
+    router.submit(_req(0, budget=0.15))  # hedged: copies on both cells
+    assert router.hedges == 1
+    outs = _drain(router)  # c0 wins; c1 still runs its copy to completion
+    assert [o.rid for o in outs] == [0]
+    assert router.hedge_wins == 1 and router.hedge_dropped == 1
+    assert router.hedge_cancels == 0  # no cancel path: drop, don't deliver
+    assert len(c0.completed) + len(c1.completed) == 2  # both ran; one won
+
+
+def test_drain_continuations_collapses_hedged_pairs():
+    """A preempt-mid-hedge hand-off replays each rid once, not twice."""
+    _, router = _hedge_pair()
+    router.submit(_req(0, budget=0.15))
+    assert router.hedges == 1
+    conts = router.drain_continuations()
+    assert [c.rid for c in conts] == [0]
+    assert router.hedge_dropped == 1
+
+
+# ---------------------------------------------------------------------------
+# twin runs: byte-identical canonical span sequences
+# ---------------------------------------------------------------------------
+
+
+def _seeded_span_run():
+    vc = VirtualClock()
+    tracer = Tracer(clock=vc)
+    root = tracer.start("serve.cells", job="dl-twin")
+    router = CellRouter(
+        [TimedCell(decode_tok_s=0.01), TimedCell(decode_tok_s=0.01)],
+        admission=DeadlineAdmission(_est(decode=0.01), hedge_threshold=0.5),
+        on_trace=lambda name, **tags: tracer.event(root, name, **tags),
+    )
+    router.submit(_req(0, budget=0.15))  # at risk: hedged
+    vc.advance(0.01)
+    router.submit(_req(1, budget=0.05))  # cannot fit behind rid0: shed
+    vc.advance(0.01)
+    outs = _drain(router)
+    tracer.end(root)
+    return tracer.sequence(), outs
+
+
+def test_twin_runs_are_byte_identical_including_deadline_events():
+    seq_a, outs_a = _seeded_span_run()
+    seq_b, outs_b = _seeded_span_run()
+    assert seq_a == seq_b  # canonical spans: byte-equal across the twins
+    assert [(o.rid, o.tokens, o.finish_time) for o in outs_a] == \
+        [(o.rid, o.tokens, o.finish_time) for o in outs_b]
+    joined = "\n".join(seq_a)
+    assert "serve.hedge" in joined
+    assert "serve.shed_deadline" in joined
+    assert "serve.hedge_win" in joined
+
+
+# ---------------------------------------------------------------------------
+# predictive autoscaling: forecast arrival rate -> replica target
+# ---------------------------------------------------------------------------
+
+
+def test_forecaster_rate_and_slope_extrapolation():
+    fc = ArrivalForecaster(window_s=1.0, horizon_s=0.5)
+    for t in (0.1, 0.5):
+        fc.record(t)
+    for k in range(10):
+        fc.record(1.05 + 0.1 * k)
+    assert fc.rate(2.0) == pytest.approx(10.0)
+    # recent 10/s, previous 2/s: slope 8/s^2 over half a second ahead
+    assert fc.forecast(2.0) == pytest.approx(14.0)
+
+
+def test_forecaster_decay_clamps_at_zero_and_trims():
+    fc = ArrivalForecaster(window_s=1.0, horizon_s=1.0)
+    for t in (0.2, 0.4, 0.6):
+        fc.record(t)
+    fc.record(float("nan"))  # hostile input: ignored
+    assert fc.forecast(2.0) == 0.0  # burst over; negative slope clamps
+    fc.forecast(100.0)  # far future: everything falls out of the window
+    assert fc.rate(100.0) == 0.0 and fc._times == []
+    with pytest.raises(ValueError, match="window_s"):
+        ArrivalForecaster(window_s=0.0)
+
+
+def test_advise_replicas_predictive_littles_law():
+    # 14 req/s * 1.2 headroom * 0.1s service = 1.68 in flight -> 2 replicas
+    assert advise_replicas_predictive(14.0, 0.1, 1) == 2
+    assert advise_replicas_predictive(14.0, 0.1, 1, per_replica_slots=4) == 1
+    assert advise_replicas_predictive(100.0, 1.0, 1, max_replicas=3) == 3
+    assert advise_replicas_predictive(0.0, 0.1, 3) == 1  # idle: to the floor
+    # degenerate inputs hold the current count (clamped), never crash
+    assert advise_replicas_predictive(float("nan"), 0.1, 2) == 2
+    assert advise_replicas_predictive(5.0, 0.0, 2, max_replicas=8) == 2
+
+
+def test_cell_router_predictive_autoscale_follows_forecast():
+    est = _est(decode=0.01)
+    cell = TimedCell(decode_tok_s=0.01)
+    router = CellRouter(
+        [cell],
+        admission=DeadlineAdmission(est),
+        forecaster=ArrivalForecaster(window_s=1.0, horizon_s=0.5),
+        per_replica_slots=1,
+    )
+    arrivals = [0.1, 0.5] + [1.05 + 0.1 * k for k in range(10)]
+    for i, t in enumerate(arrivals):
+        router.submit(_req(i, budget=100.0, arrival=t))
+    # forecast 14/s, typical service 0.1s, headroom 1.2 -> 2 replicas
+    assert router.autoscale(now=2.0) == [(0, 1, 2)]
+    assert cell.scale_calls == [2]
+    # without a time base (now=inf) predictive mode stays off: the legacy
+    # hysteresis policy needs a sustained window, so one sample holds
+    cell2 = TimedCell(decode_tok_s=0.01)
+    router2 = CellRouter(
+        [cell2], admission=DeadlineAdmission(_est(decode=0.01)),
+        forecaster=ArrivalForecaster(),
+    )
+    for i in range(12):
+        router2.submit(_req(i, budget=100.0))
+    assert router2.autoscale() == []
+    assert cell2.scale_calls == []
+
+
+# ---------------------------------------------------------------------------
+# count_misses: the one accounting rule everything shares
+# ---------------------------------------------------------------------------
+
+
+def test_count_misses_rule():
+    def out(rid, budget, finish, arrival=0.0):
+        return RequestOutput(rid=rid, prompt_len=1, tokens=[0],
+                             arrival_time=arrival, token_times=[finish],
+                             deadline_s=budget)
+
+    outs = [
+        out(0, None, 99.0),  # no budget: never a miss
+        out(1, 1.0, 0.5),  # on time
+        out(2, 1.0, 1.5),  # late
+        out(3, 1.0, 3.0, arrival=2.5),  # budget counts from *arrival*
+    ]
+    assert count_misses(outs) == 1
+    assert count_misses(outs, slack_s=1.0) == 0

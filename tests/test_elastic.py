@@ -467,3 +467,42 @@ def test_batched_shrink_offers_coordinate_to_seat_wide_job(stub):
     assert ra.metrics["sizes"][:2] == [4, 2] and rb.metrics["sizes"] == [4, 2]
     assert ra.metrics["units"] == list(range(6))
     assert rb.metrics["units"] == list(range(6))
+
+
+# ---------------------------------------------------------------------------
+# controller cadence: steps follow the platform clock, not the wait loop
+# ---------------------------------------------------------------------------
+
+
+def test_elastic_cadence_follows_platform_clock_not_loop_rate():
+    """Regression for the wall-clock rate limiter: with a chaos plan
+    armed, the executor wait loop wakes at the *chaos* poll (far shorter
+    than ``elastic_poll_s``) and the old ``time.monotonic`` delta guard
+    made the controller's step count depend on how fast the loop spun —
+    nondeterministic under an injected virtual clock.  The cadence now
+    runs on the platform clock against an absolute schedule: however
+    often ``maybe_step`` is called, the controller steps exactly once
+    per elapsed ``poll_s`` of platform time, so step counts are
+    pinnable."""
+    from concurrency_utils import VirtualClock
+
+    vc = VirtualClock()
+    p = Platform(total_devices=2, clock=vc, elastic_poll_s=0.05)
+    # spin like a chaos-shortened wait loop: 10 wakeups per poll period
+    for _ in range(200):
+        p.elastic.maybe_step()
+        vc.advance(0.005)
+    assert p.elastic.steps_taken == 20  # 1.0s of platform time / 0.05
+
+    # a second run with a *different* loop rate lands on the same count
+    vc2 = VirtualClock()
+    p2 = Platform(total_devices=2, clock=vc2, elastic_poll_s=0.05)
+    for _ in range(1000):
+        p2.elastic.maybe_step()
+        vc2.advance(0.001)
+    assert p2.elastic.steps_taken == 20
+
+    # unconfigured controller (poll_s=None) never steps from the loop
+    p3 = Platform(total_devices=2, clock=VirtualClock())
+    assert p3.elastic.maybe_step() == []
+    assert p3.elastic.steps_taken == 0

@@ -480,6 +480,32 @@ def test_multi_replica_serve_job_routes_over_replicas():
     assert sorted(rep.metrics["replica_routed"]) == [2, 2]
 
 
+def test_serve_job_with_deadline_budget_reports_deadline_metrics():
+    """ServeJobConfig.deadline_s threads through the driver into the cell
+    router: with a generous budget on a smoke-scale job nothing is shed,
+    degraded or missed, every token is delivered, and the deadline
+    accounting lands in the JobReport metrics."""
+    from repro.platform import ServeJobConfig
+
+    p = Platform(total_devices=4)
+    rep = p.wait(p.submit(JobSpec(
+        kind="serve", name="slo",
+        config=ServeJobConfig(arch="qwen2-0.5b", batch=4, prompt_len=12,
+                              gen=6, engine="continuous", page_size=8,
+                              seq=64, slots=2, cells=2,
+                              deadline_s=60.0, hedge_threshold=0.9),
+        devices=4,
+    )), timeout_s=300.0)
+    assert rep.state == DONE, rep.error
+    assert rep.metrics["tokens"] == 4 * 6
+    assert rep.metrics["deadline_miss"] == 0
+    assert rep.metrics["deadline_shed"] == 0
+    assert rep.metrics["deadline_degraded"] == 0
+    # the router-level counters made it into the report too
+    assert rep.metrics["replica_deadline_miss"] == 0
+    assert rep.metrics["replica_deadline_shed"] == 0
+
+
 def test_replicas_validation_rejects_static_engine():
     p = Platform(total_devices=4)
     with pytest.raises(ValueError, match="replicas"):
