@@ -50,6 +50,20 @@ def load_miss_rates(path: str) -> dict[str, float]:
     return out
 
 
+def load_tps(path: str) -> dict[str, float]:
+    """The tokens/sec column: rows whose ``derived`` string carries a
+    ``tps=<float>`` figure (the serving fast-path legs).  Unlike wall
+    clock, higher is better — the regression direction inverts."""
+    out: dict[str, float] = {}
+    with open(path) as f:
+        data = json.load(f)
+    for r in data.get("results", []):
+        m = re.search(r"\btps=([0-9.]+)", r.get("derived", "") or "")
+        if m:
+            out[r["name"]] = float(m.group(1))
+    return out
+
+
 def load_meta(path: str) -> dict:
     """The ``meta`` provenance header (git sha, date, platform, devices);
     empty for pre-header snapshots."""
@@ -76,10 +90,15 @@ def compare(
     old_miss: dict[str, float] | None = None,
     new_miss: dict[str, float] | None = None,
     miss_threshold: float = 0.05,
+    old_tps: dict[str, float] | None = None,
+    new_tps: dict[str, float] | None = None,
+    tps_threshold: float = 0.2,
 ) -> tuple[list[str], list[str], list[str]]:
     """Returns (report lines, gate-able warnings, informational notices)."""
     old_miss = old_miss or {}
     new_miss = new_miss or {}
+    old_tps = old_tps or {}
+    new_tps = new_tps or {}
     lines, warnings, notices = [], [], []
     shared = sorted(n for n in new if n.startswith(prefix) and n in old)
     for name in shared:
@@ -105,9 +124,21 @@ def compare(
                     f"miss rate {om:.3f} -> {nm:.3f} "
                     f"(threshold +{miss_threshold:.3f} absolute)"
                 )
+        tps_col = ""
+        if name in old_tps and name in new_tps:
+            ot, nt = old_tps[name], new_tps[name]
+            tps_col = f" tps {ot:.0f} -> {nt:.0f}"
+            if nt < ot * (1.0 - tps_threshold):  # higher tps is better
+                verdict = "REGRESSION"
+                warnings.append(
+                    f"::warning title=tokens/sec regression::{name} "
+                    f"tps {ot:.0f} -> {nt:.0f} "
+                    f"({nt / max(ot, 1e-9):.2f}x, floor "
+                    f"{1.0 - tps_threshold:.2f}x)"
+                )
         lines.append(
             f"{name}: {old[name] / 1e6:.2f}s -> {new[name] / 1e6:.2f}s "
-            f"({ratio:.2f}x){miss_col} {verdict}"
+            f"({ratio:.2f}x){miss_col}{tps_col} {verdict}"
         )
     added = sorted(n for n in new if n.startswith(prefix) and n not in old)
     for name in added:
@@ -147,6 +178,10 @@ def main(argv=None) -> int:
                     help="absolute deadline-miss-rate increase that counts "
                          "as a regression on rows carrying a miss_rate= "
                          "column (default: 0.05)")
+    ap.add_argument("--tps-threshold", type=float, default=0.2,
+                    help="relative tokens/sec drop that counts as a "
+                         "regression on rows carrying a tps= column "
+                         "(default: 0.2 = 20%% below previous)")
     args = ap.parse_args(argv)
 
     lines, warnings, notices = compare(
@@ -155,6 +190,9 @@ def main(argv=None) -> int:
         old_miss=load_miss_rates(args.old),
         new_miss=load_miss_rates(args.new),
         miss_threshold=args.miss_threshold,
+        old_tps=load_tps(args.old),
+        new_tps=load_tps(args.new),
+        tps_threshold=args.tps_threshold,
     )
     print(f"# perf trajectory: {args.old} -> {args.new}")
     print(f"#   old: {describe_meta(load_meta(args.old))}")

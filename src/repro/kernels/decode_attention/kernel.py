@@ -102,6 +102,148 @@ def _paged_decode_kernel(
         o_ref[0, 0] = (acc / denom[:, None]).astype(o_ref.dtype)
 
 
+def _paged_decode_qtok_kernel(
+    tables_ref,  # scalar prefetch: (B, n_pages) int32 page ids
+    lens_ref,  # scalar prefetch: (B,) int32 cached tokens (window starts here)
+    q_ref,  # (1, 1, Q*G, hd) — window tokens × query group, row r = j*G + g
+    k_ref,  # (1, page, 1, hd) — page tables_ref[b, ip], kv head h
+    v_ref,  # (1, page, 1, hd)
+    kn_ref,  # (1, Q, 1, hd) window tokens' keys, kv head h
+    vn_ref,  # (1, Q, 1, hd)
+    o_ref,  # (1, 1, Q*G, hd)
+    m_scr,  # (Q*G,) fp32 running max
+    l_scr,  # (Q*G,) fp32 running sum
+    acc_scr,  # (Q*G, hd) fp32 output accumulator
+    *,
+    scale: float,
+    page_size: int,
+    n_pages: int,
+    group: int,
+):
+    """Q-token window generalization of ``_paged_decode_kernel``: window
+    token ``j`` sits at position ``seq_len + j``, so every window row sees
+    the whole cache (pages phase is identical — the mask ``pos < seq_len``
+    holds for all of them) and the finalize step merges the Q window keys
+    under an intra-window causal mask (row ``j`` attends cols ``j' <= j``).
+    Serves speculative k-token verification (Q = 1 + drafts) and chunked
+    prefill (Q = chunk) with one schedule."""
+    b, ip = pl.program_id(0), pl.program_id(2)
+    seq_len = lens_ref[b]
+
+    @pl.when(ip == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(ip * page_size < seq_len)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)  # (QG, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)  # (page, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (QG, page)
+        pos = ip * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, dimension=1
+        )
+        s = jnp.where(pos < seq_len, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ip == n_pages - 1)
+    def _finalize():
+        q = q_ref[0, 0].astype(jnp.float32)  # (QG, hd)
+        kn = kn_ref[0, :, 0].astype(jnp.float32)  # (Q, hd)
+        vn = vn_ref[0, :, 0].astype(jnp.float32)
+        sn = jax.lax.dot_general(
+            q, kn, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (QG, Q)
+        row_tok = (
+            jax.lax.broadcasted_iota(jnp.int32, sn.shape, dimension=0) // group
+        )
+        col_tok = jax.lax.broadcasted_iota(jnp.int32, sn.shape, dimension=1)
+        sn = jnp.where(col_tok <= row_tok, sn, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(sn, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        pn = jnp.exp(sn - m_new[:, None])
+        denom = l_scr[...] * alpha + jnp.sum(pn, axis=1)
+        acc = acc_scr[...] * alpha[:, None] + jax.lax.dot(
+            pn, vn, preferred_element_type=jnp.float32
+        )
+        o_ref[0, 0] = (acc / denom[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_qtok_fwd(
+    q: jax.Array,  # (B, Hkv, Q*G, hd) — window-major rows: r = j*G + g
+    k_pages: jax.Array,  # (P, page, Hkv, hd) shared page pool (last page = null)
+    v_pages: jax.Array,
+    k_new: jax.Array,  # (B, Q, Hkv, hd) window tokens
+    v_new: jax.Array,
+    block_tables: jax.Array,  # (B, n_pages) int32, null-page-padded
+    seq_lens: jax.Array,  # (B,) int32 cached tokens (window begins here)
+    *,
+    group: int,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hkv, QG, hd = q.shape
+    Q = k_new.shape[1]
+    assert QG == Q * group
+    page_size = k_pages.shape[1]
+    n_pages = block_tables.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(
+        _paged_decode_qtok_kernel,
+        scale=scale,
+        page_size=page_size,
+        n_pages=n_pages,
+        group=group,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, QG, hd), lambda b, h, ip, tr, lr: (b, h, 0, 0)),
+            pl.BlockSpec(
+                (1, page_size, 1, hd), lambda b, h, ip, tr, lr: (tr[b, ip], 0, h, 0)
+            ),
+            pl.BlockSpec(
+                (1, page_size, 1, hd), lambda b, h, ip, tr, lr: (tr[b, ip], 0, h, 0)
+            ),
+            pl.BlockSpec((1, Q, 1, hd), lambda b, h, ip, tr, lr: (b, 0, h, 0)),
+            pl.BlockSpec((1, Q, 1, hd), lambda b, h, ip, tr, lr: (b, 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, QG, hd), lambda b, h, ip, tr, lr: (b, h, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((QG,), jnp.float32),
+            pltpu.VMEM((QG,), jnp.float32),
+            pltpu.VMEM((QG, hd), jnp.float32),
+        ],
+    )
+    kwargs = {}
+    params = tpu_compiler_params(("parallel", "parallel", "arbitrary"))
+    if params is not None:
+        kwargs["compiler_params"] = params
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, QG, hd), q.dtype),
+        interpret=interpret,
+        **kwargs,
+    )(block_tables, seq_lens, q, k_pages, v_pages, k_new, v_new)
+
+
 def paged_decode_fwd(
     q: jax.Array,  # (B, Hkv, G, hd) — query heads grouped under their kv head
     k_pages: jax.Array,  # (P, page, Hkv, hd) shared page pool (last page = null)

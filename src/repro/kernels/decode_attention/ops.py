@@ -19,28 +19,45 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attention.kernel import paged_decode_fwd
-from repro.kernels.decode_attention.ref import paged_decode_ref
+from repro.kernels.decode_attention.kernel import (
+    paged_decode_fwd,
+    paged_decode_qtok_fwd,
+)
+from repro.kernels.decode_attention.ref import (
+    paged_decode_qtok_ref,
+    paged_decode_ref,
+)
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
 def paged_decode_attention(
-    q: jax.Array,  # (B, 1, Hq, hd)
+    q: jax.Array,  # (B, Q, Hq, hd) — Q-token window starting at seq_len
     k_pages: jax.Array,  # (P, page, Hkv, hd) — pool; last page is the null page
     v_pages: jax.Array,
-    k_new: jax.Array,  # (B, 1, Hkv, hd) current token (not yet in the pool)
+    k_new: jax.Array,  # (B, Q, Hkv, hd) window tokens (not yet in the pool)
     v_new: jax.Array,
     block_tables: jax.Array,  # (B, n_pages) int32
-    seq_lens: jax.Array,  # (B,) int32 live tokens strictly below the query
+    seq_lens: jax.Array,  # (B,) int32 live tokens strictly below the window
     *,
     use_kernel: bool | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Returns (B, 1, Hq, hd) attention over [paged cache | current token]."""
+    """Returns (B, Q, Hq, hd) attention over [paged cache | causal window].
+
+    ``Q == 1`` is classic decode (one current token merged analytically);
+    ``Q > 1`` is the fast-path window — speculative verification and/or a
+    chunked-prefill slab — where window token ``j`` attends the cache plus
+    window tokens ``j' <= j``.
+    """
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
+    Q = q.shape[1]
     if not use_kernel:
-        return paged_decode_ref(
+        if Q == 1:
+            return paged_decode_ref(
+                q, k_pages, v_pages, k_new, v_new, block_tables, seq_lens
+            )
+        return paged_decode_qtok_ref(
             q, k_pages, v_pages, k_new, v_new, block_tables, seq_lens
         )
     if interpret is None:
@@ -48,15 +65,32 @@ def paged_decode_attention(
     B, _, Hq, hd = q.shape
     Hkv = k_pages.shape[2]
     G = Hq // Hkv
-    qg = q.reshape(B, Hkv, G, hd)  # heads grouped under their kv head
-    out = paged_decode_fwd(
+    if Q == 1:
+        qg = q.reshape(B, Hkv, G, hd)  # heads grouped under their kv head
+        out = paged_decode_fwd(
+            qg,
+            k_pages,
+            v_pages,
+            k_new[:, 0],
+            v_new[:, 0],
+            block_tables.astype(jnp.int32),
+            seq_lens.astype(jnp.int32),
+            interpret=interpret,
+        )
+        return out.reshape(B, 1, Hq, hd)
+    # window-major rows per kv head: (B, Hkv, Q*G, hd), row r = j*G + g
+    qg = q.reshape(B, Q, Hkv, G, hd).transpose(0, 2, 1, 3, 4)
+    qg = qg.reshape(B, Hkv, Q * G, hd)
+    out = paged_decode_qtok_fwd(
         qg,
         k_pages,
         v_pages,
-        k_new[:, 0],
-        v_new[:, 0],
+        k_new,
+        v_new,
         block_tables.astype(jnp.int32),
         seq_lens.astype(jnp.int32),
+        group=G,
         interpret=interpret,
     )
-    return out.reshape(B, 1, Hq, hd)
+    out = out.reshape(B, Hkv, Q, G, hd).transpose(0, 2, 1, 3, 4)
+    return out.reshape(B, Q, Hq, hd)

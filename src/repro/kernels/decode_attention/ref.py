@@ -25,6 +25,56 @@ def gather_pages(
     return dense.reshape(B, n_pages * page, Hkv, hd)
 
 
+def paged_decode_qtok_ref(
+    q: jax.Array,  # (B, Q, Hq, hd) — Q-token window starting at seq_len
+    k_pages: jax.Array,  # (P, page, Hkv, hd)
+    v_pages: jax.Array,
+    k_new: jax.Array,  # (B, Q, Hkv, hd) window tokens' K (not yet in pool)
+    v_new: jax.Array,
+    block_tables: jax.Array,  # (B, n_pages)
+    seq_lens: jax.Array,  # (B,)
+    *,
+    scores_dtype=jnp.float32,
+) -> jax.Array:
+    """Multi-query-token oracle: window token ``j`` sits at position
+    ``seq_len + j`` and attends to every cached position (< seq_len) plus
+    window tokens ``j' <= j`` (intra-window causal).  Serves speculative
+    k-token verification and chunked prefill; ``Q == 1`` degenerates to
+    ``paged_decode_ref``'s math."""
+    B, Q, Hq, hd = q.shape
+    ck = gather_pages(k_pages, block_tables)  # (B, S, Hkv, hd)
+    cv = gather_pages(v_pages, block_tables)
+    S, Hkv = ck.shape[1], ck.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Q, Hkv, G, hd).astype(scores_dtype)
+    scale = jnp.asarray(1.0 / (hd ** 0.5), scores_dtype)
+    neg = jnp.finfo(scores_dtype).min / 2
+
+    sc = jnp.einsum("bqkgd,bskd->bkgqs", qg, ck.astype(scores_dtype)) * scale
+    cache_ok = jnp.arange(S, dtype=jnp.int32)[None, :] < seq_lens[:, None]
+    sc = jnp.where(cache_ok[:, None, None, None, :], sc, neg)
+    sn = jnp.einsum(
+        "bqkgd,bukd->bkgqu", qg, k_new.astype(scores_dtype)
+    ) * scale
+    win_ok = (
+        jnp.arange(Q, dtype=jnp.int32)[None, :]
+        <= jnp.arange(Q, dtype=jnp.int32)[:, None]
+    )
+    sn = jnp.where(win_ok[None, None, None], sn, neg)
+
+    s = jnp.concatenate([sc, sn], axis=-1)  # (B, Hkv, G, Q, S+Q)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / denom
+    out = jnp.einsum(
+        "bkgqs,bskd->bqkgd", p[..., :S], cv.astype(scores_dtype)
+    ) + jnp.einsum(
+        "bkgqu,bukd->bqkgd", p[..., S:], v_new.astype(scores_dtype)
+    )
+    return out.reshape(B, Q, Hq, hd).astype(q.dtype)
+
+
 def paged_decode_ref(
     q: jax.Array,  # (B, 1, Hq, hd)
     k_pages: jax.Array,  # (P, page, Hkv, hd)

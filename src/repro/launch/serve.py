@@ -61,6 +61,17 @@ def main(argv=None):
                     help="scale replicas on the forecast arrival rate "
                          "instead of queue-depth hysteresis "
                          "(needs --max-replicas > --replicas)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: draft up to k tokens per "
+                         "step from an n-gram proposer and verify them in "
+                         "one decode (0 disables; greedy slots only)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share full prompt-prefix K/V pages across "
+                         "requests (refcounted, copy-on-write tails)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="fold prefill into the decode step, at most this "
+                         "many prompt tokens per step per slot (0 keeps "
+                         "bucketed whole-prompt prefill)")
     ap.add_argument("--vocab", type=int, default=512, help="smoke-scale vocab")
     ap.add_argument("--seq", type=int, default=512,
                     help="smoke-scale max_seq_len (match the train job's "
@@ -84,6 +95,8 @@ def main(argv=None):
             deadline_min_tokens=args.deadline_min_tokens,
             hedge_threshold=args.hedge_threshold,
             predictive_autoscale=args.predictive_autoscale,
+            spec_k=args.spec_k, prefix_cache=args.prefix_cache,
+            prefill_chunk=args.prefill_chunk,
             vocab=args.vocab, seq=args.seq, ckpt_dir=args.ckpt_dir,
         ),
         devices=args.job_devices,

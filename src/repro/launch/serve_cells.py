@@ -83,6 +83,8 @@ def _cell_spec(args, ci: int, devices: int, batch: int, suffix: str = "") -> Job
                 args.predictive_autoscale
                 and args.max_replicas > args.replicas
             ),
+            spec_k=args.spec_k, prefix_cache=args.prefix_cache,
+            prefill_chunk=args.prefill_chunk,
         ),
         devices=devices,
         priority=args.priority,
@@ -110,6 +112,14 @@ def main(argv=None):
     ap.add_argument("--predictive-autoscale", action="store_true",
                     help="cells scale replicas on forecast arrival rate "
                          "(needs --max-replicas above --replicas)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding inside each cell's engines "
+                         "(0 disables)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share prompt-prefix K/V pages inside each cell")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="fused chunked prefill budget per step per slot "
+                         "(0 keeps bucketed prefill)")
     ap.add_argument("--cells", default="auto",
                     help="cell count, or 'auto' to derive from free runs")
     ap.add_argument("--devices-per-cell", type=int, default=2)

@@ -289,13 +289,17 @@ class TransformerLM:
     def decode_step_paged(
         self, params, pages: PagedKVState, batch
     ) -> tuple[jax.Array, PagedKVState]:
-        """One token per slot against the paged pool.
+        """A Q-token window per slot against the paged pool.
 
-        ``batch``: tokens (B, 1); block_tables (B, n_pages) int32;
-        seq_lens (B,) int32 — the number of cached tokens per slot, which
-        is also the current token's position.  Inactive slots carry
+        ``batch``: tokens (B, Q); block_tables (B, n_pages) int32;
+        seq_lens (B,) int32 — the number of cached tokens per slot; window
+        token ``j`` sits at position ``seq_lens + j``.  ``Q == 1`` is
+        classic decode; ``Q > 1`` carries speculative drafts and/or a
+        chunked-prefill slab (intra-window causal).  Inactive slots carry
         all-null block-table rows, so their cache writes land in the null
-        page and their logits are ignored by the engine."""
+        page and their logits are ignored by the engine; window positions
+        past a slot's allocated pages scatter to the null page too (never
+        clamped onto a real page)."""
         cfg = self.cfg
         if cfg.rope_mode == "mrope":
             raise NotImplementedError("paged decode supports standard/none rope")
@@ -304,18 +308,27 @@ class TransformerLM:
         x = constrain(x, ("batch", "seq", "act_embed"))
         block_tables = batch["block_tables"].astype(jnp.int32)
         seq_lens = batch["seq_lens"].astype(jnp.int32)
-        q_pos = seq_lens[:, None]  # (B, 1)
+        Q = batch["tokens"].shape[1]
+        q_pos = seq_lens[:, None] + jnp.arange(Q, dtype=jnp.int32)[None, :]
         angles = None if cfg.rope_mode == "none" else layers.rope_angles(cfg, q_pos)
         x, nk, nv = run_layers_decode_paged(
             cfg, params["layers"], x, angles, q_pos, block_tables, seq_lens, pages
         )
-        # write every layer's new (k, v) into its page slot in one scatter
+        # write every layer's new (k, v) into its page slot in one scatter;
+        # jnp.take_along_axis clips out-of-range indices, which would alias a
+        # real page — mask overflowing window positions to the null page
+        # explicitly (the pool's last page, by init_paged_state convention)
         page_size = pages.k_pages.shape[2]
-        B = x.shape[0]
-        page_ids = block_tables[jnp.arange(B), seq_lens // page_size]  # (B,)
-        offs = seq_lens % page_size
-        nk = jnp.squeeze(nk, axis=2).astype(pages.k_pages.dtype)  # (L, B, kv, hd)
-        nv = jnp.squeeze(nv, axis=2).astype(pages.v_pages.dtype)
+        width = block_tables.shape[1]
+        null_page = pages.k_pages.shape[1] - 1
+        page_idx = q_pos // page_size  # (B, Q)
+        page_ids = jnp.take_along_axis(
+            block_tables, jnp.minimum(page_idx, width - 1), axis=1
+        )
+        page_ids = jnp.where(page_idx < width, page_ids, null_page)
+        offs = q_pos % page_size
+        nk = nk.astype(pages.k_pages.dtype)  # (L, B, Q, kv, hd)
+        nv = nv.astype(pages.v_pages.dtype)
         new_pages = PagedKVState(
             k_pages=pages.k_pages.at[:, page_ids, offs].set(nk),
             v_pages=pages.v_pages.at[:, page_ids, offs].set(nv),

@@ -184,8 +184,20 @@ def text_report(spans: Iterable, job: Optional[str] = None) -> str:
         else:
             dom_txt = "no stage spans"
         chaos_txt = f", {chaos} chaos events" if chaos else ""
+        # serving fast-path counters, if the serve driver stamped them
+        # onto its attempt spans (speculation / prefix sharing / fused
+        # chunked prefill activity, summed over attempts)
+        fast: dict[str, int] = {}
+        for s in js:
+            for (_, n, tags) in s.events:
+                if n == "serve.fastpath":
+                    for k, v in tags.items():
+                        fast[k] = fast.get(k, 0) + int(v)
+        fast_txt = (
+            ", fastpath " + " ".join(f"{k}={v}" for k, v in sorted(fast.items()))
+        ) if fast else ""
         lines.append(
             f"  {jname}: wall {wall:.3f}s over {attempts} attempt(s), "
-            f"{dom_txt}{chaos_txt}"
+            f"{dom_txt}{chaos_txt}{fast_txt}"
         )
     return "\n".join(lines)

@@ -20,6 +20,11 @@ serve_prefill_s         histogram  per-request prefill compute
 serve_decode_step_s     histogram  one engine decode step
 serve_ttft_s            histogram  arrival -> first token
 serve_tokens_per_s      histogram  per-attempt decode throughput
+serve_spec_proposed     counter    speculative draft tokens proposed
+serve_spec_accepted     counter    draft tokens accepted by verification
+serve_prefix_hits       counter    admissions that hit the prefix index
+serve_pages_shared      counter    K/V pages attached via prefix sharing
+serve_prefill_chunks    counter    prefill chunks fused into decode steps
 deadline_miss           counter    outputs delivered past their budget
 deadline_shed           counter    requests shed at deadline admission
 preempts / resumes      counter    scheduler preemption round-trips

@@ -1063,10 +1063,23 @@ class Platform:
 
     def _report_metrics(self, name: str, rec: _JobRecord) -> dict:
         """Driver metrics plus a per-job span-stage summary under "obs"
-        (count/total/p50/p99 per stage) when tracing is on."""
+        (count/total/p50/p99 per stage) when tracing is on.  Serving
+        fast-path counters (speculation / prefix sharing / chunked
+        prefill) ride the attempt spans as ``serve.fastpath`` events;
+        they are summed here into flat ``serve_*`` keys matching the
+        registry catalog, so a job report carries its own counts even
+        though the registry itself is platform-wide."""
         metrics = dict(rec.metrics)
         if self.tracer.enabled:
             spans = self.tracer.spans(name)
             if spans:
                 metrics["obs"] = stage_summary(spans)
+                fast: dict = {}
+                for sp in spans:
+                    for (_, ev_name, tags) in sp.events:
+                        if ev_name == "serve.fastpath":
+                            for k, v in tags.items():
+                                key = f"serve_{k}"
+                                fast[key] = fast.get(key, 0) + int(v)
+                metrics["obs"].update(fast)
         return metrics

@@ -619,6 +619,13 @@ class ServeJobConfig:
     # forecast arrival rate (windowed rate + slope, Little's-law sizing)
     # instead of queue-depth hysteresis (requires max_replicas > replicas)
     predictive_autoscale: bool = False
+    # serving fast path (continuous only; all default off — see
+    # serving.continuous): n-gram speculative decoding depth, prompt
+    # prefix-page sharing across requests, and the per-step chunked-prefill
+    # token budget folded into the decode program
+    spec_k: int = 0
+    prefix_cache: bool = False
+    prefill_chunk: int = 0
     vocab: int = 512  # smoke-scale vocab (must match a ckpt's train job)
     seq: int = 512  # smoke-scale max_seq_len (match the train job's --seq
     #                 when restoring from ckpt_dir; params depend on it)
@@ -684,6 +691,13 @@ class ServeDriver:
         ):
             raise ValueError(
                 "predictive_autoscale requires max_replicas > replicas"
+            )
+        if cfg.spec_k < 0 or cfg.prefill_chunk < 0:
+            raise ValueError("spec_k/prefill_chunk must be >= 0")
+        if (cfg.spec_k or cfg.prefix_cache or cfg.prefill_chunk) \
+                and cfg.engine != "continuous":
+            raise ValueError(
+                "spec_k/prefix_cache/prefill_chunk require engine='continuous'"
             )
         return cfg
 
@@ -809,7 +823,11 @@ class ServeDriver:
                         if "queue_wait_s" in info:
                             estimator.observe_queue_wait(info["queue_wait_s"])
                     elif stage == "decode":
-                        estimator.observe_decode_step(d)
+                        # fast-path steps emit several tokens per program
+                        # call; the estimator tracks seconds *per token*
+                        estimator.observe_decode_step(
+                            d, tokens=int(info.get("tokens") or 1)
+                        )
                 if obs is not None:
                     obs.observe(f"serve_{stage}_s", d)
                     if "queue_wait_s" in info:
@@ -847,6 +865,9 @@ class ServeDriver:
                     max_len=S + cfg.gen,
                     seed=next(seeds),
                     on_stage=stage_sink,
+                    spec_k=cfg.spec_k,
+                    prefix_cache=cfg.prefix_cache,
+                    prefill_chunk=cfg.prefill_chunk,
                 )
 
             cell_tier = cfg.cells > 1 or cfg.max_replicas > cfg.replicas
@@ -1041,6 +1062,19 @@ class ServeDriver:
                     )
                     tr.end(dsp, t=to_abs(o.token_times[-1]))
                     tr.end(sp, t=to_abs(o.token_times[-1]))
+            # fast-path engine counters (speculation, prefix sharing,
+            # chunked prefill) aggregated across replicas/cells by the
+            # router stats
+            from repro.serving.scheduler import FASTPATH_COUNTERS
+            fast_counts = {
+                k: int(state["router_stats"].get(k, 0))
+                for k in FASTPATH_COUNTERS
+                if int(state["router_stats"].get(k, 0))
+            }
+            if tr is not None and fast_counts:
+                # onto the attempt span: the trace report folds these into
+                # its per-job summary line
+                tr.event(tspan, "serve.fastpath", **fast_counts)
             if obs is not None:
                 for o in new_outs:
                     arr = (o.arrival_time if np.isfinite(o.arrival_time)
@@ -1048,6 +1082,9 @@ class ServeDriver:
                     obs.observe(
                         "serve_ttft_s", max(o.token_times[0] - arr, 0.0))
                 obs.observe("serve_tokens_per_s", toks / max(dt, 1e-9))
+                # registry counters land in metrics["obs"]
+                for k, v in fast_counts.items():
+                    obs.inc(f"serve_{k}", v)
                 if deadline_on:
                     new_miss = count_misses(new_outs)
                     new_shed = len(router.deadline_shed)

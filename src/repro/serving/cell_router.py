@@ -553,7 +553,21 @@ class CellRouter:
         return list(best.values())
 
     def stats(self) -> dict:
+        # fast-path engine counters bubble up from each cell's inner
+        # replica-router stats (InProcessCell.stats) and sum across cells
+        from repro.serving.scheduler import FASTPATH_COUNTERS
+
+        fast: dict[str, int] = {}
+        for c in self.cells:
+            sfn = getattr(c, "stats", None)
+            if sfn is None:
+                continue
+            cs = sfn()
+            for k in FASTPATH_COUNTERS:
+                if k in cs:
+                    fast[k] = fast.get(k, 0) + int(cs[k])
         return {
+            **fast,
             "cells": len(self.cells),
             "cells_alive": self.num_alive,
             "routed": list(self.routed),

@@ -34,11 +34,13 @@ import numpy as np
 from repro.config import ModelConfig
 from repro.models import layers, model_zoo
 from repro.models.transformer import PagedKVState, run_layers_prefill
-from repro.serving.paged_cache import BlockAllocator, pages_for
+from repro.serving.paged_cache import BlockAllocator, PrefixCache, pages_for
 from repro.serving.scheduler import (
+    FASTPATH_COUNTERS,
     AdmissionScheduler,
     Request,
     RequestOutput,
+    charged_can_admit,
     remaining_new_tokens,
 )
 
@@ -50,10 +52,44 @@ class _ActiveSeq:
     req: Request
     generated: list[int]
     token_times: list[float]
+    # chunked-prefill progress: prompt tokens already in the cache (equals
+    # the slot's seq_len until prefill completes); 0 on the legacy path
+    prefill_pos: int = 0
+    prefill_dur: float = 0.0
+    queue_wait: float = -1.0  # negative = unknown (virtual clock)
+    # admission found no shared prefix for this prompt: while its chunked
+    # prefill is in flight, further cold admissions are deferred so
+    # followers can hit the pages it registers on completion
+    cold_prefill: bool = False
 
     @property
     def remaining(self) -> int:
         return self.req.max_new_tokens - len(self.generated)
+
+
+def _ngram_propose(hist: np.ndarray, n: int, k: int) -> list[int]:
+    """Prompt-lookup draft proposer: find an earlier occurrence of the
+    sequence's length-``n`` suffix and return (up to) the ``k`` tokens
+    that followed it.  Among the matches, prefer the most recent one with
+    a *full* ``k``-token continuation on record; inside a repetition
+    (where every recent match sits too close to the end to have one) fall
+    back to the earliest match, which carries the longest known
+    continuation — the difference between drafting 1 token and drafting
+    ``k`` per step on constant runs.  Pure host-side numpy — drafts are
+    free relative to a model step; a wrong draft costs nothing but its
+    slice of the already-batched verification window."""
+    L = int(hist.shape[0])
+    if k <= 0 or L <= n:
+        return []
+    pat = hist[L - n:]
+    win = np.lib.stride_tricks.sliding_window_view(hist, n)
+    hits = np.flatnonzero((win == pat).all(axis=1))
+    hits = hits[hits < L - n]  # exclude the suffix matching itself
+    if hits.size == 0:
+        return []
+    full = hits[hits + n + k <= L]
+    i = int(full[-1]) if full.size else int(hits[0])
+    return [int(t) for t in hist[i + n: i + n + k]]
 
 
 def _bucket_len(plen: int, page_size: int, max_len: int) -> int:
@@ -82,11 +118,17 @@ class ContinuousBatchingEngine:
         num_pages: Optional[int] = None,
         seed: int = 0,
         on_stage: Optional[Callable[[str, dict], None]] = None,
+        spec_k: int = 0,
+        spec_ngram: int = 2,
+        prefix_cache: bool = False,
+        prefill_chunk: int = 0,
     ):
         if cfg.family not in ("dense", "moe"):
             raise ValueError(f"paged serving supports dense/moe, got {cfg.family!r}")
         if cfg.rope_mode == "mrope":
             raise ValueError("paged serving supports standard/none rope")
+        if spec_k < 0 or prefill_chunk < 0 or spec_ngram < 1:
+            raise ValueError("spec_k/prefill_chunk must be >= 0, spec_ngram >= 1")
         self.cfg = cfg
         self.model = model_zoo.build_model(cfg)
         self.params = params
@@ -103,6 +145,18 @@ class ContinuousBatchingEngine:
         self._prefill_key = jax.random.fold_in(self._key, 1)
         self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
         self._prefill = jax.jit(self._prefill_impl, donate_argnums=(1,))
+        # ---- serving fast path (all default-off; behavior is bit-identical
+        # to the legacy path until a flag is enabled) ----
+        self.spec_k = spec_k
+        self.spec_ngram = spec_ngram
+        self.prefix_cache = prefix_cache
+        self.prefill_chunk = min(prefill_chunk, max_len)
+        self.fastpath = bool(spec_k or prefix_cache or self.prefill_chunk)
+        # fixed window widths so the step program compiles at most 3 shapes:
+        # 1 (plain decode), 1+spec_k (speculative), max(...) (mixed prefill)
+        self._q_decode = 1 + spec_k
+        self._q_mixed = max(self._q_decode, self.prefill_chunk)
+        self._multi = jax.jit(self._multi_impl, donate_argnums=(1,))
         # optional observability sink: called as on_stage("prefill"|"decode",
         # info) with wall durations; None costs nothing on the hot path
         self._on_stage = on_stage
@@ -123,6 +177,15 @@ class ContinuousBatchingEngine:
         # outputs finished inside a step() that later raised; survives the
         # exception so a failing replica's router can still deliver them
         self._pending_outputs: list[RequestOutput] = []
+        # fast-path state: the prefix index pins pages in the (fresh) alloc,
+        # per-slot admitted prompts / token histories feed chunked prefill
+        # and the n-gram proposer; counters surface through router stats
+        self.prefix = (
+            PrefixCache(self.alloc, self.page_size) if self.prefix_cache else None
+        )
+        self._prompts: list[Optional[np.ndarray]] = [None] * self.num_slots
+        self._history: list[Optional[list[int]]] = [None] * self.num_slots
+        self.counters: dict[str, int] = dict.fromkeys(FASTPATH_COUNTERS, 0)
 
     # ------------------------------------------------------------------
     # jitted programs
@@ -175,6 +238,34 @@ class ContinuousBatchingEngine:
             v_pages=pages.v_pages.at[:, page_ids].set(vs),
         )
         return pages, tok
+
+    def _multi_impl(
+        self, params, pages, tokens, block_tables, seq_lens, temps, sample_idx,
+        key, step,
+    ):
+        """Fast-path step: a Q-token window per slot (current token +
+        speculative drafts, or a chunked-prefill slab) through one program.
+        Returns per-position greedy argmax (B, Q) — the verifier — plus a
+        temperature sample at each slot's ``sample_idx`` window position
+        (its last real token), and the updated pool."""
+        batch = {
+            "tokens": tokens,
+            "block_tables": block_tables,
+            "seq_lens": seq_lens,
+        }
+        logits, pages = self.model.decode_step_paged(params, pages, batch)
+        lg = logits[:, :, : self.cfg.vocab_size].astype(jnp.float32)  # (B, Q, V)
+        greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        B = lg.shape[0]
+        rows = lg[jnp.arange(B), sample_idx]  # (B, V)
+        safe = jnp.where(temps > 0, temps, 1.0)
+        sampled = jax.random.categorical(
+            jax.random.fold_in(key, step), rows / safe[:, None], axis=-1
+        )
+        sampled = jnp.where(
+            temps > 0, sampled, greedy[jnp.arange(B), sample_idx]
+        ).astype(jnp.int32)
+        return greedy, sampled, pages
 
     # ------------------------------------------------------------------
     # scheduling
@@ -260,6 +351,293 @@ class ContinuousBatchingEngine:
             ):
                 self._finish(slot, finished)
 
+    # ------------------------------------------------------------------
+    # serving fast path (spec decode / prefix sharing / chunked prefill)
+    # ------------------------------------------------------------------
+    def _admit_fast(self, now: float, finished: list[RequestOutput]) -> None:
+        """Admission with prefix-cache sharing.  With chunked prefill the
+        slot joins *cold*: all prompt pages are claimed up front (so chunk
+        steps can never stall mid-prompt) but ``seq_len`` starts at the
+        shared-prefix length and advances per chunk inside ``_step_fast``.
+        Without it, the legacy bucketed prefill runs — shared pages are
+        simply dropped from the K/V scatter (copy-on-write: never rewrite
+        a page another holder can read)."""
+        while True:
+            defer_cold = (
+                self.prefill_chunk > 0
+                and self.prefix is not None
+                and any(
+                    s is not None
+                    and s.cold_prefill
+                    and s.prefill_pos < len(self._prompts[i])
+                    for i, s in enumerate(self._slots)
+                )
+            )
+            req = self.scheduler.next_admissible(
+                self.alloc, self.page_size, now, prefix=self.prefix,
+                defer_cold=defer_cold,
+            )
+            if req is None:
+                return
+            plen = req.prompt_len
+            shared = self.prefix.lookup(req.tokens) if self.prefix else []
+            if shared:
+                self.counters["prefix_hits"] += 1
+                self.counters["pages_shared"] += len(shared)
+            carry: _ActiveSeq = getattr(req, "_carry", None) or _ActiveSeq(
+                req=req, generated=[], token_times=[]
+            )
+            carry.queue_wait = (
+                max(now - req.arrival_time, 0.0)
+                if np.isfinite(now) and np.isfinite(req.arrival_time)
+                else -1.0
+            )
+            slot, page_ids = self.alloc.allocate_slot(
+                plen, self.page_size, shared=shared
+            )
+            self._prompts[slot] = np.asarray(req.tokens, np.int32)
+            self._history[slot] = [int(t) for t in req.tokens]
+            self._temps[slot] = req.temperature
+            if self.prefill_chunk:
+                start = len(shared) * self.page_size
+                self.alloc.seq_lens[slot] = start
+                carry.prefill_pos = start
+                carry.prefill_dur = 0.0
+                carry.cold_prefill = not shared
+                self._slots[slot] = carry
+                continue
+            # legacy bucketed prefill, minus the rewrite of shared pages
+            bucket = _bucket_len(plen, self.page_size, self.max_len)
+            tokens_pad = np.zeros((1, bucket), np.int32)
+            tokens_pad[0, :plen] = req.tokens
+            ids = np.full(
+                (bucket // self.page_size,), self.alloc.null_page, np.int32
+            )
+            ids[: len(page_ids)] = page_ids
+            ids[: len(shared)] = self.alloc.null_page
+            key = jax.random.fold_in(
+                jax.random.fold_in(self._prefill_key, req.rid),
+                len(carry.generated),
+            )
+            pt0 = time.perf_counter()
+            self.pages, tok = self._prefill(
+                self.params, self.pages, jnp.asarray(tokens_pad), np.int32(plen),
+                jnp.asarray(ids), key, np.float32(req.temperature),
+            )
+            if self.prefix is not None:
+                self.prefix.register(req.tokens, page_ids)
+            carry.generated.append(int(tok))
+            self._history[slot].append(int(tok))
+            if self._on_stage is not None:
+                info = {
+                    "rid": req.rid, "plen": plen,
+                    "dur_s": time.perf_counter() - pt0,
+                }
+                if carry.queue_wait >= 0:
+                    info["queue_wait_s"] = carry.queue_wait
+                self._on_stage("prefill", info)
+            carry.token_times.append(now if np.isfinite(now) else 0.0)
+            self._slots[slot] = carry
+            self._tokens[slot] = carry.generated[-1]
+            if carry.remaining <= 0 or carry.generated[-1] == (
+                req.eos_id if req.eos_id is not None else -1
+            ):
+                self._finish(slot, finished)
+
+    def _extend_or_reclaim(self, slot: int, target_len: int) -> bool:
+        """Extend, evicting idle prefix-index pages on a shortfall.  Pages
+        in this slot's own table are never reclaimable (a table hold keeps
+        their refcount above the index's lone hold)."""
+        if self.alloc.extend(slot, target_len, self.page_size):
+            return True
+        if self.prefix is not None:
+            row = self.alloc.block_tables[slot]
+            have = int((row != self.alloc.null_page).sum())
+            short = (
+                pages_for(target_len, self.page_size)
+                - have
+                - self.alloc.free_page_count
+            )
+            if short > 0 and self.prefix.reclaim(short) >= short:
+                return self.alloc.extend(slot, target_len, self.page_size)
+        return False
+
+    def _emit(
+        self, slot: int, toks: list[int], t_emit: float,
+        finished: list[RequestOutput],
+    ) -> None:
+        """Append emitted tokens to a slot's record, finishing on EOS or an
+        exhausted budget (acceptance never overshoots: drafts are capped at
+        ``remaining - 1`` before proposal)."""
+        s = self._slots[slot]
+        for t in toks:
+            s.generated.append(int(t))
+            s.token_times.append(t_emit)
+            self._history[slot].append(int(t))
+            if s.remaining <= 0 or (
+                s.req.eos_id is not None and int(t) == s.req.eos_id
+            ):
+                self._finish(slot, finished)
+                return
+        self._tokens[slot] = toks[-1]
+
+    def _step_fast(self, now: float) -> list[RequestOutput]:
+        """One fast-path engine step: build a per-slot window plan (prefill
+        chunk under the step budget, or current token + n-gram drafts), run
+        ONE program sized to the widest window class this step needs, then
+        verify/accept on the host."""
+        finished = self._pending_outputs
+        self._admit_fast(now, finished)
+        entries: list[tuple[int, str, int, list[int]]] = []
+        decodes: list[tuple[int, list[int]]] = []
+        stalled: list[int] = []
+        budget = self.prefill_chunk
+        any_prefill = False
+        any_spec = False
+        for i, s in enumerate(self._slots):
+            if s is None:
+                continue
+            plen = len(self._prompts[i])
+            if self.prefill_chunk and s.prefill_pos < plen:
+                c = min(self._q_mixed, plen - s.prefill_pos, budget)
+                if c > 0:
+                    budget -= c
+                    entries.append((i, "prefill", c, []))
+                    any_prefill = True
+                continue  # pages pre-allocated at admission: never stalls
+            drafts: list[int] = []
+            if self.spec_k and s.req.temperature == 0 and s.remaining > 1:
+                cap = min(self.spec_k, s.remaining - 1)
+                drafts = _ngram_propose(
+                    np.asarray(self._history[i], np.int32), self.spec_ngram, cap
+                )
+            decodes.append((i, drafts))
+        # Speculation gate: the Q-token program prices the WHOLE batch at
+        # window width Q, so drafts only pay when most decode slots ride
+        # them.  Unless a prefill chunk already forces the wide program,
+        # drop all drafts when the batch averages under spec_k/2 drafted
+        # tokens per decode slot; dropped drafts are never counted as
+        # proposed (accept-rate = accepted/proposed stays meaningful).
+        if decodes and not any_prefill and self.spec_k:
+            drafted = sum(len(d) for _, d in decodes)
+            if 2 * drafted < len(decodes) * self.spec_k:
+                decodes = [(i, []) for i, _ in decodes]
+        for i, drafts in decodes:
+            target = int(self.alloc.seq_lens[i]) + 1 + len(drafts)
+            ok = self._extend_or_reclaim(i, target)
+            if not ok and drafts:
+                drafts = []
+                ok = self._extend_or_reclaim(
+                    i, int(self.alloc.seq_lens[i]) + 1
+                )
+            if not ok:
+                stalled.append(i)
+                continue
+            self.counters["spec_proposed"] += len(drafts)
+            if drafts:
+                any_spec = True
+            entries.append((i, "decode", 1 + len(drafts), drafts))
+        if not entries:
+            if stalled:
+                self._preempt_one(stalled)
+            self._pending_outputs = []
+            return finished
+        Q = (
+            self._q_mixed if any_prefill
+            else (self._q_decode if any_spec else 1)
+        )
+        tokens_mat = np.zeros((self.num_slots, Q), np.int32)
+        sample_idx = np.zeros((self.num_slots,), np.int32)
+        step_tokens = 0
+        for i, kind, qlen, drafts in entries:
+            if kind == "prefill":
+                pos = self._slots[i].prefill_pos
+                tokens_mat[i, :qlen] = self._prompts[i][pos:pos + qlen]
+            else:
+                tokens_mat[i, 0] = self._tokens[i]
+                if drafts:
+                    tokens_mat[i, 1:1 + len(drafts)] = drafts
+            sample_idx[i] = qlen - 1 if kind == "prefill" else 0
+            step_tokens += qlen
+        dt0 = time.perf_counter()
+        if Q == 1:
+            active = np.zeros((self.num_slots,), bool)
+            for i, _, _, _ in entries:
+                active[i] = True
+            tok_dev, self.pages = self._decode(
+                self.params, self.pages, jnp.asarray(self._tokens),
+                jnp.asarray(self.alloc.block_tables),
+                jnp.asarray(self.alloc.seq_lens), jnp.asarray(active),
+                jnp.asarray(self._temps), self._decode_key,
+                np.int32(self._counter),
+            )
+            toks = np.asarray(tok_dev)
+            greedy = toks[:, None]
+            sampled = toks
+        else:
+            greedy_dev, sampled_dev, self.pages = self._multi(
+                self.params, self.pages, jnp.asarray(tokens_mat),
+                jnp.asarray(self.alloc.block_tables),
+                jnp.asarray(self.alloc.seq_lens), jnp.asarray(self._temps),
+                jnp.asarray(sample_idx), self._decode_key,
+                np.int32(self._counter),
+            )
+            greedy = np.asarray(greedy_dev)  # the scheduler's sync point
+            sampled = np.asarray(sampled_dev)
+        self._counter += 1
+        step_dur = time.perf_counter() - dt0
+        t_emit = now if np.isfinite(now) else 0.0
+        emitted = 0
+        for i, kind, qlen, drafts in entries:
+            s = self._slots[i]
+            if kind == "prefill":
+                s.prefill_pos += qlen
+                self.alloc.seq_lens[i] = s.prefill_pos
+                self.counters["prefill_chunks"] += 1
+                s.prefill_dur += step_dur * (qlen / max(step_tokens, 1))
+                plen = len(self._prompts[i])
+                if s.prefill_pos < plen:
+                    continue
+                # prompt complete: register its full pages, report the
+                # prefill stage, and emit the first sampled token
+                if self.prefix is not None:
+                    n_full = (plen - 1) // self.page_size
+                    row = self.alloc.block_tables[i]
+                    self.prefix.register(
+                        self._prompts[i], [int(p) for p in row[:n_full]]
+                    )
+                if self._on_stage is not None:
+                    info = {
+                        "rid": s.req.rid, "plen": plen, "dur_s": s.prefill_dur,
+                    }
+                    if s.queue_wait >= 0:
+                        info["queue_wait_s"] = s.queue_wait
+                    self._on_stage("prefill", info)
+                emitted += 1
+                self._emit(i, [int(sampled[i])], t_emit, finished)
+                continue
+            if s.req.temperature > 0:
+                emit = [int(sampled[i])]
+            else:
+                g = greedy[i]
+                emit = [int(g[0])]
+                for j, d in enumerate(drafts):
+                    if int(d) != int(g[j]):
+                        break
+                    emit.append(int(g[j + 1]))
+                self.counters["spec_accepted"] += len(emit) - 1
+            self.alloc.seq_lens[i] += len(emit)
+            emitted += len(emit)
+            self._emit(i, emit, t_emit, finished)
+        if self._on_stage is not None:
+            self._on_stage("decode", {
+                "dur_s": step_dur,
+                "slots": len(entries),
+                "tokens": emitted,
+            })
+        self._pending_outputs = []
+        return finished
+
     def _continuation(self, slot: int) -> Request:
         """Evict ``slot`` into a continuation request: the full prefix
         (prompt + generated so far) re-prefills on readmission, and the
@@ -342,6 +720,8 @@ class ContinuousBatchingEngine:
     def step(self, now: float = float("inf")) -> list[RequestOutput]:
         """Admit arrivals, advance every active slot one token, evict the
         finished.  Returns requests completed during this step."""
+        if self.fastpath:
+            return self._step_fast(now)
         # accumulate into the instance buffer: if decode raises mid-step,
         # admission-time completions are retained for drain_finished()
         finished = self._pending_outputs
@@ -433,8 +813,8 @@ class ContinuousBatchingEngine:
                 if wait > 0:
                     time.sleep(wait)
                     now = time.perf_counter() - t0
-                elif not self.alloc.can_admit(
-                    pending[0].prompt_len + 1, self.page_size
+                elif not charged_can_admit(
+                    self.alloc, pending[0].tokens, self.page_size, self.prefix
                 ):
                     # nothing active, head has arrived and still can't fit:
                     # no step can change that — fail loudly, don't busy-spin

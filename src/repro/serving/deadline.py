@@ -128,8 +128,14 @@ class CompletionEstimator:
         if v is not None and prompt_len and prompt_len > 0:
             self._prefill.observe(v / int(prompt_len))
 
-    def observe_decode_step(self, dur_s) -> None:
-        self._decode.observe(dur_s)
+    def observe_decode_step(self, dur_s, tokens: int = 1) -> None:
+        """One engine decode step.  ``tokens`` > 1 when the fast path
+        emitted several tokens in the step (accepted speculative drafts) —
+        the window tracks seconds *per emitted token* either way, so
+        projections tighten as the accept rate rises."""
+        v = _clean(dur_s)
+        if v is not None and tokens >= 1:
+            self._decode.observe(v / int(tokens))
 
     def seed_from_histograms(
         self, hists: dict, *, nominal_prompt_len: int = 1

@@ -2,18 +2,32 @@
 
 The device state is a single page pool per layer (``models.transformer.
 PagedKVState``); this module owns everything the scheduler needs on the
-host: the free-page list, per-slot block tables and live lengths.  All
-methods are O(pages touched) python — the hot path stays inside the
-engine's jitted step, which only ever sees the (small) block-table and
-seq-len arrays.
+host: the free-page list, per-slot block tables, live lengths, and — for
+the serving fast path — per-page refcounts plus the prefix-hash index
+that lets sequences *share* pages.  All methods are O(pages touched)
+python — the hot path stays inside the engine's jitted step, which only
+ever sees the (small) block-table and seq-len arrays.
 
 Pool convention: page ids ``0..num_pages-1`` are allocatable; id
 ``num_pages`` is the *null page*.  Unused block-table entries point at
 the null page so prefetched kernel indices are always in range and
 inactive-slot writes land harmlessly in trash.
+
+Sharing model (prefix caching): a page may appear in several block
+tables at once, tracked by ``page_refs``; it returns to the free list
+only when its refcount hits zero.  Copy-on-write is enforced by
+construction rather than by copying: only *full* page-aligned prompt
+prefixes are ever shared (``PrefixCache``), and every write a sequence
+performs lands at positions >= its own ``seq_len`` — which always sits
+past its shared prefix — so shared pages are physically read-only and
+the mutable tail of every sequence lives in exclusively-owned pages.
 """
 
 from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from typing import Iterable, Sequence
 
 import numpy as np
 
@@ -23,7 +37,7 @@ def pages_for(n_tokens: int, page_size: int) -> int:
 
 
 class BlockAllocator:
-    """Free-list page allocator + per-slot block tables (pure host/numpy)."""
+    """Refcounted free-list page allocator + per-slot block tables."""
 
     def __init__(self, num_slots: int, max_pages_per_seq: int, num_pages: int):
         self.num_slots = num_slots
@@ -36,6 +50,9 @@ class BlockAllocator:
             (num_slots, max_pages_per_seq), self.null_page, np.int32
         )
         self.seq_lens = np.zeros((num_slots,), np.int32)
+        # page_refs[p] == 0 iff p is on the free list; a page shared by N
+        # block tables (plus possibly a prefix index hold) carries N(+1)
+        self.page_refs = np.zeros((num_pages,), np.int32)
 
     def reset(self) -> None:
         """Back to the freshly-constructed state: all slots and pages free."""
@@ -43,6 +60,7 @@ class BlockAllocator:
         self.free_slots = list(range(self.num_slots - 1, -1, -1))
         self.block_tables[:] = self.null_page
         self.seq_lens[:] = 0
+        self.page_refs[:] = 0
 
     # ------------------------------------------------------------------
     @property
@@ -53,43 +71,83 @@ class BlockAllocator:
     def free_slot_count(self) -> int:
         return len(self.free_slots)
 
-    def can_admit(self, n_tokens: int, page_size: int) -> bool:
+    def can_admit(
+        self, n_tokens: int, page_size: int, shared_pages: int = 0
+    ) -> bool:
+        """``shared_pages`` prefix-hit pages are already resident, so
+        admission is charged only the *new* pages past them."""
         need = pages_for(n_tokens, page_size)
         return bool(
             self.free_slots
-            and need <= len(self.free_pages)
+            and need - shared_pages <= len(self.free_pages)
             and need <= self.max_pages_per_seq
         )
 
     # ------------------------------------------------------------------
-    def allocate_slot(self, n_tokens: int, page_size: int) -> tuple[int, list[int]]:
-        """Claim a slot and pages covering ``n_tokens``; returns (slot, pages)."""
-        assert self.can_admit(n_tokens, page_size)
+    def allocate_slot(
+        self, n_tokens: int, page_size: int, shared: Sequence[int] = (),
+    ) -> tuple[int, list[int]]:
+        """Claim a slot and pages covering ``n_tokens``; returns (slot,
+        pages).  ``shared`` pages (a prefix-cache hit, already live) lead
+        the block table with a refcount bump; only the remainder is pulled
+        from the free list."""
+        assert self.can_admit(n_tokens, page_size, len(shared))
         slot = self.free_slots.pop()
         n = pages_for(n_tokens, page_size)
-        page_ids = [self.free_pages.pop() for _ in range(n)]
+        assert len(shared) <= n, "shared prefix longer than the sequence"
+        page_ids = list(int(p) for p in shared)
+        for p in page_ids:
+            assert self.page_refs[p] > 0, "shared page must already be live"
+            self.page_refs[p] += 1
+        for _ in range(n - len(page_ids)):
+            p = self.free_pages.pop()
+            self.page_refs[p] = 1
+            page_ids.append(p)
         self.block_tables[slot, :n] = page_ids
         self.seq_lens[slot] = n_tokens
         return slot, page_ids
 
     def extend(self, slot: int, target_len: int, page_size: int) -> bool:
         """Grow ``slot`` so positions < target_len are backed.  False = pool
-        exhausted (the caller stalls the slot this step and retries)."""
-        have = pages_for(int(self.seq_lens[slot]), page_size)
+        exhausted (the caller stalls the slot this step and retries).  The
+        pages a slot holds are counted from its block table, not its
+        ``seq_len`` — chunked prefill pre-allocates the whole prompt while
+        ``seq_len`` trails at the prefilled position."""
+        row = self.block_tables[slot]
+        have = int((row != self.null_page).sum())
         need = pages_for(target_len, page_size)
         if need > self.max_pages_per_seq:
             return False
         if need - have > len(self.free_pages):
             return False
         for i in range(have, need):
-            self.block_tables[slot, i] = self.free_pages.pop()
+            p = self.free_pages.pop()
+            self.page_refs[p] = 1
+            row[i] = p
         return True
 
+    def _decref(self, page: int) -> None:
+        self.page_refs[page] -= 1
+        assert self.page_refs[page] >= 0, "page refcount underflow"
+        if self.page_refs[page] == 0:
+            self.free_pages.append(page)
+
+    def retain_page(self, page: int) -> None:
+        """Extra hold on a live page (the prefix index pinning it)."""
+        assert self.page_refs[page] > 0, "cannot retain a free page"
+        self.page_refs[page] += 1
+
+    def release_page(self, page: int) -> None:
+        """Drop one hold on a page; frees it at refcount zero."""
+        self._decref(int(page))
+
     def release(self, slot: int) -> None:
-        """Evict a finished sequence: return its pages to the pool."""
+        """Evict a finished sequence: drop its hold on every page.  Pages
+        shared with other sequences (or pinned by the prefix index) stay
+        resident; exclusively-owned ones return to the pool."""
         row = self.block_tables[slot]
         for p in row[row != self.null_page]:
-            self.free_pages.append(int(p))
+            self._decref(int(p))
         row[:] = self.null_page
         self.seq_lens[slot] = 0
         self.free_slots.append(slot)
@@ -100,3 +158,113 @@ class BlockAllocator:
 
     def pages_in_use(self) -> int:
         return self.num_pages - len(self.free_pages)
+
+    def shared_pages(self) -> int:
+        """Pages held by more than one owner (block tables and/or index)."""
+        return int((self.page_refs > 1).sum())
+
+
+class PrefixCache:
+    """Chain-hash index of page-aligned prompt prefixes over the pool.
+
+    The key for full prompt page ``i`` is a running blake2b over
+    ``tokens[: (i+1) * page_size]`` — K/V under causal attention depend on
+    the whole history, so a page's identity must cover everything before
+    it, not just its own tokens.  Registered pages carry one index
+    refcount (``BlockAllocator.retain_page``), keeping the K/V resident
+    after the writing request finishes; a later request with the same
+    prefix shares the pages instead of re-prefilling them.
+
+    COW rules (sharing stays write-free by construction):
+
+    * only *full* prompt pages register, and never the page that would
+      absorb the first generated token — the shareable prefix is capped at
+      ``(prompt_len - 1) // page_size`` pages, so the partial tail page
+      and every decode write land in exclusively-owned pages;
+    * an indexed page is evicted (``reclaim``) only while the index is its
+      sole holder (refcount == 1), LRU-first — no page is ever reclaimed
+      out from under a live sequence.
+    """
+
+    def __init__(self, alloc: BlockAllocator, page_size: int):
+        self.alloc = alloc
+        self.page_size = page_size
+        self._index: "OrderedDict[bytes, int]" = OrderedDict()  # key -> page
+        self.evicted = 0
+
+    def __len__(self) -> int:
+        return len(self._index)
+
+    def reset(self) -> None:
+        """Drop every index hold; pristine empty index."""
+        for p in self._index.values():
+            self.alloc.release_page(p)
+        self._index.clear()
+        self.evicted = 0
+
+    # ------------------------------------------------------------------
+    def _shareable_pages(self, n_tokens: int) -> int:
+        # cap below the prompt end: at least one prompt token must run
+        # through prefill to produce the first sampled token's logits
+        return max((int(n_tokens) - 1) // self.page_size, 0)
+
+    def _chain_keys(self, tokens, n: int) -> list[bytes]:
+        arr = np.ascontiguousarray(np.asarray(tokens, np.int32))
+        h = hashlib.blake2b(digest_size=16)
+        keys = []
+        for i in range(n):
+            h.update(arr[i * self.page_size:(i + 1) * self.page_size].tobytes())
+            keys.append(h.digest())
+        return keys
+
+    def lookup(self, tokens) -> list[int]:
+        """Pages backing the longest indexed page-aligned prefix of
+        ``tokens`` (possibly empty).  Hits refresh LRU recency."""
+        n = self._shareable_pages(len(tokens))
+        pages: list[int] = []
+        for key in self._chain_keys(tokens, n):
+            page = self._index.get(key)
+            if page is None:
+                break
+            self._index.move_to_end(key)
+            pages.append(page)
+        return pages
+
+    def register(self, tokens, page_ids: Sequence[int]) -> int:
+        """Index the full prompt pages just written for ``tokens``; the
+        first registration of a key wins (concurrent writers of the same
+        prefix keep the incumbent's pages).  Returns pages newly pinned."""
+        n = min(self._shareable_pages(len(tokens)), len(page_ids))
+        added = 0
+        for key, page in zip(self._chain_keys(tokens, n), page_ids):
+            if key in self._index:
+                self._index.move_to_end(key)
+                continue
+            self._index[key] = int(page)
+            self.alloc.retain_page(int(page))
+            added += 1
+        return added
+
+    def reclaim(self, n_pages: int, keep: Iterable[int] = ()) -> int:
+        """Evict up to ``n_pages`` LRU index entries whose page the index
+        holds exclusively (refcount == 1), freeing them for allocation.
+        ``keep`` pages are exempt (a hit about to be shared must not be
+        evicted by its own admission check)."""
+        if n_pages <= 0:
+            return 0
+        protect = set(int(p) for p in keep)
+        freed = 0
+        for key in list(self._index):
+            if freed >= n_pages:
+                break
+            page = self._index[key]
+            if page in protect or int(self.alloc.page_refs[page]) != 1:
+                continue
+            del self._index[key]
+            self.alloc.release_page(page)
+            self.evicted += 1
+            freed += 1
+        return freed
+
+    def held_pages(self) -> set[int]:
+        return set(self._index.values())

@@ -296,7 +296,7 @@ class ServeRouter:
         return outs
 
     def stats(self) -> dict:
-        return {
+        out = {
             "replicas": len(self.replicas),
             "replicas_alive": self.num_alive,
             "routed": list(self.routed),
@@ -308,3 +308,11 @@ class ServeRouter:
             "deadline_shed": len(self.deadline_shed),
             "deadline_degraded": self.deadline_degraded,
         }
+        # fast-path counters summed across replicas (dead ones included —
+        # their work happened); absent on engines without the fast path
+        fast: dict[str, int] = {}
+        for eng in self.replicas:
+            for k, v in (getattr(eng, "counters", None) or {}).items():
+                fast[k] = fast.get(k, 0) + int(v)
+        out.update(fast)
+        return out

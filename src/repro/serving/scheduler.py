@@ -15,7 +15,39 @@ from typing import Optional
 
 import numpy as np
 
-from repro.serving.paged_cache import BlockAllocator
+from repro.serving.paged_cache import BlockAllocator, PrefixCache, pages_for
+
+# engine fast-path counters surfaced through router/cell stats into the
+# metrics registry (services.ServeDriver); names are the public contract
+FASTPATH_COUNTERS = (
+    "spec_proposed",
+    "spec_accepted",
+    "prefix_hits",
+    "pages_shared",
+    "prefill_chunks",
+)
+
+
+def charged_can_admit(
+    alloc: BlockAllocator,
+    tokens,
+    page_size: int,
+    prefix: Optional[PrefixCache],
+) -> bool:
+    """Can the pool admit a prompt (+1 for the first decode write)?  With a
+    prefix index, admission is charged only the pages *past* the prefix
+    hit; on a shortfall it reclaims idle index pages (LRU, never a page
+    another holder still owns) before giving up."""
+    need_tokens = len(tokens) + 1
+    if prefix is None:
+        return alloc.can_admit(need_tokens, page_size)
+    shared = prefix.lookup(tokens)
+    if alloc.can_admit(need_tokens, page_size, shared_pages=len(shared)):
+        return True
+    short = pages_for(need_tokens, page_size) - len(shared) - alloc.free_page_count
+    if short <= 0 or prefix.reclaim(short, keep=shared) < short:
+        return False
+    return alloc.can_admit(need_tokens, page_size, shared_pages=len(shared))
 
 
 @dataclasses.dataclass
@@ -87,15 +119,30 @@ class AdmissionScheduler:
         return len(self.pending)
 
     def next_admissible(
-        self, alloc: BlockAllocator, page_size: int, now: float
+        self,
+        alloc: BlockAllocator,
+        page_size: int,
+        now: float,
+        prefix: Optional[PrefixCache] = None,
+        defer_cold: bool = False,
     ) -> Optional[Request]:
-        """Pop the head request if it has arrived and fits; else None."""
+        """Pop the head request if it has arrived and fits; else None.
+        With a prefix index, the pool charge excludes prefix-hit pages
+        (+1 for the first decode step's K/V write either way).
+
+        ``defer_cold`` is the cache-aware admission policy for chunked
+        prefill: while another cold prompt's prefill is in flight, a head
+        request with no prefix hit is held back (FCFS order preserved —
+        nothing behind it is considered), so a burst of identical prompts
+        admits one cold leader and 31 followers that share its pages
+        instead of eight concurrent cold prefills of the same prefix."""
         if not self.pending:
             return None
         head = self.pending[0]
         if head.arrival_time > now:
             return None
-        # +1: the first decode step writes the sampled token's K/V
-        if not alloc.can_admit(head.prompt_len + 1, page_size):
+        if defer_cold and prefix is not None and not prefix.lookup(head.tokens):
+            return None
+        if not charged_can_admit(alloc, head.tokens, page_size, prefix):
             return None
         return self.pending.popleft()

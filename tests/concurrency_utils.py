@@ -58,35 +58,63 @@ class VirtualClock:
 # ---------------------------------------------------------------------------
 
 
-def check_allocator_invariants(alloc, live: dict[int, int], page_size: int) -> None:
-    """``live`` is the model: slot -> pages it should hold."""
+def check_allocator_invariants(
+    alloc, live: dict[int, int], page_size: int, prefix=None
+) -> None:
+    """``live`` is the model: slot -> pages its block-table row should
+    hold.  Pages may be *shared* (prefix caching), so the ledger invariant
+    is refcount-based: every page's refcount equals its appearances across
+    block tables plus its prefix-index hold, a page is free iff its
+    refcount is zero, and free + shared + exclusively-owned == pool."""
     from repro.serving.paged_cache import pages_for
 
     tables = alloc.block_tables
+    # ledger: reconstruct expected refcounts from tables + index holds
+    refs = np.zeros(alloc.num_pages, np.int64)
     used = tables[tables != alloc.null_page]
-    # never double-allocate: every in-table page id appears exactly once
-    assert len(np.unique(used)) == used.size, "page double-allocated"
+    np.add.at(refs, used, 1)
+    held = prefix.held_pages() if prefix is not None else set()
+    for p in held:
+        refs[int(p)] += 1
+    assert (refs == alloc.page_refs).all(), \
+        "page_refs != table appearances + index holds"
     free = set(alloc.free_pages)
     assert len(free) == len(alloc.free_pages), "free list has duplicates"
+    # free iff refcount zero: no page reclaimed/freed while still held
+    assert free == set(np.flatnonzero(refs == 0).tolist()), \
+        "free list != pages with refcount 0"
     assert not (free & set(used.tolist())), "page both free and allocated"
-    # never leak: every page is exactly one of {free, in a block table}
-    assert len(free) + used.size == alloc.num_pages, "page leaked"
+    assert not (free & {int(p) for p in held}), "index holds a free page"
+    # partition: free + shared (refs > 1) + exclusive (refs == 1) == pool
+    n_shared = int((refs > 1).sum())
+    n_excl = int((refs == 1).sum())
+    assert len(free) + n_shared + n_excl == alloc.num_pages, "page leaked"
+    assert alloc.shared_pages() == n_shared
     assert alloc.free_page_count == alloc.num_pages - alloc.pages_in_use()
     # slot bookkeeping matches the model
     assert set(live) == set(range(alloc.num_slots)) - set(alloc.free_slots)
     for slot, n_pages in live.items():
         row = tables[slot]
         assert int((row != alloc.null_page).sum()) == n_pages
-        assert pages_for(int(alloc.seq_lens[slot]), page_size) == n_pages
+        # chunked prefill pre-allocates whole prompts, so seq_len may
+        # trail the backed capacity but never exceed it
+        assert pages_for(int(alloc.seq_lens[slot]), page_size) <= n_pages
 
 
-def exercise_allocator(alloc, ops, page_size: int = 8) -> dict[int, int]:
-    """Apply ``(op, arg)`` steps — op in alloc/extend/release/reset — to
-    ``alloc``, mirroring them in a model and checking invariants after each.
-    Returns the final model (slot -> held pages)."""
+def exercise_allocator(
+    alloc, ops, page_size: int = 8, prefix=None
+) -> dict[int, int]:
+    """Apply ``(op, arg)`` steps — op in alloc/share/extend/release/
+    reclaim/reset — to ``alloc``, mirroring them in a model and checking
+    invariants after each.  ``share`` and ``reclaim`` need a
+    ``PrefixCache`` (``prefix``); ``share`` admits through the prefix
+    index with a deterministic token stream (small alphabet, so prefix
+    collisions — and therefore page sharing — actually happen).  Returns
+    the final model (slot -> held pages)."""
     from repro.serving.paged_cache import pages_for
 
     live: dict[int, int] = {}
+    streams: dict[int, np.ndarray] = {}  # slot -> prompt (for registration)
     for op, arg in ops:
         if op == "alloc":
             n_tokens = max(1, int(arg))
@@ -95,24 +123,47 @@ def exercise_allocator(alloc, ops, page_size: int = 8) -> dict[int, int]:
                 assert slot not in live, "slot handed out twice"
                 assert len(pages) == pages_for(n_tokens, page_size)
                 live[slot] = len(pages)
+        elif op == "share":
+            assert prefix is not None, "share op needs a PrefixCache"
+            n_tokens = max(1, int(arg))
+            # 3-letter alphabet, constant per stream: same residue ==
+            # same prefix, so hits/sharing occur across allocations
+            tokens = np.full((n_tokens,), int(arg) % 3, np.int32)
+            shared = prefix.lookup(tokens)
+            if alloc.can_admit(n_tokens, page_size, shared_pages=len(shared)):
+                slot, pages = alloc.allocate_slot(
+                    n_tokens, page_size, shared=shared
+                )
+                assert pages[: len(shared)] == list(shared)
+                prefix.register(tokens, pages)
+                live[slot] = len(pages)
+                streams[slot] = tokens
         elif op == "extend":
             if live:
                 slot = sorted(live)[int(arg) % len(live)]
                 target = int(alloc.seq_lens[slot]) + page_size  # one more page
                 if alloc.extend(slot, target, page_size):
                     alloc.seq_lens[slot] = target
-                    live[slot] = pages_for(target, page_size)
+                    live[slot] = max(live[slot], pages_for(target, page_size))
         elif op == "release":
             if live:
                 slot = sorted(live)[int(arg) % len(live)]
                 alloc.release(slot)
                 del live[slot]
+                streams.pop(slot, None)
+        elif op == "reclaim":
+            assert prefix is not None, "reclaim op needs a PrefixCache"
+            prefix.reclaim(max(1, int(arg)))
         elif op == "reset":
+            # index holds drop before the allocator wipes refcounts
+            if prefix is not None:
+                prefix.reset()
             alloc.reset()
             live.clear()
+            streams.clear()
         else:  # pragma: no cover — strategy/harness bug
             raise ValueError(f"unknown op {op!r}")
-        check_allocator_invariants(alloc, live, page_size)
+        check_allocator_invariants(alloc, live, page_size, prefix=prefix)
     return live
 
 

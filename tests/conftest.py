@@ -31,6 +31,9 @@ def pytest_configure(config):
         "CI runs chaos+subprocess 5x)",
         "deadline: deterministic deadline/hedging tests (virtual clock, "
         "no sleeps; CI runs this tier 20x)",
+        "serving_fastpath: speculative decoding / prefix sharing / fused "
+        "chunked prefill equivalence tests (CI runs this tier with "
+        "PYTHONHASHSEED pinned)",
         "slow: long-running integration tests",
     ):
         config.addinivalue_line("markers", line)

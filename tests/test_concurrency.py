@@ -487,3 +487,32 @@ def test_block_allocator_seeded_fuzz_invariants():
         for slot in list(live):
             alloc.release(slot)
         assert alloc.free_page_count == 12 and alloc.free_slot_count == 4
+
+
+def test_block_allocator_shared_seeded_fuzz_invariants():
+    """Seeded twin of the prefix-sharing hypothesis fuzz: with shared
+    admissions and index reclaim in the mix, the refcount ledger stays
+    exact (refs == table appearances + index holds, free iff refs == 0)
+    and teardown + index reset return the pool whole."""
+    from concurrency_utils import check_allocator_invariants
+    from repro.serving.paged_cache import PrefixCache
+
+    rng = np.random.default_rng(11)
+    for _ in range(20):
+        alloc = BlockAllocator(num_slots=4, max_pages_per_seq=6, num_pages=12)
+        prefix = PrefixCache(alloc, 8)
+        ops = []
+        for _ in range(60):
+            op = rng.choice(["alloc", "share", "share", "extend", "release",
+                             "reclaim", "reset"])
+            arg = int(rng.integers(1, 60))
+            ops.append((op, arg))
+        live = exercise_allocator(alloc, ops, page_size=8, prefix=prefix)
+        for slot in list(live):
+            alloc.release(slot)
+        check_allocator_invariants(alloc, {}, 8, prefix=prefix)
+        # only index holds remain; dropping them frees the whole pool
+        assert alloc.pages_in_use() == len(prefix.held_pages())
+        prefix.reset()
+        assert alloc.free_page_count == 12
+        assert (alloc.page_refs == 0).all()

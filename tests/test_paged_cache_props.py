@@ -1,18 +1,24 @@
-"""Property-based tests for the paged-KV ``BlockAllocator``.
+"""Property-based tests for the paged-KV ``BlockAllocator`` + ``PrefixCache``.
 
-Random alloc/extend/release/reset sequences must never double-allocate a
-page, never leak one, and keep the free-count bookkeeping consistent — the
-invariants live in ``concurrency_utils.check_allocator_invariants`` and are
-checked after *every* operation.  A seeded non-hypothesis twin of this fuzz
-runs in ``test_concurrency.py`` so the invariants are exercised even where
-hypothesis is absent (``conftest.py`` soft-gates this file).
+Random alloc/share/extend/release/reclaim/reset sequences must never
+double-free a page, never leak one, and keep the refcount ledger exact —
+every page's refcount equals its block-table appearances plus its
+prefix-index hold, no page is reclaimed while a sequence still holds it,
+and free + shared + exclusively-owned always partitions the pool.  The
+invariants live in ``concurrency_utils.check_allocator_invariants`` and
+are checked after *every* operation.  A seeded non-hypothesis twin of
+this fuzz runs in ``test_concurrency.py`` so the invariants are
+exercised even where hypothesis is absent (``conftest.py`` soft-gates
+this file).
 """
+
+import numpy as np
 
 import hypothesis.strategies as st
 from hypothesis import given, settings
 
-from concurrency_utils import exercise_allocator
-from repro.serving.paged_cache import BlockAllocator, pages_for
+from concurrency_utils import check_allocator_invariants, exercise_allocator
+from repro.serving.paged_cache import BlockAllocator, PrefixCache, pages_for
 
 PAGE = 8
 
@@ -21,6 +27,13 @@ _op = st.one_of(
     st.tuples(st.just("extend"), st.integers(min_value=0, max_value=31)),
     st.tuples(st.just("release"), st.integers(min_value=0, max_value=31)),
     st.tuples(st.just("reset"), st.just(0)),
+)
+
+# the sharing fuzz adds prefix-cache admissions and index reclaim
+_op_shared = st.one_of(
+    _op,
+    st.tuples(st.just("share"), st.integers(min_value=1, max_value=80)),
+    st.tuples(st.just("reclaim"), st.integers(min_value=1, max_value=8)),
 )
 
 _geometry = st.tuples(
@@ -43,6 +56,30 @@ def test_random_op_sequences_never_double_allocate_or_leak(geom, ops):
     assert alloc.free_slot_count == num_slots
     assert (alloc.block_tables == alloc.null_page).all()
     assert (alloc.seq_lens == 0).all()
+    assert (alloc.page_refs == 0).all()
+
+
+@settings(max_examples=200, deadline=None)
+@given(geom=_geometry, ops=st.lists(_op_shared, max_size=80))
+def test_shared_op_sequences_keep_refcount_ledger_exact(geom, ops):
+    """With prefix sharing in the mix: refcounts stay a perfect ledger of
+    table appearances + index holds, no page is ever reclaimed while a
+    sequence holds it (free iff refcount 0 is checked after every op),
+    and teardown (release all + reset the index) frees the whole pool."""
+    num_slots, max_pages, num_pages = geom
+    alloc = BlockAllocator(num_slots, max_pages, num_pages)
+    prefix = PrefixCache(alloc, PAGE)
+    live = exercise_allocator(alloc, ops, page_size=PAGE, prefix=prefix)
+    for slot in sorted(live):
+        alloc.release(slot)
+    check_allocator_invariants(alloc, {}, PAGE, prefix=prefix)
+    # index holds alone keep their pages resident...
+    assert alloc.pages_in_use() == len(prefix.held_pages())
+    # ...and dropping the index returns the pool whole
+    prefix.reset()
+    assert len(prefix) == 0
+    assert alloc.free_page_count == num_pages
+    assert (alloc.page_refs == 0).all()
 
 
 @settings(max_examples=100, deadline=None)
@@ -65,11 +102,49 @@ def test_can_admit_is_exact(n_tokens, num_pages):
 
 
 @settings(max_examples=100, deadline=None)
-@given(ops=st.lists(_op, max_size=40))
+@given(
+    n_tokens=st.integers(min_value=1, max_value=64),
+    num_pages=st.integers(min_value=1, max_value=16),
+)
+def test_can_admit_charges_only_unshared_pages(n_tokens, num_pages):
+    """A prefix hit is charged only the pages past the shared ones, and
+    the shared admission actually succeeds whenever can_admit said yes."""
+    alloc = BlockAllocator(num_slots=3, max_pages_per_seq=8, num_pages=num_pages)
+    prefix = PrefixCache(alloc, PAGE)
+    tokens = np.zeros((n_tokens,), np.int32)
+    if not alloc.can_admit(n_tokens, PAGE):
+        return
+    s0, pages0 = alloc.allocate_slot(n_tokens, PAGE)
+    prefix.register(tokens, pages0)
+    shared = prefix.lookup(tokens)
+    assert len(shared) == min(
+        prefix._shareable_pages(n_tokens), len(pages0)
+    )
+    need_new = pages_for(n_tokens, PAGE) - len(shared)
+    expected = need_new <= alloc.free_page_count
+    assert alloc.can_admit(n_tokens, PAGE, shared_pages=len(shared)) == expected
+    if expected:
+        s1, pages1 = alloc.allocate_slot(n_tokens, PAGE, shared=shared)
+        assert pages1[: len(shared)] == shared  # same physical prefix pages
+        check_allocator_invariants(
+            alloc, {s0: len(pages0), s1: len(pages1)}, PAGE, prefix=prefix
+        )
+
+
+@settings(max_examples=100, deadline=None)
+@given(ops=st.lists(_op_shared, max_size=40))
 def test_reset_always_restores_pristine_state(ops):
+    """reset() after any op sequence restores a pristine allocator *and*
+    a pristine prefix-hash index (no stale holds, no stale keys)."""
     alloc = BlockAllocator(num_slots=3, max_pages_per_seq=4, num_pages=10)
-    exercise_allocator(alloc, ops, page_size=PAGE)
+    prefix = PrefixCache(alloc, PAGE)
+    exercise_allocator(alloc, ops, page_size=PAGE, prefix=prefix)
+    prefix.reset()
     alloc.reset()
     assert alloc.free_page_count == 10 and alloc.free_slot_count == 3
     assert (alloc.block_tables == alloc.null_page).all()
     assert sorted(alloc.free_pages) == list(range(10))
+    assert (alloc.page_refs == 0).all()
+    assert len(prefix) == 0 and not prefix.held_pages()
+    # the reset index serves fresh lookups from scratch
+    assert prefix.lookup(np.zeros((4 * PAGE,), np.int32)) == []

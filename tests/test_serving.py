@@ -295,3 +295,166 @@ def test_continuous_temperature_and_validation(setup):
     )
     with pytest.raises(ValueError, match="pages"):
         tiny.submit(Request(rid=2, tokens=np.zeros((8,), np.int32), max_new_tokens=9))
+
+
+# ---------------------------------------------------------------------------
+# serving fast path: speculative decoding, prefix sharing, fused chunked
+# prefill — each leg must reproduce the all-off engine's greedy tokens
+# bitwise (same jitted programs, same sampling order)
+# ---------------------------------------------------------------------------
+
+
+def _shared_prefix_reqs(cfg, n=6, sys_len=40, gen=10, seed=21):
+    """n requests sharing a system prompt, with short unique tails — the
+    workload prefix caching exists for.  Small-alphabet tails keep n-gram
+    speculation proposals plausible."""
+    rng = np.random.default_rng(seed)
+    sys_prompt = rng.integers(0, cfg.vocab_size, sys_len).astype(np.int32)
+    return [
+        Request(
+            rid=i,
+            tokens=np.concatenate(
+                [sys_prompt,
+                 rng.integers(0, 8, int(rng.integers(4, 10))).astype(np.int32)]
+            ),
+            max_new_tokens=gen,
+        )
+        for i in range(n)
+    ]
+
+
+def _run_fastpath(cfg, params, req_factory, **engine_kw):
+    kw = dict(num_slots=4, page_size=8, max_len=96)
+    kw.update(engine_kw)
+    eng = ContinuousBatchingEngine(cfg, params, **kw)
+    outs = eng.run(req_factory())
+    return {o.rid: o.tokens for o in outs}, eng
+
+
+@pytest.mark.serving_fastpath
+def test_speculative_decode_matches_baseline_bitwise(setup):
+    cfg, model, params = setup
+    factory = lambda: _shared_prefix_reqs(cfg)
+    base, _ = _run_fastpath(cfg, params, factory)
+    spec, eng = _run_fastpath(cfg, params, factory, spec_k=3)
+    assert base == spec  # greedy tokens identical, request by request
+    assert eng.counters["spec_proposed"] > 0
+    # accepted drafts are where the speedup comes from; with repetitive
+    # small-alphabet tails the n-gram proposer lands at least some
+    assert 0 <= eng.counters["spec_accepted"] <= eng.counters["spec_proposed"]
+
+
+@pytest.mark.serving_fastpath
+def test_prefix_sharing_matches_baseline_bitwise(setup):
+    cfg, model, params = setup
+    factory = lambda: _shared_prefix_reqs(cfg)
+    base, _ = _run_fastpath(cfg, params, factory)
+    shared, eng = _run_fastpath(cfg, params, factory, prefix_cache=True)
+    assert base == shared
+    # later requests hit the first request's registered system prompt
+    assert eng.counters["prefix_hits"] > 0
+    assert eng.counters["pages_shared"] > 0
+    # after every request finished, only the index keeps pages resident
+    assert len(eng.prefix) > 0
+    assert eng.alloc.pages_in_use() == len(eng.prefix.held_pages())
+
+
+@pytest.mark.serving_fastpath
+def test_mixed_step_prefill_matches_bucketed_bitwise(setup):
+    cfg, model, params = setup
+    factory = lambda: _shared_prefix_reqs(cfg)
+    base, _ = _run_fastpath(cfg, params, factory)
+    mixed, eng = _run_fastpath(cfg, params, factory, prefill_chunk=16)
+    assert base == mixed
+    assert eng.counters["prefill_chunks"] > 0
+
+
+@pytest.mark.serving_fastpath
+def test_all_fastpaths_on_matches_baseline_bitwise(setup):
+    cfg, model, params = setup
+    factory = lambda: _shared_prefix_reqs(cfg)
+    base, _ = _run_fastpath(cfg, params, factory)
+    fast, eng = _run_fastpath(
+        cfg, params, factory, spec_k=3, prefix_cache=True, prefill_chunk=16
+    )
+    assert base == fast
+    for k in ("spec_proposed", "prefix_hits", "pages_shared", "prefill_chunks"):
+        assert eng.counters[k] > 0, k
+
+
+@pytest.mark.serving_fastpath
+def test_fastpath_temperature_sampling_stays_in_vocab(setup):
+    """Sampled (temperature > 0) slots ride the fast path too — they just
+    skip speculation — and stay within the vocab."""
+    cfg, model, params = setup
+    eng = ContinuousBatchingEngine(
+        cfg, params, num_slots=2, page_size=8, max_len=64,
+        spec_k=3, prefix_cache=True, prefill_chunk=16,
+    )
+    outs = eng.run([
+        Request(rid=i, tokens=np.full((20,), i, np.int32), max_new_tokens=8,
+                temperature=0.9)
+        for i in range(3)
+    ])
+    assert sorted(o.rid for o in outs) == [0, 1, 2]
+    for o in outs:
+        assert len(o.tokens) == 8
+        assert max(o.tokens) < cfg.vocab_size and min(o.tokens) >= 0
+
+
+@pytest.mark.serving_fastpath
+def test_prefix_index_reclaims_under_pool_pressure(setup):
+    """Distinct prompts through a pool too small to keep every finished
+    prompt pinned: admission must evict LRU index entries (never pages a
+    live sequence holds) instead of wedging, and outputs stay bitwise
+    equal to the unshared engine."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(33)
+    prompts = [rng.integers(0, cfg.vocab_size, 17).astype(np.int32)
+               for _ in range(4)]
+    factory = lambda: [
+        Request(rid=i, tokens=p.copy(), max_new_tokens=6)
+        for i, p in enumerate(prompts)
+    ]
+    kw = dict(num_slots=2, page_size=8, max_len=32, num_pages=6)
+    base, _ = _run_fastpath(cfg, params, factory, **kw)
+    shared, eng = _run_fastpath(cfg, params, factory, prefix_cache=True, **kw)
+    assert base == shared
+    assert eng.prefix.evicted > 0  # pressure actually forced eviction
+
+
+@pytest.mark.serving_fastpath
+def test_fastpath_preemption_requeue_matches_baseline(setup):
+    """The preempt-and-requeue path (pool too small for both sequences)
+    under all three fast paths still reproduces baseline greedy tokens."""
+    cfg, model, params = setup
+    B, S, G = 2, 12, 8
+    prompt = jax.random.randint(jax.random.PRNGKey(6), (B, S), 0, cfg.vocab_size)
+    factory = lambda: [
+        Request(rid=i, tokens=np.asarray(prompt[i]), max_new_tokens=G)
+        for i in range(B)
+    ]
+    kw = dict(num_slots=2, page_size=8, max_len=32, num_pages=4)
+    base, _ = _run_fastpath(cfg, params, factory, **kw)
+    fast, eng = _run_fastpath(
+        cfg, params, factory, spec_k=2, prefix_cache=True, prefill_chunk=8, **kw
+    )
+    assert base == fast
+
+
+@pytest.mark.serving_fastpath
+def test_fastpath_config_validation(setup):
+    cfg, model, params = setup
+    with pytest.raises(ValueError):
+        ContinuousBatchingEngine(
+            cfg, params, num_slots=2, page_size=8, max_len=32, spec_k=-1
+        )
+    with pytest.raises(ValueError):
+        ContinuousBatchingEngine(
+            cfg, params, num_slots=2, page_size=8, max_len=32, prefill_chunk=-2
+        )
+    with pytest.raises(ValueError):
+        ContinuousBatchingEngine(
+            cfg, params, num_slots=2, page_size=8, max_len=32,
+            spec_k=2, spec_ngram=0,
+        )
